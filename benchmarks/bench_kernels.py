@@ -1,0 +1,61 @@
+"""Pallas kernel parity + dispatch-path timing.
+
+On this CPU container the Pallas kernels execute in interpret mode, so
+wall-clock numbers measure the jnp fallback / dispatch overhead only; the
+correctness deltas against ``ref.py`` are the meaningful output (the TPU
+timing story lives in EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import emit, timeit
+
+
+def main(G=512, ng=16, n=256, tau=0.3) -> None:
+    key = jax.random.PRNGKey(1)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    beta = jax.random.normal(k1, (G, ng), jnp.float32)
+    step = jnp.abs(jax.random.normal(k2, (G,), jnp.float32)) + 0.1
+    w = jnp.sqrt(jnp.full((G,), float(ng), jnp.float32))
+    Xt = jax.random.normal(k3, (G * ng, n), jnp.float32)  # (p, n) layout
+    theta = jax.random.normal(k4, (n,), jnp.float32)
+    lam = 0.7
+
+    # fused two-level prox
+    out = ops.sgl_prox(beta, step, w, tau=tau, lam=lam)
+    want = ref.sgl_prox_ref(beta, step, w, tau, lam)
+    err = float(jnp.max(jnp.abs(out - want)))
+    emit("kernels", f"sgl_prox_G{G}", "max_err", err)
+    emit("kernels", f"sgl_prox_G{G}", "us_per_call",
+         1e6 * timeit(lambda: ops.sgl_prox(beta, step, w, tau=tau, lam=lam)))
+
+    # fused screening scores
+    sc = ops.screening_scores(Xt, theta, tau=tau)
+    sc_ref = ref.screening_scores_ref(Xt, theta, tau)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(sc, sc_ref))
+    emit("kernels", f"screening_G{G}", "max_err", err)
+    emit("kernels", f"screening_G{G}", "us_per_call",
+         1e6 * timeit(lambda: ops.screening_scores(Xt, theta, tau=tau)))
+
+    # grouped dual-norm bisection
+    x = jax.random.normal(k1, (G, ng), jnp.float32)
+    alpha = jnp.full((G,), 0.6, jnp.float32)
+    R = jnp.full((G,), 0.8, jnp.float32)
+    nu = ops.dual_norm_groups(x, alpha, R)
+    nu_ref = jax.vmap(ref.dual_norm_ref)(x, alpha, R)
+    err = float(jnp.max(jnp.abs(nu - nu_ref)))
+    emit("kernels", f"dual_norm_G{G}", "max_err", err)
+    emit("kernels", f"dual_norm_G{G}", "us_per_call",
+         1e6 * timeit(lambda: ops.dual_norm_groups(x, alpha, R)))
+
+
+if __name__ == "__main__":
+    from .common import header
+
+    header()
+    main()

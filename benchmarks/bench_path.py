@@ -1,0 +1,50 @@
+"""Figure 3b: whole-path computation time on the climate-like dataset as a
+function of the prescribed duality-gap accuracy, GAP rule vs no screening.
+
+Paper: NCEP/NCAR Reanalysis 1, n=814, p=73577 (groups of 7 variables per
+grid point), delta=2.5, tau*=0.4.  The offline generator reproduces the
+group structure and preprocessing; the default grid is reduced so the
+harness completes in CPU-minutes (``--full`` restores 144x73).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import sgl
+from repro.core.path import lambda_grid, solve_path
+from repro.data.climate import make_climate_like
+
+from .common import emit
+
+
+def main(n=256, n_lon=16, n_lat=8, T=20, delta=2.5, tau=0.4,
+         tols=(1e-4, 1e-6, 1e-8), max_epochs=3000) -> None:
+    X, y, _, sizes = make_climate_like(n=n, n_lon=n_lon, n_lat=n_lat)
+    problem = sgl.make_problem(X, y, sizes, tau=tau)
+    lam_max = float(sgl.lambda_max(problem))
+    lambdas = lambda_grid(lam_max, T=T, delta=delta)
+
+    for rule in ("gap", "none"):
+        for tol in tols:
+            t0 = time.perf_counter()
+            res = solve_path(problem, lambdas=lambdas, tol=tol,
+                             max_epochs=max_epochs, rule=rule)
+            dt = time.perf_counter() - t0
+            case = f"{rule}_tol{tol:g}"
+            emit("path_fig3b", case, "path_seconds", dt)
+            emit("path_fig3b", case, "total_epochs", int(res.epochs.sum()))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from .common import header
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    header()
+    if args.full:
+        main(n=814, n_lon=144, n_lat=73, T=100)
+    else:
+        main()

@@ -1,0 +1,73 @@
+"""Figure 2c: time-to-convergence vs. prescribed duality-gap accuracy,
+for the five screening strategies (none / static / dynamic / DST3 / GAP).
+
+Paper setting: synthetic AR(1) design, n=100, p=10000 in 1000 groups of 10,
+rho=0.5, gamma1=10, gamma2=4, tau=0.2, lambda-path of T values.  The default
+here is a reduced instance so the whole harness runs in CPU-minutes; pass
+``--full`` for the paper's dimensions.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import sgl
+from repro.core.path import lambda_grid, solve_path
+from repro.data.synthetic import make_synthetic
+
+from .common import emit
+
+RULES = ("gap", "dynamic", "dst3", "static", "none")
+
+
+def run(n=100, p=2000, n_groups=200, T=20, delta=2.0,
+        tols=(1e-2, 1e-4, 1e-6, 1e-8), tau=0.2, max_epochs=3000) -> None:
+    X, y, _, sizes = make_synthetic(n=n, p=p, n_groups=n_groups)
+    problem = make_problem_cached(X, y, sizes, tau)
+    lam_max = float(sgl.lambda_max(problem))
+    lambdas = lambda_grid(lam_max, T=T, delta=delta)
+
+    for rule in RULES:
+        for tol in tols:
+            t0 = time.perf_counter()
+            res = solve_path(
+                problem, lambdas=lambdas, tol=tol,
+                max_epochs=max_epochs, rule=rule,
+            )
+            dt = time.perf_counter() - t0
+            case = f"{rule}_tol{tol:g}"
+            emit("screening_fig2c", case, "path_seconds", dt)
+            emit("screening_fig2c", case, "total_epochs", int(res.epochs.sum()))
+            emit("screening_fig2c", case, "max_final_gap", float(res.gaps.max()))
+
+
+_problem_cache = {}
+
+
+def make_problem_cached(X, y, sizes, tau):
+    key = (X.shape, float(tau))
+    if key not in _problem_cache:
+        _problem_cache[key] = sgl.make_problem(X, y, sizes, tau=tau)
+    return _problem_cache[key]
+
+
+def main(full: bool = False) -> None:
+    if full:
+        run(n=100, p=10_000, n_groups=1_000, T=100, delta=3.0)
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from .common import header
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper dimensions (n=100, p=10000, T=100)")
+    args = ap.parse_args()
+    header()
+    main(full=args.full)

@@ -1,0 +1,48 @@
+"""Shared helpers for the benchmark harness.
+
+Every benchmark emits rows through ``emit`` so ``benchmarks.run`` can
+aggregate a single CSV:  benchmark,case,metric,value
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+# The convex-optimization core targets the paper's 1e-8 duality-gap
+# tolerance, which needs f64 (same switch the tests flip in conftest.py).
+jax.config.update("jax_enable_x64", True)
+
+_ROWS: list[tuple[str, str, str, float]] = []
+
+
+def emit(bench: str, case: str, metric: str, value) -> None:
+    _ROWS.append((bench, case, metric, float(value)))
+    print(f"{bench},{case},{metric},{value}")
+
+
+def rows():
+    return list(_ROWS)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, repeat: int = 3) -> float:
+    """Median wall-clock seconds for ``fn(*args)`` (blocks on jax arrays)."""
+    def run():
+        out = fn(*args)
+        jax.block_until_ready(out)
+        return out
+
+    for _ in range(warmup):
+        run()
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        run()
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def header() -> None:
+    print("benchmark,case,metric,value")

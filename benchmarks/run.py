@@ -1,0 +1,62 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # reduced sizes
+    PYTHONPATH=src python -m benchmarks.run --full     # paper dimensions
+
+Emits a consolidated CSV (benchmark,case,metric,value) on stdout and writes
+it to artifacts/bench_results.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+from .common import header, rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale dimensions (slow on CPU)")
+    ap.add_argument("--only", nargs="*",
+                    choices=["dual_norm", "screening", "active_sets",
+                             "path", "kernels"],
+                    help="run a subset")
+    args = ap.parse_args()
+    only = set(args.only or
+               ["dual_norm", "screening", "active_sets", "path", "kernels"])
+
+    header()
+    t0 = time.time()
+
+    if "dual_norm" in only:
+        from . import bench_dual_norm
+        bench_dual_norm.main()
+    if "kernels" in only:
+        from . import bench_kernels
+        bench_kernels.main()
+    if "active_sets" in only:
+        from . import bench_active_sets
+        bench_active_sets.main()
+    if "screening" in only:
+        from . import bench_screening
+        bench_screening.main(full=args.full)
+    if "path" in only:
+        from . import bench_path
+        if args.full:
+            bench_path.main(n=814, n_lon=144, n_lat=73, T=100)
+        else:
+            bench_path.main()
+
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/bench_results.csv", "w") as f:
+        f.write("benchmark,case,metric,value\n")
+        for b, c, m, v in rows():
+            f.write(f"{b},{c},{m},{v}\n")
+    print(f"# total {time.time() - t0:.1f}s; "
+          f"wrote artifacts/bench_results.csv ({len(rows())} rows)")
+
+
+if __name__ == "__main__":
+    main()

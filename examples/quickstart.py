@@ -1,0 +1,58 @@
+"""Quickstart: solve one Sparse-Group Lasso instance with GAP safe screening.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Reproduces the paper's core loop on a small synthetic instance: builds the
+problem, computes lambda_max via the epsilon-norm trick (Eq. 22), solves at
+lambda = lambda_max / 20 with Algorithm 2 (ISTA-BC + GAP safe rules), and
+reports the duality gap, the screening statistics, and support recovery.
+"""
+import os
+
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+import numpy as np
+
+from repro.core import make_problem, lambda_max, solve
+from repro.data.synthetic import make_synthetic
+
+
+def main():
+    X, y, beta_true, sizes = make_synthetic(
+        n=100, p=1000, n_groups=100, gamma1=5, gamma2=4, seed=0
+    )
+    problem = make_problem(X, y, sizes, tau=0.2)
+
+    lam_max = float(lambda_max(problem))
+    lam = lam_max / 20.0
+    print(f"lambda_max = {lam_max:.4f}  (Eq. 22, epsilon-norm Algorithm 1)")
+    print(f"solving at lambda = lambda_max/20 = {lam:.4f}, tol = 1e-8")
+
+    res = solve(problem, lam, tol=1e-8, rule="gap")
+
+    G, ng = problem.G, problem.ng
+    beta = np.asarray(res.beta).reshape(-1)
+    true_groups = {
+        g for g in range(G) if np.any(beta_true[g * ng:(g + 1) * ng] != 0)
+    }
+    found_groups = {
+        g for g in range(G) if np.any(np.abs(beta[g * ng:(g + 1) * ng]) > 1e-10)
+    }
+
+    print(f"\nconverged: duality gap = {float(res.gap):.3e} "
+          f"after {res.n_epochs} BCD epochs")
+    print(f"active groups at solution: {int(res.group_active.sum())}/{G} "
+          f"(GAP rule screened out {G - int(res.group_active.sum())})")
+    print(f"active features: {int(res.feat_active.sum())}/{G * ng}")
+    print(f"true support: {sorted(true_groups)}")
+    print(f"recovered   : {sorted(found_groups)}")
+
+    # GAP screening is SAFE: no group with a nonzero optimal coefficient
+    # may ever be screened out.
+    for g in found_groups:
+        assert res.group_active[g], f"unsafe screen of group {g}!"
+    print("\nsafety check passed: every nonzero group survived screening")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""codeqwen1.5-7b — dense, qwen1.5 arch (MHA kv=heads, QKV bias).
+[hf:Qwen/CodeQwen1.5-7B; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="codeqwen1.5-7b",
+    family="dense",
+    n_layers=32,
+    d_model=4_096,
+    n_heads=32,
+    n_kv=32,
+    d_ff=13_440,
+    vocab=92_416,
+    qkv_bias=True,
+    subquadratic=False,
+    notes="qwen1.5 arch: full MHA (kv=32), QKV bias",
+)

@@ -1,0 +1,15 @@
+"""llama3-405b — dense GQA, 128k vocab. [arXiv:2407.21783; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3-405b",
+    family="dense",
+    n_layers=126,
+    d_model=16_384,
+    n_heads=128,
+    n_kv=8,
+    d_ff=53_248,
+    vocab=128_256,
+    subquadratic=False,
+    notes="GQA kv=8, 128k vocab",
+)

@@ -1,0 +1,18 @@
+"""llava-next-mistral-7b — mistral-7b backbone; anyres vision frontend is a
+STUB (precomputed patch embeddings). [hf:llava-hf/llava-v1.6-mistral-7b-hf;
+unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4_096,
+    n_heads=32,
+    n_kv=8,
+    d_ff=14_336,
+    vocab=32_000,
+    frontend_tokens=2_880,   # anyres tiling: up to 5 tiles x 576 patches
+    subquadratic=False,
+    notes="mistral-7b backbone; patch embeddings precomputed (anyres stub)",
+)

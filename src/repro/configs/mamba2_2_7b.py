@@ -1,0 +1,21 @@
+"""mamba2-2.7b — attention-free SSD (state-space duality).
+[arXiv:2405.21060; unverified]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2_560,
+    n_heads=0,
+    n_kv=0,
+    d_ff=0,
+    vocab=50_280,
+    ssm_state=128,
+    ssm_heads=80,      # d_inner = 2*d_model = 5120, head_dim 64
+    ssm_head_dim=64,
+    ssm_chunk=128,   # VMEM/HBM-friendly chunk (see EXPERIMENTS.md §Perf)
+    conv_width=4,
+    subquadratic=True,
+    notes="SSD recurrence, d_inner=2*d_model, 80 heads x 64, N=128",
+)

@@ -1,0 +1,18 @@
+"""mixtral-8x7b — MoE 8 experts top-2 with sliding-window attention.
+[arXiv:2401.04088; hf]"""
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4_096,
+    n_heads=32,
+    n_kv=8,
+    d_ff=14_336,
+    vocab=32_000,
+    window=4_096,               # SWA -> rolling KV cache, subquadratic
+    moe=MoEConfig(n_experts=8, top_k=2),
+    subquadratic=True,
+    notes="8 experts top-2, sliding-window attention (rolling cache)",
+)

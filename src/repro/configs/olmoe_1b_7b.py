@@ -1,0 +1,16 @@
+"""olmoe-1b-7b — MoE, 64 experts top-8. [arXiv:2409.02060; hf]"""
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b",
+    family="moe",
+    n_layers=16,
+    d_model=2_048,
+    n_heads=16,
+    n_kv=16,
+    d_ff=1_024,
+    vocab=50_304,
+    moe=MoEConfig(n_experts=64, top_k=8),
+    subquadratic=False,
+    notes="64 experts, top-8, d_ff(expert)=1024",
+)

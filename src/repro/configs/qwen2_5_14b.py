@@ -1,0 +1,16 @@
+"""qwen2.5-14b — dense GQA decoder, QKV bias. [hf:Qwen/Qwen2.5-0.5B; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    n_layers=48,
+    d_model=5_120,
+    n_heads=40,
+    n_kv=8,
+    d_ff=13_824,
+    vocab=152_064,
+    qkv_bias=True,
+    subquadratic=False,
+    notes="GQA kv=8, QKV bias",
+)

@@ -1,0 +1,17 @@
+"""qwen3-8b — dense GQA with qk-norm. [hf:Qwen/Qwen3-8B; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4_096,
+    n_heads=32,
+    n_kv=8,
+    d_ff=12_288,
+    vocab=151_936,
+    head_dim=128,
+    qk_norm=True,
+    subquadratic=False,
+    notes="qk_norm, GQA kv=8",
+)

@@ -1,0 +1,20 @@
+"""recurrentgemma-2b — RG-LRU + local attention, 1 attn : 2 recurrent.
+[arXiv:2402.19427; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,   # 26 residual blocks in pattern (rec, rec, attn) truncated
+    d_model=2_560,
+    n_heads=10,
+    n_kv=1,
+    d_ff=7_680,
+    vocab=256_000,
+    window=2_048,               # local attention window
+    hybrid_pattern=("rec", "rec", "attn"),
+    ssm_state=0,                # RG-LRU state == d_rnn (handled in model)
+    conv_width=4,
+    subquadratic=True,          # linear recurrence + windowed attention
+    notes="RG-LRU + local MQA (kv=1), 1:2 pattern",
+)

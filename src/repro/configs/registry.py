@@ -1,0 +1,43 @@
+"""Architecture registry: --arch <id> resolution."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "qwen2.5-14b",
+    "codeqwen1.5-7b",
+    "qwen3-8b",
+    "llama3-405b",
+    "recurrentgemma-2b",
+    "olmoe-1b-7b",
+    "mixtral-8x7b",
+    "mamba2-2.7b",
+    "seamless-m4t-large-v2",
+    "llava-next-mistral-7b",
+    "sgl-paper",
+]
+
+_MODULES = {
+    "qwen2.5-14b": "qwen2_5_14b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "qwen3-8b": "qwen3_8b",
+    "llama3-405b": "llama3_405b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "sgl-paper": "sgl_paper",
+}
+
+
+def get(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def list_archs():
+    return list(ARCH_IDS)

@@ -1,0 +1,18 @@
+"""seamless-m4t-large-v2 — encoder-decoder multimodal backbone; modality
+frontend is a STUB (precomputed frame embeddings). [arXiv:2308.11596; hf]"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,          # decoder layers
+    n_enc_layers=24,      # encoder layers
+    d_model=1_024,
+    n_heads=16,
+    n_kv=16,
+    d_ff=8_192,
+    vocab=256_206,
+    frontend_tokens=1_024,   # stub audio frame embeddings fed to encoder
+    subquadratic=False,
+    notes="enc-dec; audio frontend stubbed as precomputed frame embeddings",
+)

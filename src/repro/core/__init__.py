@@ -1,0 +1,47 @@
+"""Core library: the paper's contribution (GAP safe screening for SGL)."""
+from .epsilon_norm import (
+    epsilon_decomposition,
+    epsilon_norm,
+    epsilon_norm_dual,
+    lam,
+    lam_bisect,
+)
+from .sgl import (
+    SGLProblem,
+    dual,
+    flatten,
+    dual_scale,
+    duality_gap,
+    group_soft_threshold,
+    lambda_max,
+    make_problem,
+    primal,
+    sgl_dual_norm,
+    sgl_norm,
+    sgl_prox,
+    soft_threshold,
+)
+from .screening import (
+    ScreenResult,
+    Sphere,
+    dst3_sphere,
+    dynamic_sphere,
+    gap_sphere,
+    screen,
+    static_sphere,
+)
+from .solver import SolveResult, bcd_epochs, solve
+from .elastic import make_elastic_problem, elastic_objective
+from .path import PathResult, lambda_grid, solve_path
+
+__all__ = [
+    "SGLProblem", "make_problem", "solve", "solve_path", "lambda_grid",
+    "lambda_max", "dual_scale", "duality_gap", "primal", "dual",
+    "sgl_norm", "sgl_dual_norm", "sgl_prox", "soft_threshold",
+    "group_soft_threshold", "epsilon_norm", "epsilon_norm_dual",
+    "epsilon_decomposition", "lam", "lam_bisect",
+    "Sphere", "ScreenResult", "gap_sphere", "static_sphere",
+    "dynamic_sphere", "dst3_sphere", "screen",
+    "SolveResult", "PathResult", "bcd_epochs",
+    "make_elastic_problem", "elastic_objective", "flatten",
+]

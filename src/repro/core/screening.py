@@ -1,0 +1,147 @@
+"""Safe screening rules for the Sparse-Group Lasso (paper Section 4 + App. C).
+
+A *safe sphere* B(theta_c, r) is any ball guaranteed to contain the dual
+optimum theta_hat.  Given one, Theorem 1 gives the two-level tests:
+
+group level:    T_g < (1 - tau) w_g             =>  beta_g = 0
+   T_g = ||S_tau(X_g^T theta_c)|| + r ||X_g||_2     if ||X_g^T theta_c||_inf > tau
+       = (||X_g^T theta_c||_inf + r ||X_g||_2 - tau)_+   otherwise
+feature level:  |X_j^T theta_c| + r ||X_j|| < tau  =>  beta_j = 0
+
+Spheres implemented (paper Section 7.1):
+* GAP        — B(theta, sqrt(2 gap / lambda^2))        [this paper, Thm 2]
+* static     — B(y/lambda, ||y/lambda_max - y/lambda||) [El Ghaoui et al. 12]
+* dynamic    — B(y/lambda, ||theta_k - y/lambda||)      [Bonnefoy et al. 14]
+* DST3       — sphere refined by the most-correlated-group hyperplane
+               [Xiang 11 / Bonnefoy 14, extended to SGL in App. C]
+
+All tests operate on the grouped layout of :mod:`repro.core.sgl` and return a
+:class:`ScreenResult` with boolean *active* masks (True = keep).  Safety means
+a screened-out (False) variable is *provably* zero at the optimum.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import sgl
+from .epsilon_norm import epsilon_norm, epsilon_norm_dual
+from .sgl import SGLProblem, soft_threshold
+
+__all__ = [
+    "ScreenResult",
+    "Sphere",
+    "gap_sphere",
+    "static_sphere",
+    "dynamic_sphere",
+    "dst3_sphere",
+    "screen",
+    "screen_with_corr",
+]
+
+
+class Sphere(NamedTuple):
+    center: jax.Array  # (n,)
+    radius: jax.Array  # scalar
+
+
+class ScreenResult(NamedTuple):
+    group_active: jax.Array  # (G,) bool
+    feat_active: jax.Array   # (G, ng) bool — False => provably zero
+    sphere: Sphere
+
+
+# ----------------------------------------------------------------------------
+# Safe spheres
+# ----------------------------------------------------------------------------
+
+def gap_sphere(
+    problem: SGLProblem, beta: jax.Array, theta: jax.Array, lam_
+) -> Sphere:
+    """GAP safe sphere (Theorem 2): r = sqrt(2 (P - D) / lambda^2)."""
+    gap = jnp.maximum(sgl.duality_gap(problem, beta, theta, lam_), 0.0)
+    return Sphere(theta, jnp.sqrt(2.0 * gap) / lam_)
+
+
+def static_sphere(problem: SGLProblem, lam_, lam_max) -> Sphere:
+    center = problem.y / lam_
+    radius = jnp.linalg.norm(problem.y / lam_max - problem.y / lam_)
+    return Sphere(center, radius)
+
+
+def dynamic_sphere(problem: SGLProblem, theta_k: jax.Array, lam_) -> Sphere:
+    center = problem.y / lam_
+    radius = jnp.linalg.norm(theta_k - center)
+    return Sphere(center, radius)
+
+
+def dst3_sphere(
+    problem: SGLProblem, theta_k: jax.Array, lam_, lam_max
+) -> Sphere:
+    """DST3 sphere (paper App. C, Prop. 11), extended to the SGL.
+
+    Uses the hyperplane supporting the dual feasible set at y/lambda_max,
+    normal to the gradient of the eps-norm of the most-correlated group.
+    """
+    y, tau, w = problem.y, problem.tau, problem.w
+    corr = jnp.einsum("ngk,n->gk", problem.X, y)  # X^T y, grouped
+    eps = sgl.epsilons(tau, w)
+    scale = sgl.group_weight_total(tau, w)
+    per_group = epsilon_norm(corr, eps) / scale
+    g_star = jnp.argmax(per_group)
+
+    xg = jnp.take(corr, g_star, axis=0) / lam_max       # X_{g*}^T y / lam_max
+    eps_s = jnp.take(eps, g_star)
+    nu = epsilon_norm(xg, eps_s)
+    xi_star = soft_threshold(xg, (1.0 - eps_s) * nu)    # eps-part of gradient
+    denom = epsilon_norm_dual(xi_star, eps_s)
+    Xg_star = jnp.take(problem.X, g_star, axis=1)       # (n, ng)
+    eta = Xg_star @ xi_star / jnp.maximum(denom, 1e-30)
+
+    c_level = jnp.take(scale, g_star)                    # tau + (1-tau) w_{g*}
+    yl = y / lam_
+    shift = (jnp.dot(eta, y) / lam_ - c_level) / jnp.maximum(
+        jnp.dot(eta, eta), 1e-30
+    )
+    theta_c = yl - shift * eta
+    r2 = jnp.sum((yl - theta_k) ** 2) - jnp.sum((yl - theta_c) ** 2)
+    return Sphere(theta_c, jnp.sqrt(jnp.maximum(r2, 0.0)))
+
+
+# ----------------------------------------------------------------------------
+# Screening tests (Theorem 1)
+# ----------------------------------------------------------------------------
+
+def screen_with_corr(
+    problem: SGLProblem, sphere: Sphere, corr: jax.Array
+) -> ScreenResult:
+    """Theorem 1 tests given precomputed correlations corr = X^T theta_c
+    in grouped layout (G, ng)."""
+    tau, w = problem.tau, problem.w
+    r = sphere.radius
+
+    ste = soft_threshold(corr, tau)
+    st_norm = jnp.linalg.norm(ste, axis=-1)                     # ||S_tau(.)||
+    inf_norm = jnp.max(jnp.abs(jnp.where(problem.feat_mask, corr, 0.0)), axis=-1)
+
+    Tg_out = st_norm + r * problem.Xnorm_grp
+    Tg_in = jnp.maximum(inf_norm + r * problem.Xnorm_grp - tau, 0.0)
+    Tg = jnp.where(inf_norm > tau, Tg_out, Tg_in)
+    group_active = Tg >= (1.0 - tau) * w                        # keep if test fails
+
+    feat_bound = jnp.abs(corr) + r * problem.Xnorm_col
+    feat_active = feat_bound >= tau
+
+    # Feature-level screening only has bite for tau > 0; for tau == 0 the
+    # test |.| < 0 never fires, which the >= comparison already encodes.
+    # Screened groups wipe all their features; padding is always inactive.
+    feat_active = feat_active & group_active[:, None] & problem.feat_mask
+    group_active = group_active & jnp.any(problem.feat_mask, axis=-1)
+    return ScreenResult(group_active, feat_active, sphere)
+
+
+def screen(problem: SGLProblem, sphere: Sphere) -> ScreenResult:
+    corr = jnp.einsum("ngk,n->gk", problem.X, sphere.center)
+    return screen_with_corr(problem, sphere, corr)

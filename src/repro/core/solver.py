@@ -1,0 +1,338 @@
+"""ISTA-BC (block coordinate descent) with dynamic safe screening — Algorithm 2.
+
+Faithful reproduction of the paper's solver:
+
+* cyclic block coordinate descent over *active* groups, block Lipschitz
+  steps  L_g = ||X_g||_2^2, two-level prox (soft-threshold then group
+  soft-threshold),
+* duality gap computed every ``f_ce`` passes (paper: f_ce = 10), giving the
+  dual feasible point via residual rescaling (Eq. 15) and the GAP safe
+  sphere (Thm 2), from which groups/features are screened (Thm 1),
+* alternative spheres (static / dynamic / DST3 / none) for the paper's
+  comparison experiments (Fig. 2c).
+
+TPU/XLA adaptation (see DESIGN.md §3): screened variables are removed by
+**gathering the surviving groups into a dense buffer padded to power-of-two
+buckets**, so the inner jitted BCD epochs only touch active data; XLA
+recompiles at most log2(G) times and the compile cache is shared across the
+lambda path.  Screening certificates are permanent (safe), so active sets
+shrink monotonically.  The full-matrix correlation X^T theta needed for the
+gap/screening round is kept on the *full* problem, exactly as in the paper
+(that cost is amortised by f_ce).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import screening as scr
+from . import sgl
+from .sgl import SGLProblem
+
+__all__ = ["SolveResult", "solve", "bcd_epochs"]
+
+
+class SolveResult(NamedTuple):
+    beta: jax.Array            # (G, ng) grouped coefficients
+    theta: jax.Array           # (n,) dual feasible point
+    gap: jax.Array             # final duality gap
+    n_epochs: int              # BCD passes performed
+    group_active: np.ndarray   # (G,) final active mask
+    feat_active: np.ndarray    # (G, ng) final active mask
+    gap_history: list
+    active_history: list       # [(epoch, n_groups_active, n_feats_active)]
+
+
+# ----------------------------------------------------------------------------
+# Inner jitted BCD epochs over a compacted active buffer
+# ----------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("n_epochs",), donate_argnums=(4, 5))
+def bcd_epochs(
+    Xt: jax.Array,         # (Gb, n, ng) compacted design (group-major)
+    Lg: jax.Array,         # (Gb,)
+    w: jax.Array,          # (Gb,)
+    feat_mask: jax.Array,  # (Gb, ng) float mask (0 also encodes screened feats)
+    beta: jax.Array,       # (Gb, ng)
+    resid: jax.Array,      # (n,)
+    tau: jax.Array,
+    lam_: jax.Array,
+    n_epochs: int,
+):
+    """Run ``n_epochs`` cyclic BCD passes, carrying the residual.
+
+    Update for group g (paper Section 6):
+        z      = beta_g + X_g^T resid / L_g            (gradient step)
+        z      = S_{tau lam / L_g}(z)                  (feature prox)
+        beta_g = S^gp_{(1-tau) w_g lam / L_g}(z)       (group prox)
+        resid += X_g (beta_g_old - beta_g_new)
+    Inactive (padded / screened) groups have feat_mask == 0 and Lg <= 0 and
+    are skipped via masking.
+    """
+    live = (Lg > 0).astype(beta.dtype)                # (Gb,)
+    safe_L = jnp.where(Lg > 0, Lg, 1.0)
+    step = lam_ / safe_L                              # alpha_g = lam / L_g
+    thr1 = tau * step                                 # (Gb,)
+    thr2 = (1.0 - tau) * w * step                     # (Gb,)
+
+    def group_update(resid, inputs):
+        Xg, bg, L, t1, t2, m, lv = inputs
+        grad_step = (Xg.T @ resid) / L                # (ng,)
+        z = (bg + grad_step) * m
+        z = jnp.sign(z) * jnp.maximum(jnp.abs(z) - t1, 0.0)
+        nrm = jnp.linalg.norm(z)
+        z = jnp.maximum(1.0 - t2 / jnp.maximum(nrm, 1e-30), 0.0) * z
+        new_bg = jnp.where(lv > 0, z, bg)
+        resid = resid + Xg @ (bg - new_bg)
+        return resid, new_bg
+
+    def epoch(carry, _):
+        beta, resid = carry
+        resid, beta = jax.lax.scan(
+            group_update, resid, (Xt, beta, safe_L, thr1, thr2, feat_mask, live)
+        )
+        return (beta, resid), None
+
+    (beta, resid), _ = jax.lax.scan(epoch, (beta, resid), None, length=n_epochs)
+    return beta, resid
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _full_corr(X: jax.Array, v: jax.Array) -> jax.Array:
+    return jnp.einsum("ngk,n->gk", X, v)
+
+
+@functools.partial(jax.jit, static_argnames=("rule",))
+def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
+                  lam_max: jax.Array, rule: str):
+    """One fused gap + screening round (single XLA program).
+
+    The eager version of this round cost ~50 small dispatches; fusing it is
+    what makes screening overhead negligible per round (see EXPERIMENTS.md
+    §Perf, solver iteration 1).  Returns (gap, theta, group_act, feat_act);
+    for rules that do not screen dynamically the masks are all-true.
+    """
+    resid = problem.y - jnp.einsum("ngk,gk->n", problem.X, beta)
+    corr = jnp.einsum("ngk,n->gk", problem.X, resid)
+    dual_norm = sgl.sgl_dual_norm(corr, problem.tau, problem.w)
+    scale = jnp.maximum(lam_, dual_norm)
+    theta = resid / scale
+    gap = sgl.duality_gap(problem, beta, theta, lam_)
+
+    if rule == "gap":
+        sphere = scr.Sphere(
+            theta, jnp.sqrt(2.0 * jnp.maximum(gap, 0.0)) / lam_
+        )
+        res = scr.screen_with_corr(problem, sphere, corr / scale)
+    elif rule == "dynamic":
+        res = scr.screen(problem, scr.dynamic_sphere(problem, theta, lam_))
+    elif rule == "dst3":
+        res = scr.screen(
+            problem, scr.dst3_sphere(problem, theta, lam_, lam_max)
+        )
+    else:  # "none" / "static" — no dynamic screening
+        res = scr.ScreenResult(
+            jnp.ones((problem.G,), bool),
+            jnp.asarray(problem.feat_mask),
+            scr.Sphere(theta, jnp.inf),
+        )
+    return gap, theta, res.group_active, res.feat_active
+
+
+def _bucket(n: int, minimum: int = 8) -> int:
+    b = minimum
+    while b < n:
+        b *= 2
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("f_ce", "k_rounds"))
+def _inner_rounds(Xt, Lg, w, y, beta, feat_active, take, gmask, tau, lam_,
+                  tol, f_ce, k_rounds):
+    """Up to ``k_rounds`` blocks of ``f_ce`` BCD epochs in ONE jitted call.
+
+    Between blocks the *reduced-problem* duality gap (dual norm over the
+    compacted buffer only) is checked for early exit.  This gap is exact
+    for the reduced problem but may under-estimate the full certified gap,
+    so it is used ONLY as a work heuristic — the caller always recomputes
+    the full-problem gap (paper Eq. 15/Thm 2) before stopping or screening.
+    Amortises the full X^T rho correlation and the host sync over
+    ~k_rounds x f_ce epochs instead of f_ce (see EXPERIMENTS.md §Perf).
+
+    ``take`` may contain padded slots aliasing group 0; the scatter uses a
+    masked *delta* with .add so duplicate indices contribute zero and the
+    real group-0 row is preserved.
+    """
+    dtype = beta.dtype
+    fmask = (jnp.take(feat_active, take, axis=0).astype(dtype)
+             * gmask[:, None])
+    bsub0 = jnp.take(beta, take, axis=0) * fmask
+    resid0 = y - jnp.einsum("gnk,gk->n", Xt, bsub0)
+    y2half = 0.5 * jnp.sum(y * y)
+
+    def reduced_gap(bsub, resid):
+        corr = jnp.einsum("gnk,n->gk", Xt, resid) * fmask
+        dn = sgl.sgl_dual_norm(corr, tau, w)
+        theta = resid / jnp.maximum(lam_, dn)
+        primal = (0.5 * jnp.sum(resid * resid)
+                  + lam_ * sgl.sgl_norm(bsub, tau, w))
+        diff = theta - y / lam_
+        dual = y2half - 0.5 * lam_ * lam_ * jnp.sum(diff * diff)
+        return primal - dual
+
+    def cond(c):
+        bsub, resid, k, gap = c
+        return (k < k_rounds) & (gap > tol)
+
+    def body(c):
+        bsub, resid, k, gap = c
+        bsub, resid = bcd_epochs(
+            Xt, Lg * gmask, w, fmask, bsub, resid, tau, lam_, f_ce
+        )
+        return bsub, resid, k + 1, reduced_gap(bsub, resid)
+
+    bsub, resid, k, gap = jax.lax.while_loop(
+        cond, body, (bsub0, resid0, jnp.zeros((), jnp.int32),
+                     jnp.asarray(jnp.inf, dtype))
+    )
+    delta = (bsub - bsub0) * fmask
+    return beta.at[take].add(delta), k, gap
+
+
+def _gather_static(problem: SGLProblem, group_active):
+    """Gather the active groups' design slices into a power-of-two padded
+    buffer.  Depends only on the active-group set, so ``solve`` caches the
+    result between rounds (the (n x p_active) copy of X is the expensive
+    part); per-round masks are applied by the caller.
+
+    Masked/padded groups are *not* zeroed in Xt: ``bcd_epochs`` masks their
+    updates (feat_mask, live) so their columns never contribute.
+    """
+    idx = np.nonzero(np.asarray(group_active))[0]
+    Gb = _bucket(max(len(idx), 1))
+    pad = Gb - len(idx)
+    take = np.concatenate([idx, np.zeros(pad, np.int64)])
+    gmask = np.concatenate([np.ones(len(idx)), np.zeros(pad)])
+
+    take_j = jnp.asarray(take)
+    Xt = jnp.transpose(jnp.take(problem.X, take_j, axis=1), (1, 0, 2))
+    Lg = jnp.take(problem.Lg, take_j)
+    w = jnp.take(problem.w, take_j)
+    gmask_j = jnp.asarray(gmask, problem.X.dtype)
+    return idx, take_j, Xt, Lg, w, gmask_j
+
+
+# ----------------------------------------------------------------------------
+# Outer driver
+# ----------------------------------------------------------------------------
+
+def solve(
+    problem: SGLProblem,
+    lam_: float,
+    beta0: Optional[jax.Array] = None,
+    tol: float = 1e-8,
+    max_epochs: int = 10_000,
+    f_ce: int = 10,
+    rule: str = "gap",
+    lam_max: Optional[float] = None,
+    compact: bool = True,
+    inner_rounds: int = 5,
+) -> SolveResult:
+    """Solve one SGL instance at regularisation ``lam_``.
+
+    rule in {"gap", "static", "dynamic", "dst3", "none"}.
+    ``tol`` is the duality-gap stopping threshold (paper uses 1e-8).
+    ``inner_rounds``: how many f_ce-epoch blocks run inside one jitted
+    call between certified (full-problem) gap/screening rounds; the inner
+    early-exit uses the reduced-problem gap, so safety is unaffected.
+    """
+    G, ng = problem.G, problem.ng
+    dtype = problem.X.dtype
+    beta = jnp.zeros((G, ng), dtype) if beta0 is None else jnp.asarray(beta0, dtype)
+    lam_j = jnp.asarray(lam_, dtype)
+
+    if lam_max is None and rule in ("static", "dst3"):
+        lam_max = float(sgl.lambda_max(problem))
+
+    group_active = np.array(jnp.any(problem.feat_mask, axis=-1))
+    feat_active = np.array(problem.feat_mask)
+
+    # Static rule screens once, up front.
+    if rule == "static":
+        sphere = scr.static_sphere(problem, lam_j, jnp.asarray(lam_max, dtype))
+        res = scr.screen(problem, sphere)
+        group_active &= np.asarray(res.group_active)
+        feat_active &= np.asarray(res.feat_active)
+        beta = beta * jnp.asarray(feat_active, dtype)
+
+    gap_history: list = []
+    active_history: list = []
+    epochs_done = 0
+    theta = problem.y / jnp.maximum(lam_j, sgl.lambda_max(problem))
+    gap = jnp.inf
+
+    # Gather cache: the (n x p_active) copy of X is only re-made when the
+    # active-group set actually changes (it shrinks monotonically, so this
+    # amortises to a handful of gathers per lambda).
+    gather_key = None
+    gather_val = None
+
+    while epochs_done < max_epochs:
+        # ---- fused gap + screening round (one XLA program; paper does this
+        # every f_ce passes on the full problem) ----
+        lam_max_j = jnp.asarray(lam_max if lam_max is not None else 0.0, dtype)
+        gap, theta, g_act, f_act = _screen_round(
+            problem, beta, lam_j, lam_max_j, rule
+        )
+        gap_history.append((epochs_done, float(gap)))
+
+        if float(gap) <= tol:
+            break
+
+        if rule in ("gap", "dynamic", "dst3"):
+            group_active &= np.asarray(g_act)
+            feat_active &= np.asarray(f_act)
+            feat_active &= group_active[:, None]
+            beta = beta * jnp.asarray(feat_active, dtype)
+
+        active_history.append(
+            (epochs_done, int(group_active.sum()), int(feat_active.sum()))
+        )
+
+        # ---- up to inner_rounds x f_ce BCD epochs in one jitted call ----
+        if compact:
+            key = group_active.tobytes()
+            if key != gather_key:
+                gather_val = _gather_static(problem, group_active)
+                gather_key = key
+            idx, take, Xt, Lg, w, gmask = gather_val
+            beta, k_done, _ = _inner_rounds(
+                Xt, Lg, w, problem.y, beta, jnp.asarray(feat_active),
+                take, gmask, problem.tau, lam_j, jnp.asarray(tol, dtype),
+                f_ce, inner_rounds
+            )
+            epochs_done += f_ce * (int(k_done) - 1)  # +f_ce added below
+        else:
+            Xt = jnp.transpose(problem.X, (1, 0, 2))
+            fmask = jnp.asarray(feat_active, dtype)
+            Lg = problem.Lg * jnp.asarray(group_active, dtype)
+            resid = problem.y - jnp.einsum("gnk,gk->n", Xt, beta)
+            beta, resid = bcd_epochs(
+                Xt, Lg, problem.w, fmask, beta, resid, problem.tau, lam_j, f_ce
+            )
+        epochs_done += f_ce
+
+    return SolveResult(
+        beta=beta,
+        theta=theta,
+        gap=gap,
+        n_epochs=epochs_done,
+        group_active=group_active,
+        feat_active=feat_active,
+        gap_history=gap_history,
+        active_history=active_history,
+    )

@@ -1,0 +1,4 @@
+from .synthetic import make_synthetic
+from .climate import make_climate_like
+
+__all__ = ["make_synthetic", "make_climate_like"]

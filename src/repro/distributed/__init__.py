@@ -1,0 +1,3 @@
+from . import compression, sharding, solver_dist
+
+__all__ = ["compression", "sharding", "solver_dist"]

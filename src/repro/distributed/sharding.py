@@ -1,0 +1,32 @@
+"""Sharding layout for the distributed SGL solver.
+
+The design matrix X (n, G, ng) shards rows over "data" (and "pod") and
+feature groups over "model":
+
+    X     : P(dp, "model", None)
+    y     : P(dp)                  (row shard)
+    beta  : P("model", None)       (group shard, replicated over data)
+    resid : P(dp)
+
+Per FISTA step each device holds an (n_loc, G_loc, ng) block; the gradient
+X^T resid needs only a psum over the data axis; the dual-norm max is a
+collective max of one scalar per model shard; the residual update psums the
+partial products over the model axis.  Screening is local per group shard.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def sgl_specs(multi_pod: bool = False):
+    dp = ("pod", "data") if multi_pod else "data"
+    return {
+        "X": P(dp, "model", None),
+        "y": P(dp),
+        "beta": P("model", None),
+        "w": P("model"),
+        "Lg": P("model"),
+        "feat_mask": P("model", None),
+        "resid": P(dp),
+    }

@@ -1,0 +1,20 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Three kernels (each `<name>.py` + dispatch in `ops.py` + oracle in `ref.py`):
+
+* ``sgl_prox``         -- fused two-level proximal operator (soft-threshold +
+                         group soft-threshold) over (G, ng) coefficient tiles.
+                         Runs every solver step on the full coefficient block.
+* ``dual_norm``        -- per-group epsilon-norm Lambda(x, alpha, R) by
+                         fixed-iteration bisection; no sort, pure VPU work.
+* ``screening_scores`` -- fused correlation matvec X^T theta with the
+                         soft-thresholded square needed by the Theorem-1
+                         tests, accumulated in VMEM so the correlation vector
+                         never round-trips through HBM before thresholding.
+
+On CPU (this container) they execute with ``interpret=True`` and are validated
+against the ``ref.py`` pure-jnp oracles; on TPU the same code lowers to Mosaic.
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,104 @@
+"""Jitted dispatch wrappers for the Pallas kernels.
+
+Handles padding to TPU-aligned block shapes, chooses interpret mode off-TPU,
+and exposes the kernels with the grouped-layout signatures the solver uses.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .dual_norm import dual_norm_pallas
+from .screening_scores import screening_scores_pallas
+from .sgl_prox import sgl_prox_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, rem)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "lam", "block_g"))
+def sgl_prox(beta, step, w, tau: float, lam: float, block_g: int = 256):
+    """Fused two-level prox; beta (G, ng), step/w (G,). Any G, ng."""
+    G, ng = beta.shape
+    bg = min(block_g, max(8, G))
+    b = _pad_to(beta, 0, bg)
+    s = _pad_to(step, 0, bg, value=1.0)
+    ww = _pad_to(w, 0, bg, value=1.0)
+    out = sgl_prox_pallas(
+        b, s, ww, tau, lam, block_g=bg, interpret=not _on_tpu()
+    )
+    return out[:G]
+
+
+@functools.partial(jax.jit, static_argnames=("n_iter", "block_g"))
+def dual_norm_groups(x, alpha, R, n_iter: int = 64, block_g: int = 256):
+    """Per-group Lambda(x_g, alpha_g, R_g); x (G, ng), alpha/R (G,) -> (G,)."""
+    G, ng = x.shape
+    bg = min(block_g, max(8, G))
+    xp = _pad_to(x, 0, bg)
+    ap = _pad_to(alpha, 0, bg, value=1.0)
+    Rp = _pad_to(R, 0, bg, value=1.0)
+    out = dual_norm_pallas(xp, ap, Rp, n_iter=n_iter, block_g=bg,
+                           interpret=not _on_tpu())
+    return out[:G]
+
+
+@functools.partial(jax.jit, static_argnames=("tau", "block_p", "block_n"))
+def screening_scores(Xt, theta, tau: float, block_p: int = 256,
+                     block_n: int = 128):
+    """Fused corr = X^T theta and S_tau(corr)^2; Xt (p, n), theta (n,)."""
+    p, n = Xt.shape
+    bp = min(block_p, max(8, p))
+    bn = min(block_n, max(8, n))
+    Xp = _pad_to(_pad_to(Xt, 0, bp), 1, bn)
+    tp = _pad_to(theta, 0, bn)
+    corr, st2 = screening_scores_pallas(
+        Xp, tp, tau, block_p=bp, block_n=bn, interpret=not _on_tpu()
+    )
+    return corr[:p], st2[:p]
+
+
+def sgl_dual_norm_fused(corr_grouped, tau, w, n_iter: int = 64):
+    """Omega^D via the Pallas bisection kernel (drop-in for sgl.sgl_dual_norm)."""
+    from repro.core.sgl import epsilons, group_weight_total
+
+    eps = epsilons(tau, w)
+    scale = group_weight_total(tau, w)
+    per_group = dual_norm_groups(corr_grouped, 1.0 - eps, eps, n_iter=n_iter)
+    return jnp.max(per_group / scale)
+
+
+def sgl_prox_batched(beta, lam_b, L, w, tau: float, block_g: int = 256):
+    """Two-level prox over a batched-lambda state (B, G, ng).
+
+    Each (b, g) row is an independent prox at threshold lam_b / L — exactly
+    the per-row layout ``sgl_prox_pallas`` tiles, so the batched case
+    reuses the same kernel on the flattened (B*G, ng) view. This is the
+    prox step of the batched-lambda FISTA kernel (EXPERIMENTS.md §Perf,
+    sgl-paper iterations 3-4).
+    """
+    B, G, ng = beta.shape
+    flat = beta.reshape(B * G, ng)
+    step = jnp.broadcast_to((lam_b / L)[:, None], (B, G)).reshape(-1)
+    w_flat = jnp.broadcast_to(w[None, :], (B, G)).reshape(-1)
+    bg = min(block_g, max(8, B * G))
+    b = _pad_to(flat, 0, bg)
+    s = _pad_to(step, 0, bg, value=1.0)
+    ww = _pad_to(w_flat, 0, bg, value=1.0)
+    out = sgl_prox_pallas(
+        b, s, ww, tau, 1.0, block_g=bg, interpret=not _on_tpu()
+    )
+    return out[: B * G].reshape(B, G, ng)

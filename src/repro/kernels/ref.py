@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (ground truth for allclose tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sgl_prox_ref(beta, step, w, tau, lam):
+    """Two-level prox, grouped layout (G, ng); step/w are (G,)."""
+    t1 = tau * lam * step[:, None]
+    z = jnp.sign(beta) * jnp.maximum(jnp.abs(beta) - t1, 0.0)
+    nrm = jnp.linalg.norm(z, axis=1, keepdims=True)
+    t2 = (1.0 - tau) * lam * (w * step)[:, None]
+    scale = jnp.maximum(1.0 - t2 / jnp.maximum(nrm, 1e-30), 0.0)
+    return scale * z
+
+
+def dual_norm_ref(x, alpha, R):
+    """Exact sorted-prefix-sum Lambda per group (paper Algorithm 1)."""
+    from repro.core.epsilon_norm import lam as lam_exact
+
+    return lam_exact(x, alpha, R)
+
+
+def screening_scores_ref(Xt, theta, tau):
+    corr = Xt @ theta
+    st = jnp.maximum(jnp.abs(corr) - tau, 0.0)
+    return corr, st * st

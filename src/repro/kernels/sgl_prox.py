@@ -1,0 +1,60 @@
+"""Fused two-level SGL prox Pallas kernel.
+
+prox_{step * lam * Omega_{tau,w}}(beta) =
+    S^gp_{(1-tau) w lam step}( S_{tau lam step}(beta) )
+
+Layout: beta (G, ng) with groups on the sublane axis and in-group features on
+the lane axis, so the group reduction is a lane-axis reduction — a single VPU
+pass.  Each grid step owns a (block_g, ng) tile resident in VMEM; step and w
+ride along as (block_g, 1) tiles.  ng should be padded to a multiple of 128
+by the wrapper (padding features are zero and inert through both prox levels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _sgl_prox_kernel(beta_ref, step_ref, w_ref, out_ref, *, tau: float, lam: float):
+    b = beta_ref[...]                     # (bg, ng)
+    step = step_ref[...]                  # (bg, 1)
+    w = w_ref[...]                        # (bg, 1)
+
+    t1 = tau * lam * step
+    z = jnp.sign(b) * jnp.maximum(jnp.abs(b) - t1, 0.0)
+
+    nrm2 = jnp.sum(z * z, axis=1, keepdims=True)
+    nrm = jnp.sqrt(nrm2)
+    t2 = (1.0 - tau) * lam * w * step
+    scale = jnp.maximum(1.0 - t2 / jnp.maximum(nrm, 1e-30), 0.0)
+    out_ref[...] = scale * z
+
+
+def sgl_prox_pallas(
+    beta: jax.Array,      # (G, ng)
+    step: jax.Array,      # (G,)
+    w: jax.Array,         # (G,)
+    tau: float,
+    lam: float,
+    *,
+    block_g: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    G, ng = beta.shape
+    assert G % block_g == 0, (G, block_g)
+    grid = (G // block_g,)
+    return pl.pallas_call(
+        functools.partial(_sgl_prox_kernel, tau=float(tau), lam=float(lam)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_g, ng), lambda i: (i, 0)),
+            pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_g, ng), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((G, ng), beta.dtype),
+        interpret=interpret,
+    )(beta, step[:, None], w[:, None])

@@ -1,0 +1,292 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+on the production meshes and extract memory / cost / collective statistics.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --arch sgl-paper --shape solve
+
+The first two lines of this file MUST stay first: jax locks the device count
+on first initialisation.  ``--all`` mode runs each cell in a subprocess (so a
+pathological cell cannot wedge the sweep and compile memory is returned to
+the OS between cells).
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import numpy as np
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, q_chunk: int = 512,
+             json_out=None, quiet=False):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get
+    from repro.configs.base import SHAPES_BY_NAME, shape_applicable
+    from repro.launch import mesh as meshlib
+    from repro.launch import roofline as rl
+
+    t0 = time.time()
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+
+    if arch == "sgl-paper":
+        result = _run_sgl_cell(mesh, multi_pod, chips)
+    else:
+        cfg = get(arch)
+        shape = SHAPES_BY_NAME[shape_name]
+        ok, reason = shape_applicable(cfg, shape)
+        if not ok:
+            result = {"arch": arch, "shape": shape_name,
+                      "multi_pod": multi_pod, "status": "skipped",
+                      "reason": reason}
+            _emit(result, json_out, quiet)
+            return result
+
+        from repro.launch import specs as speclib
+
+        cell = speclib.build_cell(
+            cfg, shape, dp=meshlib.dp_size(mesh),
+            model_axis=meshlib.model_size(mesh), q_chunk=q_chunk,
+        )
+        in_shardings = tuple(
+            meshlib.shardings_for_structs(mesh, s, a, multi_pod=multi_pod)
+            for s, a in zip(cell.in_specs, cell.args)
+        )
+        jitted = jax.jit(
+            cell.fn, in_shardings=in_shardings, donate_argnums=cell.donate
+        )
+        with mesh:
+            lowered = jitted.lower(*cell.args)
+            compiled = lowered.compile()
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # Trip-count-aware analysis: XLA's cost_analysis counts while bodies
+        # once, undercounting scanned layer stacks / q-chunk loops by their
+        # trip counts (see roofline.analyze_hlo).
+        corrected = rl.analyze_hlo(hlo)
+        coll = {k[len("coll_"):]: v for k, v in corrected.items()
+                if k.startswith("coll_")}
+        if json_out:
+            import gzip
+            with gzip.open(json_out + ".hlo.gz", "wt") as f:
+                f.write(hlo)
+
+        # model flops: tokens processed this step
+        if cell.kind == "train":
+            tokens = shape.global_batch * shape.seq_len
+        elif cell.kind == "prefill":
+            tokens = shape.global_batch * shape.seq_len
+        else:
+            tokens = shape.global_batch  # one token per sequence
+        p_structs = cell.args[0]
+        mf = rl.model_flops(cfg, p_structs, cell.kind, tokens)
+
+        # cost_analysis() reports PER-DEVICE numbers for the SPMD-partitioned
+        # executable (verified empirically: sharded 4096^3 matmul reports
+        # exactly total/n_devices); scale to cluster totals so the roofline
+        # formula terms  X / (chips * peak)  are per-chip times.
+        roof = rl.Roofline(
+            flops=corrected["flops"] * chips,
+            bytes_accessed=corrected["bytes_accessed"] * chips,
+            collective_bytes=corrected["collective_bytes"] * chips,
+            chips=chips,
+            model_flops=mf,
+        )
+        result = {
+            "arch": arch,
+            "shape": shape_name,
+            "multi_pod": multi_pod,
+            "status": "ok",
+            "kind": cell.kind,
+            "chips": chips,
+            "seconds": time.time() - t0,
+            "params": rl.count_params(p_structs),
+            "active_params": rl.active_params(cfg, p_structs),
+            "xla_cost_analysis": {   # uncorrected, for reference
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            },
+            "collectives": coll,
+            "roofline": roof.as_dict(),
+        }
+
+    _emit(result, json_out, quiet)
+    return result
+
+
+def _run_sgl_cell(mesh, multi_pod, chips):
+    """The paper's own workload on the production mesh: one distributed
+    FISTA step + one screening round, lowered from ShapeDtypeStructs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get
+    from repro.distributed.solver_dist import make_dist_step
+    from repro.launch import roofline as rl
+
+    cfg = get("sgl-paper")
+    n, G, ng = cfg.n_samples, cfg.n_groups, cfg.group_size
+    kernels = make_dist_step(mesh, tau=cfg.tau, multi_pod=multi_pod)
+    f32, bf16 = jnp.float32, jnp.bfloat16
+    # batched-lambda width: 256 path points per X pass with bf16 FISTA
+    # state (iterate precision only — certified screen rounds stay f32).
+    # Swept in §Perf: B=16/64/128 f32-state -> frac 0.065/0.129/0.249;
+    # B=128/256 bf16-state -> 0.480/0.875. B=256 peaks at 4 GiB/device.
+    B = 256
+    X = jax.ShapeDtypeStruct((n, G, ng), f32)
+    Xh = jax.ShapeDtypeStruct((n, G, ng), bf16)   # mixed-precision FISTA
+    y = jax.ShapeDtypeStruct((n,), f32)
+    gv = jax.ShapeDtypeStruct((G, ng), f32)
+    bv = jax.ShapeDtypeStruct((B, G, ng), bf16)   # bf16 iterate state
+    sv = jax.ShapeDtypeStruct((G,), f32)
+    sc = jax.ShapeDtypeStruct((), f32)
+    scB = jax.ShapeDtypeStruct((B,), f32)
+
+    with mesh:
+        comp_f = jax.jit(kernels.fista).lower(
+            X, y, gv, gv, gv, sv, sc, sc, sc).compile()
+        comp_fh = jax.jit(kernels.fista).lower(
+            Xh, y, gv, gv, gv, sv, sc, sc, sc).compile()
+        comp_fb = jax.jit(kernels.fista_batch).lower(
+            Xh, y, bv, bv, bv, sv, scB, scB, sc).compile()
+        comp_s = jax.jit(kernels.screen).lower(
+            X, y, gv, gv, sv, gv, sv, sc, sc).compile()
+
+    out = {"arch": "sgl-paper", "shape": f"fista+screen n={n} G={G} ng={ng}",
+           "multi_pod": multi_pod, "status": "ok", "chips": chips,
+           "lambda_batch": B}
+    for name, comp in (("fista", comp_f), ("fista_bf16", comp_fh),
+                       (f"fista_batch{B}_bf16", comp_fb),
+                       ("screen", comp_s)):
+        mem = comp.memory_analysis()
+        corrected = rl.analyze_hlo(comp.as_text())
+        coll = {k[len("coll_"):]: v for k, v in corrected.items()
+                if k.startswith("coll_")}
+        # useful flops: 2 matvecs over the active design matrix = 4*n*p
+        # (x B for the batched-lambda kernel — B path points per X pass)
+        mf = 4.0 * n * G * ng * (B if "batch" in name else 1)
+        roof = rl.Roofline(
+            flops=corrected["flops"] * chips,
+            bytes_accessed=corrected["bytes_accessed"] * chips,
+            collective_bytes=corrected["collective_bytes"] * chips,
+            chips=chips,
+            model_flops=mf,
+        )
+        out[name] = {
+            "collectives": coll,
+            "roofline": roof.as_dict(),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            },
+        }
+    return out
+
+
+def _emit(result, json_out, quiet):
+    if json_out:
+        with open(json_out, "w") as f:
+            json.dump(result, f, indent=2)
+    if not quiet:
+        print(json.dumps(result, indent=2))
+
+
+def sweep(out_dir: str, multi_pod_values=(False, True), timeout: int = 3600,
+          archs=None, shapes=None):
+    """Run every cell in a subprocess; write one JSON per cell."""
+    from repro.configs import list_archs
+    from repro.configs.base import LM_SHAPES
+
+    os.makedirs(out_dir, exist_ok=True)
+    archs = archs or [a for a in list_archs()]
+    results = []
+    for arch in archs:
+        cell_shapes = (
+            ["solve"] if arch == "sgl-paper"
+            else (shapes or [s.name for s in LM_SHAPES])
+        )
+        for shape in cell_shapes:
+            for mp in multi_pod_values:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                out_json = os.path.join(out_dir, tag + ".json")
+                if os.path.exists(out_json):
+                    print(f"[skip existing] {tag}")
+                    continue
+                cmd = [
+                    sys.executable, "-m", "repro.launch.dryrun",
+                    "--arch", arch, "--shape", shape,
+                    "--json-out", out_json, "--quiet",
+                ]
+                if mp:
+                    cmd.append("--multi-pod")
+                print(f"[{time.strftime('%H:%M:%S')}] {tag} ...", flush=True)
+                t0 = time.time()
+                try:
+                    proc = subprocess.run(
+                        cmd, timeout=timeout, capture_output=True, text=True
+                    )
+                    ok = proc.returncode == 0
+                    if not ok:
+                        with open(out_json, "w") as f:
+                            json.dump({
+                                "arch": arch, "shape": shape, "multi_pod": mp,
+                                "status": "error",
+                                "stderr": proc.stderr[-4000:],
+                            }, f, indent=2)
+                except subprocess.TimeoutExpired:
+                    ok = False
+                    with open(out_json, "w") as f:
+                        json.dump({
+                            "arch": arch, "shape": shape, "multi_pod": mp,
+                            "status": "timeout", "timeout_s": timeout,
+                        }, f, indent=2)
+                print(f"    -> {'ok' if ok else 'FAIL'} "
+                      f"({time.time()-t0:.0f}s)", flush=True)
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--json-out")
+    ap.add_argument("--quiet", action="store_true")
+    ap.add_argument("--timeout", type=int, default=3600)
+    ap.add_argument("--q-chunk", type=int, default=512)
+    ap.add_argument("--archs", nargs="*")
+    args = ap.parse_args()
+
+    if args.all:
+        sweep(args.out, timeout=args.timeout, archs=args.archs)
+        return
+
+    try:
+        run_cell(args.arch, args.shape, args.multi_pod,
+                 q_chunk=args.q_chunk, json_out=args.json_out,
+                 quiet=args.quiet)
+    except Exception:
+        traceback.print_exc()
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

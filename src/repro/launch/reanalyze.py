@@ -1,0 +1,58 @@
+"""Recompute roofline terms for dry-run cells from their saved HLO.
+
+    PYTHONPATH=src python -m repro.launch.reanalyze artifacts/dryrun2
+
+The dry-run saves each cell's compiled HLO next to its JSON
+(<cell>.json.hlo.gz), so analyzer improvements can be re-applied without
+recompiling 40 cells.
+"""
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from . import roofline as rl
+
+
+def reanalyze_cell(json_path: str) -> bool:
+    hlo_path = json_path + ".hlo.gz"
+    if not os.path.exists(hlo_path):
+        return False
+    with open(json_path) as f:
+        d = json.load(f)
+    if d.get("status") != "ok" or "roofline" not in d:
+        return False
+    with gzip.open(hlo_path, "rt") as f:
+        hlo = f.read()
+    a = rl.analyze_hlo(hlo)
+    chips = d["chips"]
+    roof = rl.Roofline(
+        flops=a["flops"] * chips,
+        bytes_accessed=a["bytes_accessed"] * chips,
+        collective_bytes=a["collective_bytes"] * chips,
+        chips=chips,
+        model_flops=d["roofline"]["model_flops"],
+    )
+    d["roofline"] = roof.as_dict()
+    d["collectives"] = {k[len("coll_"):]: v for k, v in a.items()
+                        if k.startswith("coll_")}
+    with open(json_path, "w") as f:
+        json.dump(d, f, indent=2)
+    return True
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun2"
+    n = 0
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        if reanalyze_cell(p):
+            n += 1
+            print(f"reanalyzed {os.path.basename(p)}")
+    print(f"{n} cells reanalyzed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,148 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.report artifacts/dryrun
+
+Prints markdown: the §Dry-run status matrix and the §Roofline single-pod
+table (three terms, bottleneck, useful-flops ratio) plus per-cell notes on
+what would move the dominant term.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(out_dir: str):
+    cells = []
+    for f in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(f) as fh:
+            cells.append(json.load(fh))
+    return cells
+
+
+def _fmt_t(x) -> str:
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x * 1e3:.1f}ms"
+
+
+def _hint(cell) -> str:
+    r = cell.get("roofline") or {}
+    b = r.get("bottleneck")
+    kind = cell.get("kind")
+    if b == "memory":
+        if kind == "train":
+            return "less remat / fuse optimizer+cast to cut HBM traffic"
+        return "KV-cache layout + quantization to cut HBM reads"
+    if b == "collective":
+        return "re-shard to cut all-gathers; overlap collectives with compute"
+    return "already compute-bound; larger per-chip tile helps MXU util"
+
+
+def dryrun_matrix(cells):
+    print("\n### Dry-run status matrix (compile on 16x16=256 and "
+          "2x16x16=512 meshes)\n")
+    keyed = {}
+    for c in cells:
+        keyed[(c["arch"], c["shape"], c.get("multi_pod", False))] = c
+    archs = sorted({c["arch"] for c in cells})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k", "solve",
+              "fista+screen"]
+    shapes = [s for s in shapes
+              if any(c["shape"].startswith(s.split("+")[0]) or c["shape"] == s
+                     for c in cells)]
+    hdr = "| arch | " + " | ".join(
+        f"{s} (1pod/2pod)" for s in shapes) + " |"
+    print(hdr)
+    print("|" + "---|" * (len(shapes) + 1))
+    for a in archs:
+        row = [a]
+        for s in shapes:
+            marks = []
+            for mp in (False, True):
+                c = keyed.get((a, s, mp))
+                if c is None:
+                    cands = [v for (aa, ss, m), v in keyed.items()
+                             if aa == a and m == mp and ss.startswith(s[:5])]
+                    c = cands[0] if cands else None
+                if c is None:
+                    marks.append("·")
+                else:
+                    st = c.get("status")
+                    marks.append({"ok": "✓", "skipped": "skip",
+                                  "error": "✗", "timeout": "T"}.get(st, "?"))
+            row.append("/".join(marks))
+        print("| " + " | ".join(row) + " |")
+
+
+def roofline_table(cells, multi_pod=False):
+    title = "multi-pod (512 chips)" if multi_pod else "single-pod (256 chips)"
+    print(f"\n### Roofline — {title}\n")
+    print("| arch | shape | t_compute | t_memory | t_collective | bound |"
+          " model/HLO flops | roofline frac | next lever |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for c in cells:
+        if c.get("multi_pod") != multi_pod or c.get("status") != "ok":
+            continue
+        r = c.get("roofline")
+        if not r:
+            # sgl-paper cell stores one entry per kernel variant
+            subs = [k for k in c
+                    if isinstance(c.get(k), dict) and "roofline" in c[k]]
+            for sub in subs:
+                if sub in c:
+                    rr = c[sub]["roofline"]
+                    print(f"| {c['arch']} | {sub} | "
+                          f"{_fmt_t(rr['t_compute_s'])} | "
+                          f"{_fmt_t(rr['t_memory_s'])} | "
+                          f"{_fmt_t(rr['t_collective_s'])} | "
+                          f"{rr['bottleneck']} | "
+                          f"{(rr.get('useful_flops_ratio') or 0):.3f} | "
+                          f"{rr['roofline_fraction']:.4f} | "
+                          f"{_hint({'roofline': rr, 'kind': 'solve'})} |")
+            continue
+        print(f"| {c['arch']} | {c['shape']} | "
+              f"{_fmt_t(r['t_compute_s'])} | {_fmt_t(r['t_memory_s'])} | "
+              f"{_fmt_t(r['t_collective_s'])} | {r['bottleneck']} | "
+              f"{(r.get('useful_flops_ratio') or 0):.3f} | "
+              f"{r['roofline_fraction']:.4f} | {_hint(c)} |")
+
+
+def memory_table(cells):
+    print("\n### Per-device memory (single-pod, from "
+          "compiled.memory_analysis())\n")
+    print("| arch | shape | args | temps | peak |")
+    print("|---|---|---|---|---|")
+    gb = 1 << 30
+    for c in cells:
+        if c.get("multi_pod") or c.get("status") != "ok":
+            continue
+        m = c.get("memory")
+        if not m:
+            continue
+        print(f"| {c['arch']} | {c['shape']} | "
+              f"{(m.get('argument_bytes') or 0) / gb:.2f} GiB | "
+              f"{(m.get('temp_bytes') or 0) / gb:.2f} GiB | "
+              f"{(m.get('peak_bytes') or 0) / gb:.2f} GiB |")
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    cells = load(out_dir)
+    ok = sum(1 for c in cells if c.get("status") == "ok")
+    sk = sum(1 for c in cells if c.get("status") == "skipped")
+    err = len(cells) - ok - sk
+    print(f"# Dry-run report: {ok} ok / {sk} skipped / {err} failed "
+          f"({len(cells)} cells)")
+    dryrun_matrix(cells)
+    roofline_table(cells, multi_pod=False)
+    roofline_table(cells, multi_pod=True)
+    memory_table(cells)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+No device allocation happens here: params/optimizer/cache shapes come from
+``jax.eval_shape`` over the real init functions, and batch inputs are
+ShapeDtypeStructs.  The same builders drive the dry-run, the roofline
+analysis, and the launch scripts.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec, SHAPES_BY_NAME
+from repro.models import build
+from repro.train import optimizer as opt
+
+
+class CellSpecs(NamedTuple):
+    kind: str                 # train | prefill | decode
+    args: tuple               # ShapeDtypeStruct pytrees, in call order
+    in_specs: tuple           # logical PartitionSpec pytrees
+    fn: Any                   # the function to lower
+    donate: tuple             # donated arg indices
+
+
+def _batch_logical(batch: int, dp: int) -> P:
+    return P("data") if batch % dp == 0 else P(None)
+
+
+def _seq_logical(batch: int, dp: int, extra=(None,)) -> P:
+    first = "data" if batch % dp == 0 else None
+    return P(first, *extra)
+
+
+def param_structs(api, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(api.init_params, dtype=dtype), jax.random.PRNGKey(0)
+    )
+
+
+def build_cell(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    *,
+    dp: int,
+    model_axis: int,
+    dtype=jnp.bfloat16,
+    q_chunk: int = 512,
+):
+    """Returns a CellSpecs for one (arch x shape) cell."""
+    from repro.models import layers as L
+
+    api = build(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    p_structs = param_structs(api, dtype)
+    p_specs = api.param_specs(model_axis)
+    # activation-sharding hint: lets the model steer the partitioner on
+    # dims whose natural axis (heads) doesn't divide the mesh axis
+    L.set_activation_mesh({"data": dp, "model": model_axis})
+
+    F = cfg.frontend_tokens
+    needs_embeds = cfg.family in ("vlm", "encdec")
+    tok_len = S - F if cfg.family == "vlm" else S
+
+    tokens = jax.ShapeDtypeStruct((B, tok_len), jnp.int32)
+    embeds = (
+        jax.ShapeDtypeStruct((B, F, cfg.d_model), dtype) if needs_embeds else None
+    )
+    bspec = _batch_logical(B, dp)
+    tok_spec = _seq_logical(B, dp)
+    emb_spec = _seq_logical(B, dp, (None, None))
+
+    if shape.kind == "train":
+        from repro.train.train_step import make_train_step
+
+        init_state, train_step = make_train_step(api, q_chunk=q_chunk)
+        o_structs = jax.eval_shape(init_state, p_structs)
+        o_specs = opt.state_specs(p_specs)
+        batch = {"tokens": tokens}
+        batch_specs = {"tokens": tok_spec}
+        if needs_embeds:
+            batch["embeds"] = embeds
+            batch_specs["embeds"] = emb_spec
+        return CellSpecs(
+            kind="train",
+            args=(p_structs, o_structs, batch),
+            in_specs=(p_specs, o_specs, batch_specs),
+            fn=train_step,
+            donate=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        def prefill_fn(params, batch):
+            return api.prefill(params, batch["tokens"], batch.get("embeds"),
+                               q_chunk=q_chunk, dtype=dtype)
+
+        batch = {"tokens": tokens}
+        batch_specs = {"tokens": tok_spec}
+        if needs_embeds:
+            batch["embeds"] = embeds
+            batch_specs["embeds"] = emb_spec
+        return CellSpecs(
+            kind="prefill",
+            args=(p_structs, batch),
+            in_specs=(p_specs, batch_specs),
+            fn=prefill_fn,
+            donate=(),
+        )
+
+    # decode: one new token against a seq_len KV cache / recurrent state
+    cache_structs = jax.eval_shape(
+        lambda: api.init_cache(B, S, dtype=dtype)
+    )
+    cache_specs = api.cache_specs(model_axis)
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, cache, token, pos):
+        return api.decode_step(params, cache, token, pos)
+
+    return CellSpecs(
+        kind="decode",
+        args=(p_structs, cache_structs, token, pos),
+        in_specs=(p_specs, cache_specs, bspec, P()),
+        fn=serve_step,
+        donate=(1,),
+    )

@@ -1,0 +1,232 @@
+"""Encoder-decoder backbone (seamless-m4t style).
+
+Encoder: bidirectional self-attention over *precomputed frame embeddings*
+(the audio frontend is a stub per the assignment).  Decoder: causal
+self-attention + cross-attention to encoder outputs.  Both stacks are
+scan-stacked.
+
+Serving: ``prefill`` runs the encoder + target prompt, building (a) the
+decoder self-attention KV cache and (b) the per-layer cross-attention K/V
+(computed once from encoder output); ``decode_step`` is one target token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+from .transformer import _stack_spec
+
+
+def _init_enc_layer(cfg, key, dtype):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg, dtype),
+        "attn": L.init_attn(ka, cfg, dtype),
+        "ln2": L.init_norm(cfg, dtype),
+        "mlp": L.init_mlp(km, cfg, dtype),
+    }
+
+
+def _init_dec_layer(cfg, key, dtype):
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg, dtype),
+        "attn": L.init_attn(ka, cfg, dtype),
+        "ln_x": L.init_norm(cfg, dtype),
+        "xattn": L.init_attn(kc, cfg, dtype),
+        "ln2": L.init_norm(cfg, dtype),
+        "mlp": L.init_mlp(km, cfg, dtype),
+    }
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16):
+    ke, k1, k2, ko = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k1, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab, cfg.d_model), dtype)
+        * cfg.d_model ** -0.5,
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(cfg, k, dtype))(enc_keys),
+        "enc_ln_f": L.init_norm(cfg, dtype),
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(cfg, k, dtype))(dec_keys),
+        "ln_f": L.init_norm(cfg, dtype),
+        "unembed": jax.random.normal(ko, (cfg.d_model, cfg.vocab), dtype)
+        * cfg.d_model ** -0.5,
+    }
+
+
+def param_specs(cfg, model_axis: int = 16):
+    enc = {"ln1": P(None), "attn": L.specs_attn(cfg), "ln2": P(None),
+           "mlp": L.specs_mlp(cfg)}
+    dec = {"ln1": P(None), "attn": L.specs_attn(cfg), "ln_x": P(None),
+           "xattn": L.specs_attn(cfg), "ln2": P(None), "mlp": L.specs_mlp(cfg)}
+    return {
+        "embed": P("model", "data"),
+        "enc_layers": _stack_spec(enc),
+        "enc_ln_f": P(None),
+        "dec_layers": _stack_spec(dec),
+        "ln_f": P(None),
+        "unembed": P("data", "model"),
+    }
+
+
+def encode(cfg, params, frames, *, q_chunk=512, remat=True):
+    """frames: (B, F, D) stub frontend embeddings."""
+    B, F, D = frames.shape
+    h = frames
+    positions = jnp.broadcast_to(jnp.arange(F)[None, :], (B, F))
+    qc = min(q_chunk, F)
+
+    def body(h, lp):
+        a = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["attn"], a, cfg, positions)
+        o = L.full_attention(q, k, v, q_chunk=qc)
+        h = h + o.reshape(B, F, -1) @ lp["attn"]["wo"]
+        b = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        return h + L.mlp(lp["mlp"], b), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return L.rms_norm(h, params["enc_ln_f"], cfg.norm_eps)
+
+
+def _cross_attend(cfg, lp, h, enc_kv, positions_q):
+    """Cross attention; enc_kv = (k, v) each (B, F, K, hd)."""
+    B, S, D = h.shape
+    a = L.rms_norm(h, lp["ln_x"], cfg.norm_eps)
+    q = (a @ lp["xattn"]["wq"]).reshape(B, S, cfg.n_heads, cfg.hd)
+    k, v = enc_kv
+    o = L.full_attention(q, k, v, q_chunk=min(512, S))
+    return h + o.reshape(B, S, -1) @ lp["xattn"]["wo"]
+
+
+def _enc_kv(cfg, lp, enc_out):
+    B, F, D = enc_out.shape
+    k = (enc_out @ lp["xattn"]["wk"]).reshape(B, F, cfg.n_kv, cfg.hd)
+    v = (enc_out @ lp["xattn"]["wv"]).reshape(B, F, cfg.n_kv, cfg.hd)
+    return k, v
+
+
+def forward(cfg, params, tokens, embeds=None, *, q_chunk=512, remat=True, **_):
+    """Training: frames (embeds) -> encoder; tokens -> decoder; returns logits."""
+    assert embeds is not None, "enc-dec needs frontend embeddings"
+    enc_out = encode(cfg, params, embeds, q_chunk=q_chunk, remat=remat)
+    B, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    qc = min(q_chunk, S)
+
+    def body(h, lp):
+        a = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["attn"], a, cfg, positions)
+        o = L.causal_attention(q, k, v, q_chunk=qc)
+        h = h + o.reshape(B, S, -1) @ lp["attn"]["wo"]
+        h = _cross_attend(cfg, lp, h, _enc_kv(cfg, lp, enc_out), positions)
+        b = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        return h + L.mlp(lp["mlp"], b), None
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["dec_layers"])
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    return h @ params["unembed"], jnp.zeros((), jnp.float32)
+
+
+class EncDecCache(NamedTuple):
+    k: jax.Array        # (L, B, S_max, K, hd) decoder self-attn
+    v: jax.Array
+    xk: jax.Array       # (L, B, F, K, hd) cross K/V (static after prefill)
+    xv: jax.Array
+    pos: jax.Array
+
+
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    Ld = cfg.n_layers
+    return EncDecCache(
+        k=jnp.zeros((Ld, batch, max_seq, cfg.n_kv, cfg.hd), dtype),
+        v=jnp.zeros((Ld, batch, max_seq, cfg.n_kv, cfg.hd), dtype),
+        xk=jnp.zeros((Ld, batch, cfg.frontend_tokens, cfg.n_kv, cfg.hd), dtype),
+        xv=jnp.zeros((Ld, batch, cfg.frontend_tokens, cfg.n_kv, cfg.hd), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_specs(cfg, model_axis: int = 16):
+    s = P(None, "data", None, "model", None) if cfg.n_kv % model_axis == 0 \
+        else P(None, "data", None, None, None)
+    return EncDecCache(k=s, v=s, xk=s, xv=s, pos=P())
+
+
+def prefill(cfg, params, tokens, embeds=None, *, q_chunk=512,
+            cache_len=None, dtype=jnp.bfloat16, **_):
+    assert embeds is not None
+    enc_out = encode(cfg, params, embeds, q_chunk=q_chunk, remat=False)
+    B, S = tokens.shape
+    C = cache_len or S
+    h = jnp.take(params["embed"], tokens, axis=0)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    qc = min(q_chunk, S)
+
+    def body(h, lp):
+        a = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["attn"], a, cfg, positions)
+        o = L.causal_attention(q, k, v, q_chunk=qc)
+        h = h + o.reshape(B, S, -1) @ lp["attn"]["wo"]
+        xk, xv = _enc_kv(cfg, lp, enc_out)
+        h = _cross_attend(cfg, lp, h, (xk, xv), positions)
+        b = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        kc = jnp.zeros((B, C, cfg.n_kv, cfg.hd), dtype).at[:, :S].set(
+            k.astype(dtype))
+        vc = jnp.zeros((B, C, cfg.n_kv, cfg.hd), dtype).at[:, :S].set(
+            v.astype(dtype))
+        return h + L.mlp(lp["mlp"], b), (kc, vc, xk.astype(dtype),
+                                         xv.astype(dtype))
+
+    h, (kcs, vcs, xks, xvs) = jax.lax.scan(body, h, params["dec_layers"])
+    h = L.rms_norm(h[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = (h @ params["unembed"])[:, 0]
+    return logits, EncDecCache(k=kcs, v=vcs, xk=xks, xv=xvs,
+                               pos=jnp.asarray(S, jnp.int32))
+
+
+def decode_step(cfg, params, cache: EncDecCache, token, pos):
+    B = token.shape[0]
+    h = jnp.take(params["embed"], token[:, None], axis=0)
+    positions = jnp.broadcast_to(pos, (B, 1))
+    S_cache = cache.k.shape[2]
+    scale = 1.0 / float(cfg.hd) ** 0.5
+
+    def body(h, lp_and_cache):
+        lp, kc, vc, xk, xv = lp_and_cache
+        a = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["attn"], a, cfg, positions)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+        valid = jnp.arange(S_cache)[None, :] <= pos
+        qg = L._split_gqa(q, cfg.n_kv)
+        o = L._attend_block(qg, jnp.swapaxes(kc, 1, 2), jnp.swapaxes(vc, 1, 2),
+                            valid[None, None, None], scale)
+        h = h + L._merge_gqa(o).reshape(B, 1, -1) @ lp["attn"]["wo"]
+        # cross attention against the static encoder K/V
+        ax = L.rms_norm(h, lp["ln_x"], cfg.norm_eps)
+        qx = (ax @ lp["xattn"]["wq"]).reshape(B, 1, cfg.n_heads, cfg.hd)
+        qxg = L._split_gqa(qx, cfg.n_kv)
+        ox = L._attend_block(qxg, jnp.swapaxes(xk, 1, 2),
+                             jnp.swapaxes(xv, 1, 2),
+                             jnp.ones((1, xk.shape[1]), bool), scale)
+        h = h + L._merge_gqa(ox).reshape(B, 1, -1) @ lp["xattn"]["wo"]
+        b = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        return h + L.mlp(lp["mlp"], b), (kc, vc)
+
+    h, (kcs, vcs) = jax.lax.scan(
+        body, h, (params["dec_layers"], cache.k, cache.v, cache.xk, cache.xv)
+    )
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = (h @ params["unembed"])[:, 0]
+    return logits, EncDecCache(k=kcs, v=vcs, xk=cache.xk, xv=cache.xv,
+                               pos=pos + 1)

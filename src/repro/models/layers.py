@@ -1,0 +1,407 @@
+"""Shared model building blocks: norms, RoPE, chunked (flash-style)
+attention with GQA / sliding window, SwiGLU and MoE feed-forward.
+
+All functions are pure; parameters are plain dict pytrees.  Every init_*
+function has a matching specs_* function producing a same-structure pytree of
+``jax.sharding.PartitionSpec`` with *logical* axis names "data" / "model"
+(mapped to the physical mesh in launch/mesh.py; "data" becomes
+("pod", "data") on the multi-pod mesh).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ----------------------------------------------------------------------------
+# Activation sharding hints
+# ----------------------------------------------------------------------------
+
+_UNC = P.UNCONSTRAINED
+
+# Mesh-shape hint for activation sharding constraints. The launch layer
+# (specs.build_cell / launch.train) sets this before tracing; unit tests
+# leave it None, making shard_act a no-op. (The legacy `with mesh:`
+# context is not introspectable at trace time, hence the explicit hint.)
+_ACT_MESH: Optional[dict] = None
+
+
+def set_activation_mesh(sizes: Optional[dict]) -> None:
+    """sizes: {axis_name: size} of the mesh activations will run under."""
+    global _ACT_MESH
+    _ACT_MESH = dict(sizes) if sizes else None
+
+
+def shard_act(x, *spec):
+    """Divisibility-aware partial ``with_sharding_constraint``.
+
+    ``None`` entries are left UNCONSTRAINED (the partitioner keeps
+    whatever it propagated — batch stays on data/pod); axis names are
+    applied only when present in the hinted mesh and dividing the dim.
+    No-op when no mesh hint is set (CPU unit tests).  This is how awkward
+    head counts (e.g. 40 heads on a 16-wide model axis) get steered to
+    shard head_dim instead of letting the partitioner all-gather whole
+    activations — see EXPERIMENTS.md §Perf (qwen2.5-14b cell).
+    """
+    sizes = _ACT_MESH
+    if not sizes:
+        return x
+    out = [_UNC] * x.ndim
+    named = False
+    for i, e in enumerate(spec):
+        if e is None or i >= x.ndim:
+            continue
+        axes = e if isinstance(e, (tuple, list)) else (e,)
+        if not all(a in sizes for a in axes):
+            continue
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        if prod and x.shape[i] % prod == 0:
+            out[i] = e
+            named = True
+    if not named:
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*out))
+
+
+def qkv_act_spec(n_heads, hd, model_axis: int):
+    """Pick the shardable axis for (B, S, H, hd) activations: heads when
+    divisible, else head_dim, else leave unconstrained."""
+    if n_heads % model_axis == 0:
+        return (None, None, "model", None)
+    if hd % model_axis == 0:
+        return (None, None, None, "model")
+    return (None, None, None, None)
+
+
+# ----------------------------------------------------------------------------
+# Norms / rope
+# ----------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def rope(x, positions, theta=1e6):
+    """x: (..., S, n, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, half, dtype=jnp.float32) / half
+    )
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------------
+# Attention (GQA, causal / windowed, chunked online-softmax)
+# ----------------------------------------------------------------------------
+
+def _attend_block(q, k, v, mask, scale):
+    """GQA-native block attention.
+
+    q: (B, K, G, Lq, hd) — K kv groups x G query heads per group;
+    k/v: (B, K, Lk, hd);  mask broadcastable to (Lq, Lk).  f32 softmax.
+    KV is never repeated across the G query heads (memory-faithful GQA).
+    """
+    s = jnp.einsum("bkgqd,bkld->bkgql", q, k).astype(jnp.float32) * scale
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bkgql,bkld->bkgqd", (p / jnp.maximum(denom, 1e-30)).astype(v.dtype), v)
+    return o
+
+
+def _split_gqa(q, n_kv):
+    """(B, Sq, H, hd) -> (B, K, G, Sq, hd); query head h = k * G + g."""
+    B, Sq, H, hd = q.shape
+    G = H // n_kv
+    return jnp.transpose(q.reshape(B, Sq, n_kv, G, hd), (0, 2, 3, 1, 4))
+
+
+def _merge_gqa(o):
+    """(B, K, G, Sq, hd) -> (B, Sq, H, hd) (inverse of _split_gqa)."""
+    B, K, G, Sq, hd = o.shape
+    return jnp.transpose(o, (0, 3, 1, 2, 4)).reshape(B, Sq, K * G, hd)
+
+
+def causal_attention(q, k, v, *, window: Optional[int] = None,
+                     q_chunk: int = 512, q_offset=0):
+    """Chunked causal (optionally sliding-window) GQA attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, K, hd) with H % K == 0.
+    q_offset: absolute position of q[0] relative to k[0] (prefill: 0 with
+    Sq == Sk; decode: Sk - Sq).  Memory: O(q_chunk * band) scores per step,
+    where band = min(Sk, window + q_chunk) for windowed attention.
+    """
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    scale = 1.0 / float(hd) ** 0.5
+    qg = _split_gqa(q, K)                      # (B,K,G,Sq,hd)
+    kt = jnp.swapaxes(k, 1, 2)                 # (B,K,Sk,hd)
+    vt = jnp.swapaxes(v, 1, 2)
+
+    if Sq % q_chunk != 0:
+        q_chunk = Sq  # irregular lengths: single block (smoke-test sizes)
+    if Sq <= q_chunk:
+        qpos = q_offset + jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        mask = kpos <= qpos
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        return _merge_gqa(_attend_block(qg, kt, vt, mask, scale))
+
+    n_chunks = Sq // q_chunk
+    qc = qg.reshape(B, K, H // K, n_chunks, q_chunk, hd)
+
+    kv_span = None
+    if window is not None:
+        # Static-size kv band per query chunk instead of the full history.
+        kv_span = min(Sk, window + q_chunk)
+
+    def per_chunk(c):
+        qb = qc[:, :, :, c]
+        start = q_offset + c * q_chunk
+        qpos = start + jnp.arange(q_chunk)[:, None]
+        if kv_span is not None and kv_span < Sk:
+            lo = jnp.clip(start + q_chunk - kv_span, 0, Sk - kv_span)
+            kb = jax.lax.dynamic_slice_in_dim(kt, lo, kv_span, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(vt, lo, kv_span, axis=2)
+            kpos = lo + jnp.arange(kv_span)[None, :]
+        else:
+            kb, vb = kt, vt
+            kpos = jnp.arange(Sk)[None, :]
+        mask = kpos <= qpos
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        return _attend_block(qb, kb, vb, mask, scale)
+
+    if n_chunks <= 64:
+        # unrolled: every chunk's cost is visible to HLO cost analysis
+        # (while-loop bodies are counted once by XLA's cost model)
+        o = jnp.stack([per_chunk(c) for c in range(n_chunks)])
+    else:
+        o = jax.lax.map(per_chunk, jnp.arange(n_chunks))  # (nc,B,K,G,qc,hd)
+    o = jnp.moveaxis(o, 0, 3)                          # (B,K,G,nc,qc,hd)
+    o = o.reshape(B, K, H // K, Sq, hd)
+    return _merge_gqa(o)
+
+
+def full_attention(q, k, v, *, q_chunk: int = 512):
+    """Bidirectional (encoder / cross) GQA attention, chunked over queries."""
+    B, Sq, H, hd = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    scale = 1.0 / float(hd) ** 0.5
+    qg = _split_gqa(q, K)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    mask = jnp.ones((1, Sk), bool)
+    if Sq % q_chunk != 0:
+        q_chunk = Sq
+    if Sq <= q_chunk:
+        return _merge_gqa(_attend_block(qg, kt, vt, mask, scale))
+    n_chunks = Sq // q_chunk
+    qc = qg.reshape(B, K, H // K, n_chunks, q_chunk, hd)
+
+    def per_chunk(c):
+        return _attend_block(qc[:, :, :, c], kt, vt, mask, scale)
+
+    if n_chunks <= 64:
+        o = jnp.stack([per_chunk(c) for c in range(n_chunks)])
+    else:
+        o = jax.lax.map(per_chunk, jnp.arange(n_chunks))
+    o = jnp.moveaxis(o, 0, 3).reshape(B, K, H // K, Sq, hd)
+    return _merge_gqa(o)
+
+
+# ----------------------------------------------------------------------------
+# Attention block params
+# ----------------------------------------------------------------------------
+
+def init_attn(key, cfg, dtype):
+    D, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    ks = jax.random.split(key, 4)
+    s = D ** -0.5
+    p = {
+        "wq": jax.random.normal(ks[0], (D, H * hd), dtype) * s,
+        "wk": jax.random.normal(ks[1], (D, K * hd), dtype) * s,
+        "wv": jax.random.normal(ks[2], (D, K * hd), dtype) * s,
+        "wo": jax.random.normal(ks[3], (H * hd, D), dtype) * s,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((K * hd,), dtype)
+        p["bv"] = jnp.zeros((K * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def specs_attn(cfg):
+    p = {
+        "wq": P("data", "model"),
+        "wk": P("data", "model") if (cfg.n_kv * cfg.hd) % 2 == 0 else P("data", None),
+        "wv": P("data", "model") if (cfg.n_kv * cfg.hd) % 2 == 0 else P("data", None),
+        "wo": P("model", "data"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = P("model")
+        p["bk"] = P("model")
+        p["bv"] = P("model")
+    if cfg.qk_norm:
+        p["q_norm"] = P(None)
+        p["k_norm"] = P(None)
+    return p
+
+
+def attn_qkv(p, x, cfg, positions):
+    """Project + rope. Returns q (B,S,H,hd), k/v (B,S,K,hd)."""
+    B, S, D = x.shape
+    H, K, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, K, hd)
+    v = v.reshape(B, S, K, hd)
+    # NOTE: forcing head_dim sharding here when H % model_axis != 0 was
+    # tried and REFUTED (qwen2.5-14b: collective term 312s -> 2297s, SPMD
+    # "involuntary full rematerialization") — XLA's own partial solution
+    # (8-way heads + 2-way replica) beats a forced 16-way hd constraint
+    # because the surrounding reshapes can't re-factor it. See
+    # EXPERIMENTS.md §Perf. shard_act is kept for opt-in use.
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+# ----------------------------------------------------------------------------
+# Feed-forward: SwiGLU dense and MoE
+# ----------------------------------------------------------------------------
+
+def init_mlp(key, cfg, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": jax.random.normal(ks[0], (D, F), dtype) * D ** -0.5,
+        "w3": jax.random.normal(ks[1], (D, F), dtype) * D ** -0.5,
+        "w2": jax.random.normal(ks[2], (F, D), dtype) * F ** -0.5,
+    }
+
+
+def specs_mlp(cfg):
+    return {"w1": P("data", "model"), "w3": P("data", "model"),
+            "w2": P("model", "data")}
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+def init_moe(key, cfg, dtype):
+    D, F = cfg.d_model, cfg.d_ff
+    E = cfg.moe.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": jax.random.normal(ks[0], (D, E), jnp.float32) * D ** -0.5,
+        "w1": jax.random.normal(ks[1], (E, D, F), dtype) * D ** -0.5,
+        "w3": jax.random.normal(ks[2], (E, D, F), dtype) * D ** -0.5,
+        "w2": jax.random.normal(ks[3], (E, F, D), dtype) * F ** -0.5,
+    }
+
+
+def specs_moe(cfg, model_axis: int):
+    E = cfg.moe.n_experts
+    if E % model_axis == 0:
+        # expert parallelism over the model axis
+        ew = P("model", "data", None)
+        ew2 = P("model", None, "data")
+    else:
+        # TP inside each expert (mixtral: 8 experts on 16-way model axis)
+        ew = P(None, "data", "model")
+        ew2 = P(None, "model", "data")
+    return {"router": P("data", "model"), "w1": ew, "w3": ew, "w2": ew2}
+
+
+def moe_ffn(p, x, cfg):
+    """Top-k capacity-based MoE (gather per expert, scatter-add combine).
+
+    x: (B, S, D).  FLOPs scale with top_k (not n_experts): each expert
+    processes a static capacity C = T/E * top_k * capacity_factor tokens.
+    Tokens over capacity are dropped (standard Switch-style behaviour).
+    """
+    B, S, D = x.shape
+    E, k = cfg.moe.n_experts, cfg.moe.top_k
+    T = B * S
+    if T <= 512:
+        # decode / smoke-test sizes: exact routing, no dropping (every expert
+        # may hold every token; FLOPs are negligible at these T and decode
+        # must not drop tokens)
+        C = T
+    else:
+        C = min(max(1, int(T * k * cfg.moe.capacity_factor / E)), T)
+
+    xt = x.reshape(T, D)
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                     # (T, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # per-(token, expert) combine weight; 0 if expert not in token's top-k
+    combine = jnp.zeros((T, E), jnp.float32)
+    combine = combine.at[jnp.arange(T)[:, None], topi].add(topv)
+
+    # each expert picks its top-C tokens by routing weight
+    escore = combine.T                                       # (E, T)
+    cscore, cidx = jax.lax.top_k(escore, C)                  # (E, C)
+    ex = jnp.take(xt, cidx.reshape(-1), axis=0).reshape(E, C, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ex, p["w1"]))
+    h = h * jnp.einsum("ecd,edf->ecf", ex, p["w3"])
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w2"])              # (E, C, D)
+
+    eo = eo * cscore[..., None].astype(eo.dtype)
+    out = jnp.zeros((T, D), eo.dtype)
+    out = out.at[cidx.reshape(-1)].add(eo.reshape(E * C, D))
+    # router z-loss / load-balance aux (returned for the train loss)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean((combine > 0).astype(jnp.float32), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return out.reshape(B, S, D), aux
+
+
+def init_norm(cfg, dtype):
+    return jnp.zeros((cfg.d_model,), dtype)
+
+
+def fill_rolling_cache(k, buf_len, dtype):
+    """Scatter the last min(S, buf_len) kv entries of k (B,S,K,hd) into a
+    rolling buffer of length buf_len at slots abs_pos % buf_len — the layout
+    decode_step's age-based validity mask assumes."""
+    B, S, K, hd = k.shape
+    keep = min(buf_len, S)
+    ks = k[:, S - keep:]
+    idx = jnp.arange(S - keep, S) % buf_len
+    out = jnp.zeros((B, buf_len, K, hd), dtype)
+    return out.at[:, idx].set(ks.astype(dtype))

@@ -1,0 +1,334 @@
+"""RecurrentGemma / Griffin-style hybrid: RG-LRU recurrent blocks + local
+(sliding-window) MQA attention in a 1-attention : 2-recurrent pattern.
+
+RG-LRU (arXiv:2402.19427):
+    r_t = sigmoid(W_a x_t + b_a)            (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)            (input gate)
+    log a_t = -c * softplus(Lambda) * r_t   (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+The diagonal linear recurrence is evaluated with jax.lax.associative_scan
+(log-depth, numerically stable) for train/prefill, and as the O(1) update for
+decode.  Layers are heterogeneous (pattern), so the stack is a Python list —
+fine for 26 layers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+
+_C = 8.0
+
+
+def _layer_kind(cfg, i: int) -> str:
+    return cfg.hybrid_pattern[i % len(cfg.hybrid_pattern)]
+
+
+def _init_rec_layer(cfg, key, dtype):
+    D = cfg.d_model
+    dr = cfg.d_model  # lru width == d_model for recurrentgemma-2b
+    ks = jax.random.split(key, 6)
+    return {
+        "ln1": L.init_norm(cfg, dtype),
+        "proj_x": jax.random.normal(ks[0], (D, dr), dtype) * D ** -0.5,
+        "proj_gate": jax.random.normal(ks[1], (D, dr), dtype) * D ** -0.5,
+        "conv_w": jax.random.normal(ks[2], (cfg.conv_width, dr), dtype) * 0.1,
+        "conv_b": jnp.zeros((dr,), dtype),
+        "w_a": jax.random.normal(ks[3], (dr, dr), dtype) * dr ** -0.5,
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_x": jax.random.normal(ks[4], (dr, dr), dtype) * dr ** -0.5,
+        "b_x": jnp.zeros((dr,), jnp.float32),
+        "lambda_p": jnp.full((dr,), 0.55, jnp.float32),  # a ~ U(0.9, 0.999)
+        "proj_out": jax.random.normal(ks[5], (dr, D), dtype) * dr ** -0.5,
+        "ln2": L.init_norm(cfg, dtype),
+    }
+
+
+def _finish_init_rec(cfg, key, dtype):
+    p = _init_rec_layer(cfg, key, dtype)
+    p["mlp"] = L.init_mlp(jax.random.fold_in(key, 7), cfg, dtype)
+    return p
+
+
+def _init_attn_layer(cfg, key, dtype):
+    ka, km = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg, dtype),
+        "attn": L.init_attn(ka, cfg, dtype),
+        "ln2": L.init_norm(cfg, dtype),
+        "mlp": L.init_mlp(km, cfg, dtype),
+    }
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16):
+    ke, kl, ko = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = []
+    for i in range(cfg.n_layers):
+        if _layer_kind(cfg, i) == "attn":
+            layers.append(_init_attn_layer(cfg, layer_keys[i], dtype))
+        else:
+            layers.append(_finish_init_rec(cfg, layer_keys[i], dtype))
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab, cfg.d_model), dtype)
+        * cfg.d_model ** -0.5,
+        "layers": layers,
+        "ln_f": L.init_norm(cfg, dtype),
+    }
+    # vocab 256k: embeddings tied (gemma convention)
+
+
+def _rec_specs(cfg):
+    return {
+        "ln1": P(None),
+        "proj_x": P("data", "model"),
+        "proj_gate": P("data", "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "w_a": P("data", "model"),
+        "b_a": P("model"),
+        "w_x": P("data", "model"),
+        "b_x": P("model"),
+        "lambda_p": P("model"),
+        "proj_out": P("model", "data"),
+        "ln2": P(None),
+        "mlp": L.specs_mlp(cfg),
+    }
+
+
+def _attn_specs(cfg):
+    return {
+        "ln1": P(None),
+        "attn": L.specs_attn(cfg),
+        "ln2": P(None),
+        "mlp": L.specs_mlp(cfg),
+    }
+
+
+def param_specs(cfg, model_axis: int = 16):
+    layers = []
+    for i in range(cfg.n_layers):
+        layers.append(
+            _attn_specs(cfg) if _layer_kind(cfg, i) == "attn" else _rec_specs(cfg)
+        )
+    return {"embed": P("model", "data"), "layers": layers, "ln_f": P(None)}
+
+
+def _rglru_scan(x_gated, log_a):
+    """Associative scan of h_t = a_t h_{t-1} + b_t over axis 1.
+
+    x_gated: b_t (B,S,dr) f32;  log_a: (B,S,dr) f32 (<=0)."""
+    def combine(left, right):
+        la1, b1 = left
+        la2, b2 = right
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, x_gated), axis=1)
+    return h
+
+
+def _rec_block(cfg, lp, x, state=None, single_step=False):
+    """x: (B,S,D) -> (y, (conv_state, h_state))."""
+    gate = jax.nn.gelu(x @ lp["proj_gate"])
+    xr = x @ lp["proj_x"]
+
+    if single_step:
+        conv_state, h_prev = state
+        seq = jnp.concatenate([conv_state.astype(xr.dtype), xr], axis=1)
+        new_conv = seq[:, 1:]
+        xc = (jnp.einsum("bwc,wc->bc", seq, lp["conv_w"]) + lp["conv_b"])[:, None]
+    else:
+        from .ssm import _causal_conv
+        xc = _causal_conv(xr, lp["conv_w"], lp["conv_b"])
+        new_conv = xr[:, -(cfg.conv_width - 1):]
+
+    r = jax.nn.sigmoid(xc.astype(jnp.float32) @ lp["w_a"].astype(jnp.float32)
+                       + lp["b_a"])
+    i = jax.nn.sigmoid(xc.astype(jnp.float32) @ lp["w_x"].astype(jnp.float32)
+                       + lp["b_x"])
+    log_a = -_C * jax.nn.softplus(lp["lambda_p"]) * r      # (B,S,dr) f32
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * xc.astype(jnp.float32)
+    )
+
+    if single_step:
+        h = jnp.exp(log_a) * h_prev[:, None] + b
+        new_h = h[:, 0]
+    else:
+        h_prev = None if state is None else state[1]
+        if h_prev is not None:
+            # fold carried state into the first step
+            b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h_prev)
+        h = _rglru_scan(b, log_a)
+        new_h = h[:, -1]
+
+    y = (h.astype(gate.dtype) * gate) @ lp["proj_out"]
+    return y, (new_conv, new_h)
+
+
+def _attn_block(cfg, lp, x, positions, q_chunk):
+    a = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    q, k, v = L.attn_qkv(lp["attn"], a, cfg, positions)
+    o = L.causal_attention(q, k, v, window=cfg.window, q_chunk=q_chunk)
+    B, S, H, hd = o.shape
+    return o.reshape(B, S, H * hd) @ lp["attn"]["wo"], (k, v)
+
+
+def forward(cfg, params, tokens, embeds=None, *, q_chunk: int = 512,
+            remat: bool = True, **_):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    B, S, D = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    qc = min(q_chunk, S)
+
+    for i, lp in enumerate(params["layers"]):
+        def block(h, lp=lp, i=i):
+            if _layer_kind(cfg, i) == "attn":
+                y, _ = _attn_block(cfg, lp, h, positions, qc)
+                h = h + y
+            else:
+                a = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+                y, _ = _rec_block(cfg, lp, a)
+                h = h + y
+            b = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            return h + L.mlp(lp["mlp"], b)
+
+        h = jax.checkpoint(block)(h) if remat else block(h)
+
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = h @ params["embed"].T          # tied embeddings
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# Serving
+# ----------------------------------------------------------------------------
+
+class HybridCache(NamedTuple):
+    """Per-layer state: attn layers use rolling KV, rec layers use (conv, h)."""
+    kv_k: jax.Array     # (n_attn, B, window, K, hd)
+    kv_v: jax.Array
+    conv: jax.Array     # (n_rec, B, W-1, dr)
+    h: jax.Array        # (n_rec, B, dr)
+    pos: jax.Array
+
+
+def _layer_counts(cfg):
+    kinds = [_layer_kind(cfg, i) for i in range(cfg.n_layers)]
+    return kinds, kinds.count("attn"), kinds.count("rec")
+
+
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    kinds, n_attn, n_rec = _layer_counts(cfg)
+    win = min(cfg.window or max_seq, max_seq)
+    dr = cfg.d_model
+    return HybridCache(
+        kv_k=jnp.zeros((n_attn, batch, win, cfg.n_kv, cfg.hd), dtype),
+        kv_v=jnp.zeros((n_attn, batch, win, cfg.n_kv, cfg.hd), dtype),
+        conv=jnp.zeros((n_rec, batch, cfg.conv_width - 1, dr), dtype),
+        h=jnp.zeros((n_rec, batch, dr), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_specs(cfg, model_axis: int = 16):
+    return HybridCache(
+        kv_k=P(None, "data", None, None, None),   # kv=1 (MQA): replicate head
+        kv_v=P(None, "data", None, None, None),
+        conv=P(None, "data", None, "model"),
+        h=P(None, "data", "model"),
+        pos=P(),
+    )
+
+
+def prefill(cfg, params, tokens, embeds=None, *, q_chunk: int = 512,
+            cache_len=None, dtype=jnp.bfloat16, **_):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    B, S, D = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    qc = min(q_chunk, S)
+    C = cache_len or S
+    win = min(cfg.window, C) if cfg.window else C
+
+    kvk, kvv, convs, hs = [], [], [], []
+    for i, lp in enumerate(params["layers"]):
+        if _layer_kind(cfg, i) == "attn":
+            y, (k, v) = _attn_block(cfg, lp, h, positions, qc)
+            h = h + y
+            kvk.append(L.fill_rolling_cache(k, win, dtype))
+            kvv.append(L.fill_rolling_cache(v, win, dtype))
+        else:
+            a = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            y, (conv_s, h_s) = _rec_block(cfg, lp, a)
+            h = h + y
+            convs.append(conv_s.astype(dtype))
+            hs.append(h_s)
+        b = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + L.mlp(lp["mlp"], b)
+
+    h = L.rms_norm(h[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = (h @ params["embed"].T)[:, 0]
+    cache = HybridCache(
+        kv_k=jnp.stack(kvk), kv_v=jnp.stack(kvv),
+        conv=jnp.stack(convs), h=jnp.stack(hs),
+        pos=jnp.asarray(S, jnp.int32),
+    )
+    return logits, cache
+
+
+def decode_step(cfg, params, cache: HybridCache, token, pos):
+    B = token.shape[0]
+    h = jnp.take(params["embed"], token[:, None], axis=0)
+    win = cache.kv_k.shape[2]
+    slot = pos % win
+
+    kvk, kvv, convs, hs = [], [], [], []
+    ia = ir = 0
+    for i, lp in enumerate(params["layers"]):
+        if _layer_kind(cfg, i) == "attn":
+            a = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            q, k, v = L.attn_qkv(lp["attn"], a, cfg,
+                                 jnp.broadcast_to(pos, (B, 1)))
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache.kv_k[ia], k.astype(cache.kv_k.dtype), slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache.kv_v[ia], v.astype(cache.kv_v.dtype), slot, axis=1)
+            kpos = jnp.arange(win)[None, :]
+            age = (slot - kpos) % win
+            abs_pos = pos - age
+            valid = (abs_pos >= 0) & (abs_pos > pos - cfg.window)
+            qg = L._split_gqa(q, cfg.n_kv)
+            o = L._attend_block(
+                qg, jnp.swapaxes(kc, 1, 2), jnp.swapaxes(vc, 1, 2),
+                valid[None, None, None], 1.0 / float(cfg.hd) ** 0.5,
+            )
+            o = L._merge_gqa(o)
+            h = h + o.reshape(B, 1, -1) @ lp["attn"]["wo"]
+            kvk.append(kc)
+            kvv.append(vc)
+            ia += 1
+        else:
+            a = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            y, (conv_s, h_s) = _rec_block(
+                cfg, lp, a,
+                state=(cache.conv[ir], cache.h[ir]), single_step=True,
+            )
+            h = h + y
+            convs.append(conv_s.astype(cache.conv.dtype))
+            hs.append(h_s)
+            ir += 1
+        b = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+        h = h + L.mlp(lp["mlp"], b)
+
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = (h @ params["embed"].T)[:, 0]
+    new_cache = HybridCache(
+        kv_k=jnp.stack(kvk), kv_v=jnp.stack(kvv),
+        conv=jnp.stack(convs), h=jnp.stack(hs), pos=pos + 1,
+    )
+    return logits, new_cache

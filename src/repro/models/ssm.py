@@ -1,0 +1,308 @@
+"""Mamba-2 (SSD — state-space duality) attention-free LM.
+
+The SSD recurrence per head h with per-(token,head) scalar decay a_t:
+
+    H_t = a_t H_{t-1} + (dt_t x_t) B_t^T        H in R^{hd x N}
+    y_t = H_t C_t + D_skip x_t
+
+Training uses the *chunked* dual form (arXiv:2405.21060): within a chunk the
+quadratic masked-decay form runs on the MXU; across chunks a lax.scan carries
+the (B, heads, hd, N) state.  Decoding is the O(1) recurrent update.  This is
+the TPU-native adaptation: chunk size trades VMEM footprint against MXU
+utilisation (see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+
+
+def _d_inner(cfg):
+    return cfg.ssm_heads * cfg.ssm_head_dim
+
+
+def _conv_dim(cfg):
+    return _d_inner(cfg) + 2 * cfg.ssm_state
+
+
+def _init_layer(cfg, key, dtype):
+    D = cfg.d_model
+    di = _d_inner(cfg)
+    N = cfg.ssm_state
+    Hh = cfg.ssm_heads
+    ks = jax.random.split(key, 4)
+    proj_out = 2 * di + 2 * N + Hh  # z, xBC, dt
+    return {
+        "ln": L.init_norm(cfg, dtype),
+        "in_proj": jax.random.normal(ks[0], (D, proj_out), dtype) * D ** -0.5,
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, _conv_dim(cfg)),
+                                    dtype) * 0.1,
+        "conv_b": jnp.zeros((_conv_dim(cfg),), dtype),
+        "A_log": jnp.zeros((Hh,), jnp.float32),
+        "D_skip": jnp.ones((Hh,), jnp.float32),
+        "dt_bias": jnp.zeros((Hh,), jnp.float32),
+        "out_norm": jnp.zeros((di,), dtype),
+        "out_proj": jax.random.normal(ks[2], (di, D), dtype) * di ** -0.5,
+    }
+
+
+def _layer_specs(cfg):
+    return {
+        "ln": P(None),
+        "in_proj": P("data", "model"),
+        "conv_w": P(None, "model"),
+        "conv_b": P("model"),
+        "A_log": P(None),
+        "D_skip": P(None),
+        "dt_bias": P(None),
+        "out_norm": P("model"),
+        "out_proj": P("model", "data"),
+    }
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16):
+    ke, kl, ko = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _init_layer(cfg, k, dtype))(layer_keys)
+    return {
+        "embed": jax.random.normal(ke, (cfg.vocab, cfg.d_model), dtype)
+        * cfg.d_model ** -0.5,
+        "layers": stacked,
+        "ln_f": L.init_norm(cfg, dtype),
+        "unembed": jax.random.normal(ko, (cfg.d_model, cfg.vocab), dtype)
+        * cfg.d_model ** -0.5,
+    }
+
+
+def param_specs(cfg, model_axis: int = 16):
+    from .transformer import _stack_spec
+
+    return {
+        "embed": P("model", "data"),
+        "layers": _stack_spec(_layer_specs(cfg)),
+        "ln_f": P(None),
+        "unembed": P("data", "model"),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv; x (B,S,C), w (W,C), b (C,)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+def _split_proj(cfg, zxbcdt):
+    di, N, Hh = _d_inner(cfg), cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di : 2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N :]
+    return z, xBC, dt
+
+
+def _ssd_chunked(cfg, xh, Bm, Cm, la, state0=None):
+    """Chunked SSD scan.
+
+    xh: (B,S,H,hd) inputs already scaled by dt; Bm/Cm: (B,S,N);
+    la: (B,S,H) log-decay (<= 0).  Returns y (B,S,H,hd), final state
+    (B,H,hd,N).
+    """
+    Bsz, S, Hh, hd = xh.shape
+    N = Bm.shape[-1]
+    Lc = min(cfg.ssm_chunk, S)
+    if S % Lc != 0:
+        Lc = S  # irregular (smoke-test) lengths: single chunk
+    nc = S // Lc
+
+    xc = xh.reshape(Bsz, nc, Lc, Hh, hd)
+    Bc = Bm.reshape(Bsz, nc, Lc, N)
+    Cc = Cm.reshape(Bsz, nc, Lc, N)
+    lac = la.reshape(Bsz, nc, Lc, Hh)
+    cum = jnp.cumsum(lac, axis=2)                       # (B,nc,Lc,H)
+    tot = cum[:, :, -1:]                                # chunk total decay
+
+    # Intra-chunk (quadratic, MXU): scores[t,s] = (C_t.B_s) exp(cum_t-cum_s)
+    CB = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)          # shared across heads
+    dec = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((Lc, Lc), bool))
+    M = jnp.where(tri[None, None, :, :, None], jnp.exp(dec), 0.0)
+    scores = CB[..., None] * M                          # (B,nc,t,s,H)
+    y_intra = jnp.einsum("bctsh,bcshd->bcthd", scores.astype(xc.dtype), xc)
+
+    # Per-chunk state contribution: sum_t exp(tot - cum_t) B_t (x_t)^T
+    right = jnp.exp(tot - cum)                          # (B,nc,Lc,H)
+    S_c = jnp.einsum("bcth,bctn,bcthd->bchdn",
+                     right.astype(xc.dtype), Bc.astype(xc.dtype), xc)
+
+    # Inter-chunk scan carrying state (B,H,hd,N)
+    if state0 is None:
+        state0 = jnp.zeros((Bsz, Hh, hd, N), xh.dtype)
+
+    def step(h_prev, inputs):
+        S_ci, tot_i, Cc_i, cum_i = inputs
+        # y_inter[t] = exp(cum_t) * C_t . h_prev
+        y_int = jnp.einsum("btn,bhdn->bthd", Cc_i.astype(h_prev.dtype), h_prev)
+        y_int = y_int * jnp.exp(cum_i)[..., None].astype(y_int.dtype)
+        h_new = h_prev * jnp.exp(tot_i)[:, 0, :, None, None].astype(h_prev.dtype) + S_ci
+        return h_new, y_int
+
+    # move chunk axis to front for scan
+    xs = (
+        jnp.moveaxis(S_c, 1, 0),
+        jnp.moveaxis(tot, 1, 0),
+        jnp.moveaxis(Cc, 1, 0),
+        jnp.moveaxis(cum, 1, 0),
+    )
+    if nc <= 64:
+        # unrolled chunk loop: costs visible to the HLO cost model
+        state = state0
+        ys = []
+        for i in range(nc):
+            state, yi = step(state, tuple(x[i] for x in xs))
+            ys.append(yi)
+        y_inter = jnp.stack(ys)
+    else:
+        state, y_inter = jax.lax.scan(step, state0, xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)               # (B,nc,Lc,H,hd)
+    y = (y_intra + y_inter).reshape(Bsz, S, Hh, hd)
+    return y, state
+
+
+def _mixer(cfg, lp, x, conv_state=None, ssm_state=None, single_step=False):
+    """The Mamba-2 mixer. x: (B,S,D).  Returns (y, new_conv, new_ssm)."""
+    Bsz, S, D = x.shape
+    di, N, Hh, hd = _d_inner(cfg), cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xBC, dt = _split_proj(cfg, x @ lp["in_proj"])
+
+    if single_step:
+        # conv via carried state: (B, W-1, conv_dim)
+        seq = jnp.concatenate([conv_state, xBC], axis=1)   # (B, W, C)
+        new_conv = seq[:, 1:]
+        xBC = (jnp.einsum("bwc,wc->bc", seq, lp["conv_w"]) + lp["conv_b"])[
+            :, None
+        ]
+    else:
+        xBC = _causal_conv(xBC, lp["conv_w"], lp["conv_b"])
+        new_conv = xBC_last = None
+    xBC = jax.nn.silu(xBC)
+
+    xh = xBC[..., :di].reshape(Bsz, -1, Hh, hd)
+    Bm = xBC[..., di : di + N]
+    Cm = xBC[..., di + N :]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + lp["dt_bias"])   # (B,S,H)
+    la = -jnp.exp(lp["A_log"]) * dt                                 # log decay
+    xdt = xh * dt[..., None].astype(xh.dtype)
+
+    if single_step:
+        a = jnp.exp(la)[:, 0]                                       # (B,H)
+        upd = jnp.einsum("bn,bhd->bhdn", Bm[:, 0].astype(xdt.dtype), xdt[:, 0])
+        new_ssm = ssm_state * a[..., None, None].astype(ssm_state.dtype) + upd
+        y = jnp.einsum("bn,bhdn->bhd", Cm[:, 0].astype(new_ssm.dtype), new_ssm)
+        y = y[:, None]                                              # (B,1,H,hd)
+        y = y + lp["D_skip"][None, None, :, None].astype(y.dtype) * xh
+        state_out = (new_conv, new_ssm)
+    else:
+        y, final_state = _ssd_chunked(cfg, xdt, Bm, Cm, la, state0=ssm_state)
+        y = y + lp["D_skip"][None, None, :, None].astype(y.dtype) * xh
+        state_out = (None, final_state)
+
+    y = y.reshape(Bsz, -1, di)
+    y = L.rms_norm(y * jax.nn.silu(z), lp["out_norm"], cfg.norm_eps)
+    return y @ lp["out_proj"], state_out
+
+
+def forward(cfg, params, tokens, embeds=None, *, remat: bool = True, **_):
+    h = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(h, lp):
+        a = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+        y, _ = _mixer(cfg, lp, a)
+        return h + y, jnp.zeros((), jnp.float32)
+
+    if remat:
+        body = jax.checkpoint(body)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    return h @ params["unembed"], jnp.zeros((), jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# Serving: recurrent state instead of a KV cache
+# ----------------------------------------------------------------------------
+
+class SSMCache(NamedTuple):
+    conv: jax.Array   # (L, B, W-1, conv_dim)
+    ssm: jax.Array    # (L, B, H, hd, N)
+    pos: jax.Array
+
+
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    del max_seq  # state size is O(1) in sequence length
+    return SSMCache(
+        conv=jnp.zeros((cfg.n_layers, batch, cfg.conv_width - 1,
+                        _conv_dim(cfg)), dtype),
+        ssm=jnp.zeros((cfg.n_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim,
+                       cfg.ssm_state), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def cache_specs(cfg, model_axis: int = 16):
+    return SSMCache(
+        conv=P(None, "data", None, "model"),
+        ssm=P(None, "data", "model", None, None),
+        pos=P(),
+    )
+
+
+def prefill(cfg, params, tokens, embeds=None, *, dtype=jnp.bfloat16, **_):
+    """Prompt pass producing the recurrent state."""
+    Bsz, S = tokens.shape
+    h = jnp.take(params["embed"], tokens, axis=0)
+
+    def body(h, lp):
+        a = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+        y, (_, ssm_state) = _mixer(cfg, lp, a)
+        # conv tail state: last W-1 pre-activation conv inputs
+        z, xBC, dt = _split_proj(cfg, a @ lp["in_proj"])
+        conv_tail = xBC[:, -(cfg.conv_width - 1):].astype(dtype)
+        return h + y, (conv_tail, ssm_state)
+
+    h, (convs, ssms) = jax.lax.scan(body, h, params["layers"])
+    h = L.rms_norm(h[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = (h @ params["unembed"])[:, 0]
+    return logits, SSMCache(conv=convs, ssm=ssms,
+                            pos=jnp.asarray(S, jnp.int32))
+
+
+def decode_step(cfg, params, cache: SSMCache, token, pos):
+    Bsz = token.shape[0]
+    h = jnp.take(params["embed"], token[:, None], axis=0)
+
+    def body(h, lp_and_state):
+        lp, conv, ssm = lp_and_state
+        a = L.rms_norm(h, lp["ln"], cfg.norm_eps)
+        y, (new_conv, new_ssm) = _mixer(
+            cfg, lp, a, conv_state=conv.astype(a.dtype), ssm_state=ssm,
+            single_step=True,
+        )
+        # the f32 ssm state must not promote the bf16 residual stream
+        return h + y.astype(h.dtype), (new_conv.astype(conv.dtype), new_ssm)
+
+    h, (convs, ssms) = jax.lax.scan(
+        body, h, (params["layers"], cache.conv, cache.ssm)
+    )
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    logits = (h @ params["unembed"])[:, 0]
+    return logits, SSMCache(conv=convs, ssm=ssms, pos=pos + 1)

@@ -1,0 +1,272 @@
+"""Decoder-only transformer LM covering the dense / moe / vlm families.
+
+Pure functions over dict pytrees.  Layers are scan-stacked (one compiled
+layer body regardless of depth — essential for the 126-layer 405B dry-run).
+
+Public surface (used by launch/ and tests):
+    init_params(cfg, key, dtype)        -> params pytree
+    param_specs(cfg, model_axis)        -> same-structure PartitionSpec tree
+    forward(cfg, params, tokens, embeds=None)       -> logits (train path)
+    prefill(cfg, params, tokens, embeds=None)       -> (last_logits, cache)
+    init_cache(cfg, batch, max_seq, dtype)          -> cache pytree
+    cache_specs(cfg, model_axis)                    -> spec tree for cache
+    decode_step(cfg, params, cache, token, pos)     -> (logits, cache)
+
+VLM / audio variants feed precomputed frontend embeddings via ``embeds``
+(B, F, D), prepended to the token embeddings (the modality frontend itself is
+stubbed per the assignment).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import layers as L
+
+
+# ----------------------------------------------------------------------------
+# Params
+# ----------------------------------------------------------------------------
+
+def _init_layer(cfg, key, dtype):
+    ka, km = jax.random.split(key)
+    p = {
+        "ln1": L.init_norm(cfg, dtype),
+        "attn": L.init_attn(ka, cfg, dtype),
+        "ln2": L.init_norm(cfg, dtype),
+    }
+    if cfg.moe is not None:
+        p["moe"] = L.init_moe(km, cfg, dtype)
+    else:
+        p["mlp"] = L.init_mlp(km, cfg, dtype)
+    return p
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16):
+    ke, kl, ko = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: _init_layer(cfg, k, dtype))(layer_keys)
+    params = {
+        "embed": jax.random.normal(ke, (cfg.vocab, cfg.d_model), dtype)
+        * cfg.d_model ** -0.5,
+        "layers": stacked,
+        "ln_f": L.init_norm(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = (
+            jax.random.normal(ko, (cfg.d_model, cfg.vocab), dtype)
+            * cfg.d_model ** -0.5
+        )
+    return params
+
+
+def _layer_specs(cfg, model_axis):
+    sp = {
+        "ln1": P(None),
+        "attn": L.specs_attn(cfg),
+        "ln2": P(None),
+    }
+    if cfg.moe is not None:
+        sp["moe"] = L.specs_moe(cfg, model_axis)
+    else:
+        sp["mlp"] = L.specs_mlp(cfg)
+    return sp
+
+
+def _stack_spec(spec_tree):
+    """Prepend the scan (layer) axis (unsharded) to every leaf spec."""
+    return jax.tree.map(
+        lambda s: P(None, *s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def param_specs(cfg, model_axis: int = 16):
+    sp = {
+        "embed": P("model", "data"),
+        "layers": _stack_spec(_layer_specs(cfg, model_axis)),
+        "ln_f": P(None),
+    }
+    if not cfg.tie_embeddings:
+        sp["unembed"] = P("data", "model")
+    return sp
+
+
+# ----------------------------------------------------------------------------
+# Forward (train / prefill)
+# ----------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, tokens, embeds):
+    h = jnp.take(params["embed"], tokens, axis=0)
+    if embeds is not None:
+        h = jnp.concatenate([embeds.astype(h.dtype), h], axis=1)
+    return h
+
+
+def _layer_fwd(cfg, lp, h, positions, q_chunk):
+    a = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+    q, k, v = L.attn_qkv(lp["attn"], a, cfg, positions)
+    o = L.causal_attention(q, k, v, window=cfg.window, q_chunk=q_chunk)
+    B, S, H, hd = o.shape
+    h = h + o.reshape(B, S, H * hd) @ lp["attn"]["wo"]
+    b = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        f, aux = L.moe_ffn(lp["moe"], b, cfg)
+    else:
+        f, aux = L.mlp(lp["mlp"], b), jnp.zeros((), jnp.float32)
+    return h + f, aux
+
+
+def forward(cfg, params, tokens, embeds=None, *, q_chunk: int = 512,
+            remat: bool = True, remat_policy: str = "full"):
+    """Training forward. Returns (logits, moe_aux).
+
+    remat_policy: "full" (recompute everything in the backward) or
+    "dots" (jax.checkpoint_policies.checkpoint_dots — matmul outputs are
+    saved, elementwise recomputed; trades HBM residency for ~1/3 less
+    recompute, see EXPERIMENTS.md §Perf llama3-405b iteration).
+    """
+    h = _embed_inputs(cfg, params, tokens, embeds)
+    B, S, D = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    qc = min(q_chunk, S)
+
+    def body(h, lp):
+        out, aux = _layer_fwd(cfg, lp, h, positions, qc)
+        return out, aux
+
+    if remat:
+        policy = (jax.checkpoint_policies.checkpoint_dots
+                  if remat_policy == "dots" else None)
+        body = jax.checkpoint(body, policy=policy)
+    h, auxs = jax.lax.scan(body, h, params["layers"])
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    unembed = (
+        params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    )
+    logits = h @ unembed
+    return logits, jnp.sum(auxs)
+
+
+# ----------------------------------------------------------------------------
+# KV cache serving path
+# ----------------------------------------------------------------------------
+
+class Cache(NamedTuple):
+    k: jax.Array  # (n_layers, B, S_max, K, hd)
+    v: jax.Array
+    pos: jax.Array  # scalar int32 — tokens already in cache
+
+
+def init_cache(cfg, batch, max_seq, dtype=jnp.bfloat16):
+    eff_seq = max_seq if cfg.window is None else min(max_seq, cfg.window)
+    shape = (cfg.n_layers, batch, eff_seq, cfg.n_kv, cfg.hd)
+    return Cache(
+        k=jnp.zeros(shape, dtype),
+        v=jnp.zeros(shape, dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def kv_spec(cfg, model_axis: int = 16):
+    """Shard kv heads over model if divisible, else shard head_dim."""
+    K, hd = cfg.n_kv, cfg.hd
+    if K % model_axis == 0:
+        return P(None, "data", None, "model", None)
+    if hd % model_axis == 0:
+        return P(None, "data", None, None, "model")
+    return P(None, "data", None, None, None)
+
+
+def cache_specs(cfg, model_axis: int = 16):
+    s = kv_spec(cfg, model_axis)
+    return Cache(k=s, v=s, pos=P())
+
+
+def prefill(cfg, params, tokens, embeds=None, *, q_chunk: int = 512,
+            cache_len: Optional[int] = None, dtype=jnp.bfloat16):
+    """Run the prompt through the model, materialising the KV cache."""
+    h = _embed_inputs(cfg, params, tokens, embeds)
+    B, S, D = h.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    qc = min(q_chunk, S)
+    C = cache_len or S
+    # without a window the cache must hold the whole history (S includes any
+    # prepended frontend embeddings)
+    eff_C = max(C, S) if cfg.window is None else min(C, cfg.window)
+
+    def body(h, lp):
+        a = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["attn"], a, cfg, positions)
+        o = L.causal_attention(q, k, v, window=cfg.window, q_chunk=qc)
+        hh = h + o.reshape(B, S, -1) @ lp["attn"]["wo"]
+        b = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            f, _ = L.moe_ffn(lp["moe"], b, cfg)
+        else:
+            f = L.mlp(lp["mlp"], b)
+        # rolling-layout cache fill (slot == abs_pos %% buffer length)
+        kc = L.fill_rolling_cache(k, eff_C, dtype)
+        vc = L.fill_rolling_cache(v, eff_C, dtype)
+        return hh + f, (kc, vc)
+
+    h, (kcs, vcs) = jax.lax.scan(body, h, params["layers"])
+    h = L.rms_norm(h[:, -1:], params["ln_f"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (h @ unembed)[:, 0]
+    cache = Cache(k=kcs, v=vcs, pos=jnp.asarray(S, jnp.int32))
+    return logits, cache
+
+
+def decode_step(cfg, params, cache: Cache, token, pos):
+    """One-token decode against the KV cache.
+
+    token: (B,) int32; pos: scalar int32 absolute position.
+    For windowed attention the cache is a rolling buffer of size window.
+    """
+    B = token.shape[0]
+    h = jnp.take(params["embed"], token[:, None], axis=0)  # (B, 1, D)
+    positions = jnp.broadcast_to(pos, (B, 1))
+    S_cache = cache.k.shape[2]
+    slot = pos % S_cache if cfg.window is not None else pos
+
+    def body(h, lp_and_cache):
+        lp, kc, vc = lp_and_cache
+        a = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+        q, k, v = L.attn_qkv(lp["attn"], a, cfg, positions)
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, axis=1)
+        # valid-length mask: positions beyond `pos` (or outside the window)
+        # are masked via key positions
+        kpos = jnp.arange(S_cache)[None, :]
+        if cfg.window is not None:
+            # rolling buffer: entry i holds absolute position
+            # pos - ((slot - i) mod S_cache)
+            age = (slot - kpos) % S_cache
+            abs_pos = pos - age
+            valid = (abs_pos >= 0) & (abs_pos > pos - cfg.window)
+        else:
+            valid = kpos <= pos
+        qg = L._split_gqa(q, cfg.n_kv)
+        o = L._attend_block(
+            qg, jnp.swapaxes(kc, 1, 2), jnp.swapaxes(vc, 1, 2),
+            valid[None, None, None], 1.0 / float(cfg.hd) ** 0.5,
+        )
+        o = L._merge_gqa(o)
+        hh = h + o.reshape(B, 1, -1) @ lp["attn"]["wo"]
+        b = L.rms_norm(hh, lp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            f, _ = L.moe_ffn(lp["moe"], b, cfg)
+        else:
+            f = L.mlp(lp["mlp"], b)
+        return hh + f, (kc, vc)
+
+    h, (kcs, vcs) = jax.lax.scan(body, h, (params["layers"], cache.k, cache.v))
+    h = L.rms_norm(h, params["ln_f"], cfg.norm_eps)
+    unembed = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (h @ unembed)[:, 0]
+    return logits, Cache(k=kcs, v=vcs, pos=pos + 1)

@@ -1,0 +1,4 @@
+from . import optimizer, sgl_regularizer
+from .train_step import make_train_step, loss_fn
+
+__all__ = ["optimizer", "sgl_regularizer", "make_train_step", "loss_fn"]

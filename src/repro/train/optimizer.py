@@ -1,0 +1,69 @@
+"""AdamW implemented from scratch (no optax offline).
+
+Moments can be stored in bf16 to halve optimizer HBM (used by the 405B
+config); the update math always runs in f32.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: dict
+    nu: dict
+    count: jax.Array
+
+
+def init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def state_specs(param_specs) -> AdamWState:
+    """Optimizer state shards exactly like the params (ZeRO-1/FSDP)."""
+    from jax.sharding import PartitionSpec as P
+
+    return AdamWState(mu=param_specs, nu=param_specs, count=P())
+
+
+def update(
+    grads,
+    state: AdamWState,
+    params,
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    count = state.count + 1
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m32 / c1
+        vhat = v32 / c2
+        step = mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p.astype(
+            jnp.float32
+        )
+        return (
+            (p.astype(jnp.float32) - lr * step).astype(p.dtype),
+            m32.astype(m.dtype),
+            v32.astype(v.dtype),
+        )
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, AdamWState(mu=new_mu, nu=new_nu, count=count)

@@ -1,0 +1,85 @@
+"""Training step: next-token cross entropy + AdamW (+ optional SGL
+structured-sparsity regularisation with safe screening — the paper's
+technique as a training feature, see train/sgl_regularizer.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as opt
+from . import sgl_regularizer as sglreg
+
+
+def softmax_xent(logits, labels, ignore_below: int = 0):
+    """logits (B, S, V); labels (B, S) int32 (< ignore_below => masked)."""
+    logits32 = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits32, axis=-1)
+    ll = jnp.take_along_axis(
+        logits32, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    mask = (labels >= ignore_below).astype(jnp.float32)
+    loss = jnp.sum((logz - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return loss
+
+
+def loss_fn(api, params, batch, moe_aux_weight: float = 0.01,
+            q_chunk: int = 512):
+    """batch: {"tokens": (B,S) int32, optional "embeds": (B,F,D)}.
+
+    Next-token loss over token positions only (frontend embeddings, if any,
+    occupy the first F positions of the sequence and carry no labels).
+    """
+    tokens = batch["tokens"]
+    embeds = batch.get("embeds")
+    logits, aux = api.forward(params, tokens, embeds, q_chunk=q_chunk)
+    # Decoder-prepended frontends (vlm/audio decoder-only) shift the logit
+    # positions; enc-dec feeds embeds to the encoder, so no offset there.
+    F = 0
+    if embeds is not None and api.cfg.family != "encdec":
+        F = embeds.shape[1]
+    token_logits = logits[:, F:, :]
+    loss = softmax_xent(token_logits[:, :-1], tokens[:, 1:])
+    return loss + moe_aux_weight * aux, (loss, aux)
+
+
+def make_train_step(
+    api,
+    lr: float = 3e-4,
+    weight_decay: float = 0.1,
+    moment_dtype=jnp.float32,
+    sgl_cfg: Optional[sglreg.SGLRegConfig] = None,
+    q_chunk: int = 512,
+):
+    """Returns (init_state, train_step).
+
+    train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+    If ``sgl_cfg`` is given, the SGL two-level prox runs after the AdamW
+    update on the FFN neuron groups (training-time structured sparsity with
+    the paper's machinery).
+    """
+
+    def init_state(params):
+        return opt.init(params, moment_dtype)
+
+    def train_step(params, opt_state, batch):
+        (total, (loss, aux)), grads = jax.value_and_grad(
+            lambda p: loss_fn(api, p, batch, q_chunk=q_chunk), has_aux=True
+        )(params)
+        params, opt_state = opt.update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay
+        )
+        if sgl_cfg is not None:
+            params = sglreg.apply_prox(params, sgl_cfg, lr)
+        gnorm = jnp.sqrt(
+            sum(jnp.vdot(g.astype(jnp.float32), g.astype(jnp.float32))
+                for g in jax.tree.leaves(grads))
+        )
+        metrics = {"loss": loss, "moe_aux": aux, "grad_norm": gnorm,
+                   "total": total}
+        return params, opt_state, metrics
+
+    return init_state, train_step

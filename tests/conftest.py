@@ -1,0 +1,14 @@
+import os
+
+# f64 for the convex-optimization core (paper tolerance 1e-8). The LM model
+# smoke tests use explicit f32/bf16 dtypes and are unaffected. The dry-run
+# does NOT go through this file (it is run as a script, not under pytest).
+os.environ.setdefault("JAX_ENABLE_X64", "1")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,67 @@
+"""SGL + Elastic Net via design augmentation (paper Appendix D)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import lambda_max, make_problem, solve, flatten
+from repro.core.elastic import elastic_objective, make_elastic_problem
+from repro.data.synthetic import make_synthetic
+
+
+@pytest.fixture(scope="module")
+def data():
+    return make_synthetic(n=40, p=120, n_groups=12, gamma1=3, gamma2=3,
+                          seed=7)
+
+
+def test_augmented_solution_minimises_elastic_objective(data):
+    X, y, _, sizes = data
+    tau, lam2 = 0.3, 0.5
+    problem = make_elastic_problem(X, y, sizes, tau=tau, lam2=lam2)
+    lam1 = float(lambda_max(problem)) / 10.0
+    res = solve(problem, lam1, tol=1e-10, rule="gap")
+    beta = np.asarray(flatten(problem, res.beta))
+
+    w = np.sqrt([float(s) for s in sizes])
+    f_star = float(elastic_objective(X, y, beta, tau, w, lam1, lam2, sizes))
+
+    # perturbations cannot decrease a (strongly convex) optimum
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        d = rng.standard_normal(beta.shape) * 1e-3
+        f_pert = float(elastic_objective(X, y, beta + d, tau, w,
+                                         lam1, lam2, sizes))
+        assert f_pert >= f_star - 1e-9
+
+
+def test_ridge_shrinks_coefficients(data):
+    X, y, _, sizes = data
+    tau = 0.3
+    p0 = make_elastic_problem(X, y, sizes, tau=tau, lam2=0.0)
+    lam1 = float(lambda_max(p0)) / 10.0
+    b0 = solve(p0, lam1, tol=1e-8).beta
+    p1 = make_elastic_problem(X, y, sizes, tau=tau, lam2=50.0)
+    b1 = solve(p1, lam1, tol=1e-8).beta
+    assert float(jnp.linalg.norm(b1)) < float(jnp.linalg.norm(b0))
+
+
+def test_lam2_zero_matches_plain_sgl(data):
+    X, y, _, sizes = data
+    tau = 0.3
+    pe = make_elastic_problem(X, y, sizes, tau=tau, lam2=0.0)
+    pp = make_problem(X, y, sizes, tau=tau)
+    lam1 = float(lambda_max(pp)) / 10.0
+    be = solve(pe, lam1, tol=1e-10).beta
+    bp = solve(pp, lam1, tol=1e-10).beta
+    np.testing.assert_allclose(np.asarray(be), np.asarray(bp), atol=1e-6)
+
+
+def test_screening_safe_under_augmentation(data):
+    X, y, _, sizes = data
+    problem = make_elastic_problem(X, y, sizes, tau=0.3, lam2=1.0)
+    lam1 = float(lambda_max(problem)) / 5.0
+    res_g = solve(problem, lam1, tol=1e-10, rule="gap")
+    res_n = solve(problem, lam1, tol=1e-10, rule="none")
+    np.testing.assert_allclose(
+        np.asarray(res_g.beta), np.asarray(res_n.beta), atol=1e-7
+    )

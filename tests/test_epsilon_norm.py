@@ -1,0 +1,133 @@
+"""Unit + property tests for the epsilon-norm machinery (paper Alg. 1, Prop. 9)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import (
+    epsilon_decomposition,
+    epsilon_norm,
+    epsilon_norm_dual,
+    lam,
+    lam_bisect,
+)
+
+
+def residual(x, alpha, R, nu):
+    """Defining equation residual: sum S_{nu a}(x)^2 - (nu R)^2."""
+    return np.sum(np.maximum(np.abs(x) - nu * alpha, 0.0) ** 2) - (nu * R) ** 2
+
+
+class TestLambdaExact:
+    def test_solves_defining_equation(self, rng):
+        for _ in range(50):
+            d = int(rng.integers(1, 64))
+            x = rng.standard_normal(d) * rng.uniform(0.01, 100)
+            alpha = rng.uniform(0.01, 1.0)
+            R = rng.uniform(0.01, 3.0)
+            nu = float(lam(jnp.asarray(x), alpha, R))
+            rel = residual(x, alpha, R, nu) / max((nu * R) ** 2, 1e-30)
+            assert abs(rel) < 1e-10
+
+    def test_special_cases(self, rng):
+        x = rng.standard_normal(9)
+        assert np.isclose(float(lam(jnp.asarray(x), 0.6, 0.0)),
+                          np.abs(x).max() / 0.6)
+        assert np.isclose(float(lam(jnp.asarray(x), 0.0, 0.8)),
+                          np.linalg.norm(x) / 0.8)
+        assert float(lam(jnp.zeros(5), 0.5, 0.5)) == 0.0
+        assert np.isinf(float(lam(jnp.asarray(x), 0.0, 0.0)))
+
+    def test_batched_matches_loop(self, rng):
+        xs = rng.standard_normal((7, 13))
+        alphas = rng.uniform(0.1, 0.9, size=7)
+        Rs = rng.uniform(0.1, 2.0, size=7)
+        batched = np.asarray(lam(jnp.asarray(xs), jnp.asarray(alphas), jnp.asarray(Rs)))
+        single = np.array(
+            [float(lam(jnp.asarray(xs[i]), alphas[i], Rs[i])) for i in range(7)]
+        )
+        np.testing.assert_allclose(batched, single, rtol=1e-12)
+
+    def test_bisection_matches_exact(self, rng):
+        for _ in range(20):
+            d = int(rng.integers(1, 40))
+            x = rng.standard_normal(d)
+            alpha = rng.uniform(0.05, 0.95)
+            R = rng.uniform(0.05, 2.0)
+            a = float(lam(jnp.asarray(x), alpha, R))
+            b = float(lam_bisect(jnp.asarray(x), alpha, R))
+            np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-12)
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    x=hnp.arrays(
+        np.float64,
+        st.integers(1, 32),
+        elements=st.floats(-50, 50, allow_nan=False),
+    ),
+    eps=st.floats(0.01, 0.99),
+)
+def test_property_epsilon_norm_defining_eq(x, eps):
+    nu = float(epsilon_norm(jnp.asarray(x), eps))
+    if np.all(x == 0):
+        assert nu == 0.0
+        return
+    rel = residual(x, 1.0 - eps, eps, nu)
+    assert abs(rel) <= 1e-8 * max((nu * eps) ** 2, 1.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    x=hnp.arrays(np.float64, 16, elements=st.floats(-10, 10, allow_nan=False)),
+    y=hnp.arrays(np.float64, 16, elements=st.floats(-10, 10, allow_nan=False)),
+    eps=st.floats(0.05, 0.95),
+)
+def test_property_holder_inequality(x, y, eps):
+    """|<x,y>| <= ||x||_eps * ||y||_eps^D  (duality, paper Lemma 4)."""
+    ne = float(epsilon_norm(jnp.asarray(x), eps))
+    nd = float(epsilon_norm_dual(jnp.asarray(y), eps))
+    assert abs(float(x @ y)) <= ne * nd * (1 + 1e-9) + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    x=hnp.arrays(np.float64, 24, elements=st.floats(-10, 10, allow_nan=False)),
+    eps=st.floats(0.05, 0.95),
+)
+def test_property_epsilon_decomposition(x, eps):
+    """Lemma 1: x = x_e + x_{1-e}, ||x_e|| = eps*nu, ||x_{1-e}||_inf = (1-eps)*nu."""
+    if np.all(x == 0):
+        return
+    xe, xo, nu = epsilon_decomposition(jnp.asarray(x), eps)
+    nu = float(nu)
+    np.testing.assert_allclose(np.asarray(xe) + np.asarray(xo), x, atol=1e-12)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(xe)), eps * nu,
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(np.abs(np.asarray(xo)).max(), (1 - eps) * nu,
+                               rtol=1e-8, atol=1e-10)
+
+
+def test_norm_properties(rng):
+    """epsilon-norm is a norm: homogeneity + triangle inequality (sampled)."""
+    eps = 0.35
+    for _ in range(20):
+        x = rng.standard_normal(12)
+        y = rng.standard_normal(12)
+        c = rng.uniform(0.1, 5.0)
+        nx = float(epsilon_norm(jnp.asarray(x), eps))
+        ny = float(epsilon_norm(jnp.asarray(y), eps))
+        nxy = float(epsilon_norm(jnp.asarray(x + y), eps))
+        ncx = float(epsilon_norm(jnp.asarray(c * x), eps))
+        assert nxy <= nx + ny + 1e-9
+        np.testing.assert_allclose(ncx, c * nx, rtol=1e-9)
+
+
+def test_interpolates_l2_linf(rng):
+    """eps->1: ||x||_eps -> ||x||; eps->0: -> ||x||_inf."""
+    x = rng.standard_normal(10)
+    n1 = float(epsilon_norm(jnp.asarray(x), 0.999999))
+    n0 = float(epsilon_norm(jnp.asarray(x), 1e-9))
+    np.testing.assert_allclose(n1, np.linalg.norm(x), rtol=1e-4)
+    np.testing.assert_allclose(n0, np.abs(x).max(), rtol=1e-4)

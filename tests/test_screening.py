@@ -1,0 +1,161 @@
+"""Safety and correctness tests for the screening rules (paper Thm 1/2, App C)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    dst3_sphere,
+    dual_scale,
+    duality_gap,
+    dynamic_sphere,
+    gap_sphere,
+    lambda_max,
+    make_problem,
+    screen,
+    sgl_dual_norm,
+    solve,
+    static_sphere,
+)
+from repro.core.sgl import primal, dual
+from repro.data import make_synthetic
+
+
+@pytest.fixture(scope="module")
+def small_problem():
+    X, y, _, sizes = make_synthetic(
+        n=40, p=200, n_groups=25, gamma1=3, gamma2=3, seed=7
+    )
+    return make_problem(X, y, sizes, tau=0.3)
+
+
+@pytest.fixture(scope="module")
+def exact_solutions(small_problem):
+    lmax = float(lambda_max(small_problem))
+    sols = {}
+    for frac in (0.7, 0.3, 0.08):
+        res = solve(small_problem, lmax * frac, tol=1e-11, rule="none",
+                    max_epochs=30_000)
+        sols[frac] = res
+    return lmax, sols
+
+
+def test_dual_scale_is_feasible(small_problem, rng):
+    """Eq. 15 always produces a dual-feasible point."""
+    lmax = float(lambda_max(small_problem))
+    for _ in range(5):
+        beta = jnp.asarray(
+            rng.standard_normal((small_problem.G, small_problem.ng))
+        ) * jnp.asarray(small_problem.feat_mask)
+        resid = small_problem.y - jnp.einsum("ngk,gk->n", small_problem.X, beta)
+        theta = dual_scale(small_problem, resid, 0.4 * lmax)
+        corr = jnp.einsum("ngk,n->gk", small_problem.X, theta)
+        dn = float(sgl_dual_norm(corr, small_problem.tau, small_problem.w))
+        assert dn <= 1.0 + 1e-9
+
+
+def test_gap_sphere_contains_dual_optimum(small_problem, exact_solutions):
+    """Thm 2: theta_hat in B(theta, sqrt(2 gap)/lam) for any feasible theta."""
+    lmax, sols = exact_solutions
+    for frac, res in sols.items():
+        lam_ = lmax * frac
+        theta_hat = res.theta  # converged to gap <= 1e-11
+        # A crude primal iterate far from optimum:
+        beta_crude = res.beta * 0.5
+        resid = small_problem.y - jnp.einsum(
+            "ngk,gk->n", small_problem.X, beta_crude
+        )
+        theta_c = dual_scale(small_problem, resid, lam_)
+        sph = gap_sphere(small_problem, beta_crude, theta_c, lam_)
+        dist = float(jnp.linalg.norm(theta_hat - sph.center))
+        assert dist <= float(sph.radius) + 1e-7
+
+
+@pytest.mark.parametrize("rule", ["gap", "static", "dynamic", "dst3"])
+def test_rules_are_safe(small_problem, exact_solutions, rule):
+    """No variable that is nonzero at the optimum may be screened out."""
+    lmax, sols = exact_solutions
+    for frac, ref in sols.items():
+        lam_ = lmax * frac
+        res = solve(small_problem, lam_, tol=1e-9, rule=rule, lam_max=lmax,
+                    max_epochs=30_000)
+        beta_ref = np.asarray(ref.beta)
+        screened = ~np.asarray(res.feat_active) & np.asarray(
+            small_problem.feat_mask
+        )
+        assert np.all(np.abs(beta_ref[screened]) < 1e-7), (
+            rule, frac, np.abs(beta_ref[screened]).max()
+        )
+        # and the solutions agree
+        np.testing.assert_allclose(
+            np.asarray(res.beta), beta_ref, atol=2e-4
+        )
+
+
+def test_gap_screens_more_than_static_dynamic(small_problem, exact_solutions):
+    """GAP spheres shrink with convergence; baselines don't. At convergence the
+    GAP active set must be no larger than static/dynamic ones."""
+    lmax, _ = exact_solutions
+    lam_ = 0.3 * lmax
+    n_active = {}
+    for rule in ("gap", "static", "dynamic"):
+        res = solve(small_problem, lam_, tol=1e-9, rule=rule, lam_max=lmax,
+                    max_epochs=30_000)
+        n_active[rule] = int(res.feat_active.sum())
+    assert n_active["gap"] <= n_active["static"]
+    assert n_active["gap"] <= n_active["dynamic"]
+
+
+def test_screen_monotone_in_radius(small_problem):
+    """A bigger safe ball can only keep more variables."""
+    lmax = float(lambda_max(small_problem))
+    theta = small_problem.y / lmax
+    from repro.core import Sphere
+    prev_groups, prev_feats = -1, -1
+    for r in (0.5, 0.2, 0.05, 0.0):
+        res = screen(small_problem, Sphere(theta, jnp.asarray(r)))
+        g, f = int(res.group_active.sum()), int(res.feat_active.sum())
+        if prev_groups >= 0:
+            assert g <= prev_groups
+            assert f <= prev_feats
+        prev_groups, prev_feats = g, f
+
+
+def test_lambda_max_is_critical(small_problem):
+    """Remark 2: beta = 0 optimal iff lam >= lambda_max."""
+    lmax = float(lambda_max(small_problem))
+    res_above = solve(small_problem, lmax * 1.001, tol=1e-10, rule="gap")
+    assert float(jnp.abs(res_above.beta).max()) == 0.0
+    res_below = solve(small_problem, lmax * 0.95, tol=1e-10, rule="gap",
+                      max_epochs=30_000)
+    assert float(jnp.abs(res_below.beta).max()) > 0.0
+
+
+def test_weak_duality(small_problem, rng):
+    lmax = float(lambda_max(small_problem))
+    lam_ = 0.4 * lmax
+    for _ in range(5):
+        beta = jnp.asarray(
+            rng.standard_normal((small_problem.G, small_problem.ng))
+        ) * jnp.asarray(small_problem.feat_mask)
+        resid = small_problem.y - jnp.einsum("ngk,gk->n", small_problem.X, beta)
+        theta = dual_scale(small_problem, resid, lam_)
+        assert float(duality_gap(small_problem, beta, theta, lam_)) >= -1e-9
+
+
+def test_tau_limits_lasso_and_group_lasso():
+    """Remark 3: tau=1 is the Lasso, tau=0 the Group-Lasso."""
+    X, y, _, sizes = make_synthetic(n=30, p=80, n_groups=10, gamma1=2,
+                                    gamma2=2, seed=3)
+    prob_lasso = make_problem(X, y, sizes, tau=1.0)
+    lmax = float(lambda_max(prob_lasso))
+    # For tau=1: lambda_max = ||X^T y||_inf
+    np.testing.assert_allclose(lmax, np.abs(X.T @ y).max(), rtol=1e-10)
+
+    prob_gl = make_problem(X, y, sizes, tau=0.0)
+    lmax_gl = float(lambda_max(prob_gl))
+    # For tau=0: lambda_max = max_g ||X_g^T y|| / w_g
+    corr = X.T @ y
+    ng = sizes[0]
+    per_group = np.linalg.norm(corr.reshape(-1, ng), axis=1) / np.sqrt(ng)
+    np.testing.assert_allclose(lmax_gl, per_group.max(), rtol=1e-10)

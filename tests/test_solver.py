@@ -1,0 +1,160 @@
+"""Solver correctness: optimality conditions, reference agreement, warm starts."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    lambda_max,
+    make_problem,
+    primal,
+    sgl_prox,
+    solve,
+    solve_path,
+    lambda_grid,
+)
+from repro.data import make_climate_like, make_synthetic
+
+
+def prox_grad_reference(X, y, sizes, tau, lam_, w=None, iters=30_000):
+    """Plain full-gradient ISTA in numpy — an independent oracle."""
+    n, p = X.shape
+    ng = sizes[0]
+    G = len(sizes)
+    w = np.sqrt(ng) * np.ones(G) if w is None else w
+    L = np.linalg.norm(X, 2) ** 2
+    beta = np.zeros(p)
+    for _ in range(iters):
+        grad = X.T @ (X @ beta - y)
+        z = beta - grad / L
+        z = np.sign(z) * np.maximum(np.abs(z) - tau * lam_ / L, 0.0)
+        zg = z.reshape(G, ng)
+        nrm = np.linalg.norm(zg, axis=1, keepdims=True)
+        scale = np.maximum(1 - ((1 - tau) * w[:, None] * lam_ / L) / np.maximum(nrm, 1e-30), 0)
+        beta = (scale * zg).ravel()
+    return beta
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    X, y, bt, sizes = make_synthetic(n=25, p=60, n_groups=12, gamma1=2,
+                                     gamma2=2, seed=11)
+    return X, y, sizes
+
+
+def test_matches_independent_ista(tiny):
+    X, y, sizes = tiny
+    tau = 0.4
+    prob = make_problem(X, y, sizes, tau=tau)
+    lam_ = 0.2 * float(lambda_max(prob))
+    ref = prox_grad_reference(X, y, sizes, tau, lam_, iters=20_000)
+    res = solve(prob, lam_, tol=1e-12, rule="gap", max_epochs=50_000)
+    ours = np.asarray(res.beta).reshape(-1)[: X.shape[1]]
+    np.testing.assert_allclose(ours, ref, atol=5e-6)
+
+
+def test_fixed_point_of_prox(tiny):
+    """At the optimum, beta = prox(beta - grad/L) per group (Fermat)."""
+    X, y, sizes = tiny
+    prob = make_problem(X, y, sizes, tau=0.25)
+    lam_ = 0.15 * float(lambda_max(prob))
+    res = solve(prob, lam_, tol=1e-12, rule="gap", max_epochs=50_000)
+    beta = res.beta
+    resid = prob.y - jnp.einsum("ngk,gk->n", prob.X, beta)
+    grad = -jnp.einsum("ngk,n->gk", prob.X, resid)
+    step = 1.0 / prob.Lg
+    z = beta - grad * step[:, None]
+    fixed = sgl_prox(z, step, prob.tau, prob.w, lam_)
+    np.testing.assert_allclose(
+        np.asarray(fixed * prob.feat_mask), np.asarray(beta), atol=1e-6
+    )
+
+
+def test_screening_identical_solutions(tiny):
+    X, y, sizes = tiny
+    prob = make_problem(X, y, sizes, tau=0.5)
+    lam_ = 0.1 * float(lambda_max(prob))
+    sols = {}
+    for rule in ("gap", "none", "dynamic"):
+        res = solve(prob, lam_, tol=1e-10, rule=rule, max_epochs=40_000)
+        sols[rule] = np.asarray(res.beta)
+    np.testing.assert_allclose(sols["gap"], sols["none"], atol=1e-5)
+    np.testing.assert_allclose(sols["dynamic"], sols["none"], atol=1e-5)
+
+
+def test_gap_decreases_epochs_vs_no_screening(tiny):
+    """Screening must never *increase* the number of epochs to tolerance."""
+    X, y, sizes = tiny
+    prob = make_problem(X, y, sizes, tau=0.3)
+    lam_ = 0.3 * float(lambda_max(prob))
+    e_gap = solve(prob, lam_, tol=1e-9, rule="gap", max_epochs=40_000).n_epochs
+    e_none = solve(prob, lam_, tol=1e-9, rule="none", max_epochs=40_000).n_epochs
+    assert e_gap <= e_none + 10  # same epoch grid, allow one f_ce round slack
+
+
+def test_path_warm_start_active_fracs():
+    X, y, _, sizes = make_synthetic(n=30, p=200, n_groups=20, gamma1=3,
+                                    gamma2=3, seed=5)
+    prob = make_problem(X, y, sizes, tau=0.2)
+    path = solve_path(prob, T=10, delta=2.0, tol=1e-7)
+    assert np.all(path.gaps <= 1e-7)
+    # active fraction grows (weakly) as lambda decreases (index 0 is
+    # lambda_max where beta=0 converges before any screening round runs)
+    assert path.feat_active_frac[1] <= path.feat_active_frac[-1] + 1e-9
+    # first lambda = lambda_max keeps beta = 0
+    assert float(jnp.abs(path.betas[0]).max()) == 0.0
+
+
+def test_unequal_group_sizes():
+    rng = np.random.default_rng(2)
+    n, sizes = 30, [3, 7, 5, 10, 2, 13]
+    p = sum(sizes)
+    X = rng.standard_normal((n, p))
+    beta = np.zeros(p)
+    beta[3:7] = 2.0
+    y = X @ beta + 0.01 * rng.standard_normal(n)
+    prob = make_problem(X, y, sizes, tau=0.35)
+    lam_ = 0.2 * float(lambda_max(prob))
+    ref_rule_none = solve(prob, lam_, tol=1e-10, rule="none", max_epochs=40_000)
+    res = solve(prob, lam_, tol=1e-10, rule="gap", max_epochs=40_000)
+    np.testing.assert_allclose(
+        np.asarray(res.beta), np.asarray(ref_rule_none.beta), atol=1e-5
+    )
+    screened = ~np.asarray(res.feat_active) & np.asarray(prob.feat_mask)
+    assert np.all(np.abs(np.asarray(ref_rule_none.beta)[screened]) < 1e-8)
+
+
+def test_climate_like_generator_solves():
+    X, y, _, sizes = make_climate_like(n=60, n_lon=6, n_lat=4, seed=1)
+    prob = make_problem(X, y, sizes, tau=0.4)
+    lam_ = 0.3 * float(lambda_max(prob))
+    res = solve(prob, lam_, tol=1e-7, rule="gap", max_epochs=20_000)
+    assert float(res.gap) <= 1e-7
+    assert res.feat_active.sum() < np.asarray(prob.feat_mask).sum()
+
+
+def test_lambda_grid_matches_paper():
+    g = lambda_grid(100.0, T=100, delta=3.0)
+    assert g[0] == 100.0
+    np.testing.assert_allclose(g[-1], 100.0 * 10 ** -3.0)
+    assert len(g) == 100
+
+
+from hypothesis import given, settings, strategies as st
+
+
+@settings(max_examples=8, deadline=None)
+@given(tau=st.floats(0.05, 0.95), lam_frac=st.floats(0.05, 0.5))
+def test_property_gap_rule_never_changes_solution(tau, lam_frac):
+    """Safety as a property: for random (tau, lambda) the GAP-screened
+    solve must land on the same optimum as the unscreened solve."""
+    import numpy as np
+    from repro.core import make_problem, lambda_max, solve
+    from repro.data.synthetic import make_synthetic
+
+    X, y, _, sizes = make_synthetic(n=25, p=60, n_groups=10, gamma1=2,
+                                    gamma2=3, seed=11)
+    problem = make_problem(X, y, sizes, tau=tau)
+    lam = float(lambda_max(problem)) * lam_frac
+    bg = solve(problem, lam, tol=1e-10, rule="gap").beta
+    bn = solve(problem, lam, tol=1e-10, rule="none").beta
+    np.testing.assert_allclose(np.asarray(bg), np.asarray(bn), atol=1e-6)
