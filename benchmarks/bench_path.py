@@ -1,10 +1,17 @@
 """Figure 3b: whole-path computation time on the climate-like dataset as a
-function of the prescribed duality-gap accuracy, GAP rule vs no screening.
+function of the prescribed duality-gap accuracy, GAP rule vs no screening —
+plus the sequential path-engine vs the legacy naive per-lambda loop.
 
 Paper: NCEP/NCAR Reanalysis 1, n=814, p=73577 (groups of 7 variables per
 grid point), delta=2.5, tau*=0.4.  The offline generator reproduces the
 group structure and preprocessing; the default grid is reduced so the
 harness completes in CPU-minutes (``--full`` restores 144x73).
+
+Modes:
+* ``naive``  — the seed loop: warm-started beta only, fresh caches and a
+  full active-set re-derivation at every lambda, f_ce-block epoch counts.
+* ``engine`` — sequential GAP screening before the first epoch of each
+  lambda, carried gather cache, sequential-gap-adaptive early exit.
 """
 from __future__ import annotations
 
@@ -16,6 +23,11 @@ from repro.data.climate import make_climate_like
 
 from .common import emit
 
+MODES = {
+    "naive": dict(sequential=False, check_every=None),
+    "engine": dict(sequential=True, check_every="auto"),
+}
+
 
 def main(n=256, n_lon=16, n_lat=8, T=20, delta=2.5, tau=0.4,
          tols=(1e-4, 1e-6, 1e-8), max_epochs=3000) -> None:
@@ -26,13 +38,22 @@ def main(n=256, n_lon=16, n_lat=8, T=20, delta=2.5, tau=0.4,
 
     for rule in ("gap", "none"):
         for tol in tols:
-            t0 = time.perf_counter()
-            res = solve_path(problem, lambdas=lambdas, tol=tol,
-                             max_epochs=max_epochs, rule=rule)
-            dt = time.perf_counter() - t0
-            case = f"{rule}_tol{tol:g}"
-            emit("path_fig3b", case, "path_seconds", dt)
-            emit("path_fig3b", case, "total_epochs", int(res.epochs.sum()))
+            for mode, kwargs in MODES.items():
+                t0 = time.perf_counter()
+                res = solve_path(problem, lambdas=lambdas, tol=tol,
+                                 max_epochs=max_epochs, rule=rule, **kwargs)
+                dt = time.perf_counter() - t0
+                case = f"{rule}_{mode}_tol{tol:g}"
+                emit("path_fig3b", case, "path_seconds", dt)
+                emit("path_fig3b", case, "total_epochs", int(res.epochs.sum()))
+                emit("path_fig3b", case, "zero_epoch_lambdas",
+                     int((res.epochs == 0).sum()))
+                emit("path_fig3b", case, "gathers", res.n_gathers)
+                if rule == "gap":
+                    emit("path_fig3b", case, "seq_screened_groups",
+                         int(res.seq_screened.sum()))
+                    emit("path_fig3b", case, "dyn_screened_groups",
+                         int(res.dyn_screened.sum()))
 
 
 if __name__ == "__main__":

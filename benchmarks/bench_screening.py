@@ -32,9 +32,13 @@ def run(n=100, p=2000, n_groups=200, T=20, delta=2.0,
     for rule in RULES:
         for tol in tols:
             t0 = time.perf_counter()
+            # Naive-loop mode: Fig 2c compares screening RULES, so every
+            # rule must run under the identical per-lambda work schedule
+            # (the path-engine features are benchmarked in bench_path.py).
             res = solve_path(
                 problem, lambdas=lambdas, tol=tol,
                 max_epochs=max_epochs, rule=rule,
+                sequential=False, check_every=None,
             )
             dt = time.perf_counter() - t0
             case = f"{rule}_tol{tol:g}"

@@ -37,6 +37,11 @@ def main():
         times[rule] = time.perf_counter() - t0
         print(f"rule={rule:5s}: path time {times[rule]:7.2f}s, "
               f"total epochs {int(res.epochs.sum())}")
+        if rule == "gap":
+            print(f"             sequential screen discarded "
+                  f"{int(res.seq_screened.sum())} group certificates, "
+                  f"{int((res.epochs == 0).sum())}/{len(lambdas)} lambdas "
+                  f"needed zero epochs, {res.n_gathers} design gathers")
     print(f"GAP speed-up over no screening: "
           f"{times['none'] / times['gap']:.2f}x")
 

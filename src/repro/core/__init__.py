@@ -28,9 +28,17 @@ from .screening import (
     dynamic_sphere,
     gap_sphere,
     screen,
+    sequential_sphere,
     static_sphere,
 )
-from .solver import SolveResult, bcd_epochs, solve
+from .solver import (
+    SolveCaches,
+    SolveResult,
+    bcd_epochs,
+    resolve_screen_backend,
+    screen_round,
+    solve,
+)
 from .elastic import make_elastic_problem, elastic_objective
 from .path import PathResult, lambda_grid, solve_path
 
@@ -40,8 +48,9 @@ __all__ = [
     "sgl_norm", "sgl_dual_norm", "sgl_prox", "soft_threshold",
     "group_soft_threshold", "epsilon_norm", "epsilon_norm_dual",
     "epsilon_decomposition", "lam", "lam_bisect",
-    "Sphere", "ScreenResult", "gap_sphere", "static_sphere",
-    "dynamic_sphere", "dst3_sphere", "screen",
-    "SolveResult", "PathResult", "bcd_epochs",
+    "Sphere", "ScreenResult", "gap_sphere", "sequential_sphere",
+    "static_sphere", "dynamic_sphere", "dst3_sphere", "screen",
+    "SolveResult", "SolveCaches", "PathResult", "bcd_epochs",
+    "screen_round", "resolve_screen_backend",
     "make_elastic_problem", "elastic_objective", "flatten",
 ]

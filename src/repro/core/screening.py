@@ -34,6 +34,7 @@ __all__ = [
     "ScreenResult",
     "Sphere",
     "gap_sphere",
+    "sequential_sphere",
     "static_sphere",
     "dynamic_sphere",
     "dst3_sphere",
@@ -63,6 +64,24 @@ def gap_sphere(
     """GAP safe sphere (Theorem 2): r = sqrt(2 (P - D) / lambda^2)."""
     gap = jnp.maximum(sgl.duality_gap(problem, beta, theta, lam_), 0.0)
     return Sphere(theta, jnp.sqrt(2.0 * gap) / lam_)
+
+
+def sequential_sphere(
+    problem: SGLProblem, beta_prev: jax.Array, lam_new
+) -> Sphere:
+    """Sequential GAP safe sphere at a *new* lambda on a path (paper §7.1).
+
+    Before any epoch at ``lam_new``, the previous lambda's primal point
+    ``beta_prev`` yields a dual feasible point at the new lambda by residual
+    rescaling (Eq. 15); Theorem 2 then gives a GAP sphere valid at
+    ``lam_new``, so most groups are discarded with zero BCD work.  This is
+    the paper's "sequential" rule; the path engine evaluates the same round
+    through the jitted/Pallas-backed :func:`repro.core.solver.screen_round`
+    and this helper is the reference/one-shot form of it.
+    """
+    resid = problem.y - jnp.einsum("ngk,gk->n", problem.X, beta_prev)
+    theta = sgl.dual_scale(problem, resid, lam_new)
+    return gap_sphere(problem, beta_prev, theta, lam_new)
 
 
 def static_sphere(problem: SGLProblem, lam_, lam_max) -> Sphere:

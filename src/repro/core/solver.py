@@ -19,11 +19,30 @@ lambda path.  Screening certificates are permanent (safe), so active sets
 shrink monotonically.  The full-matrix correlation X^T theta needed for the
 gap/screening round is kept on the *full* problem, exactly as in the paper
 (that cost is amortised by f_ce).
+
+Path-engine hooks (used by :mod:`repro.core.path`):
+
+* :func:`screen_round` is the public resumable-round API — one certified
+  gap + Theorem-1 screening round.  The path engine calls it at a new
+  ``lambda_t`` with the previous lambda's ``beta`` (the paper's *sequential*
+  rule) and hands the result to :func:`solve` as ``first_round`` so the
+  round is not recomputed.
+* the hot correlation ``X^T resid`` and the SGL dual norm inside the round
+  are routed through the Pallas kernels (:mod:`repro.kernels.ops`) when
+  ``screen_backend`` resolves to ``"pallas"`` (the default on TPU).
+* :class:`SolveCaches` carries the compacted gather buffers *across* calls:
+  a path engine passes one instance for the whole lambda path, so
+  consecutive lambdas whose certified active set is unchanged skip the
+  (n x p_active) re-gather and share the jit cache.
+* ``check_every`` controls the granularity of the reduced-gap early-exit
+  inside the jitted inner loop; the path engine uses 1 (check after every
+  BCD pass) so warm-started lambdas stop after exactly the epochs they
+  need instead of a full ``f_ce`` block.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional
+from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
 import jax
@@ -32,8 +51,17 @@ import jax.numpy as jnp
 from . import screening as scr
 from . import sgl
 from .sgl import SGLProblem
+from ..kernels import _util as kernel_util
+from ..kernels import ops as kops
 
-__all__ = ["SolveResult", "solve", "bcd_epochs"]
+__all__ = [
+    "SolveResult",
+    "SolveCaches",
+    "solve",
+    "bcd_epochs",
+    "screen_round",
+    "resolve_screen_backend",
+]
 
 
 class SolveResult(NamedTuple):
@@ -45,6 +73,45 @@ class SolveResult(NamedTuple):
     feat_active: np.ndarray    # (G, ng) final active mask
     gap_history: list
     active_history: list       # [(epoch, n_groups_active, n_feats_active)]
+
+
+class SolveCaches:
+    """Mutable cross-call caches for :func:`solve`.
+
+    Holds the compacted gather buffers keyed on the certified active-group
+    set.  Within one ``solve`` the active set only shrinks, so the gather is
+    redone a handful of times; across a lambda path the previous lambda's
+    active set is usually a subset of the next one's *certified* set, and on
+    dense grids it is frequently identical — passing one ``SolveCaches`` down
+    the whole path (see :func:`repro.core.path.solve_path`) skips those
+    re-gathers entirely and keeps XLA's compile cache warm (same power-of-two
+    bucket shapes).
+
+    Entries are keyed on problem identity + active-set bytes, so sharing an
+    instance across problems degrades to a miss instead of serving stale
+    buffers; one instance per lambda path is the intended use.
+    """
+
+    __slots__ = ("gather_key", "gather_val", "n_gathers", "_problem")
+
+    def __init__(self) -> None:
+        self.gather_key: Optional[bytes] = None
+        self.gather_val = None
+        self.n_gathers: int = 0
+        self._problem: Optional[SGLProblem] = None
+
+    def gather(self, problem: SGLProblem, group_active: np.ndarray):
+        if problem is not self._problem:
+            # A different problem with a byte-identical mask must be a cache
+            # MISS, not silently-served stale buffers.
+            self._problem = problem
+            self.gather_key = None
+        key = group_active.tobytes()
+        if key != self.gather_key:
+            self.gather_val = _gather_static(problem, group_active)
+            self.gather_key = key
+            self.n_gathers += 1
+        return self.gather_val
 
 
 # ----------------------------------------------------------------------------
@@ -101,24 +168,44 @@ def bcd_epochs(
     return beta, resid
 
 
-@functools.partial(jax.jit, static_argnames=())
-def _full_corr(X: jax.Array, v: jax.Array) -> jax.Array:
-    return jnp.einsum("ngk,n->gk", X, v)
+# ----------------------------------------------------------------------------
+# Certified gap + screening round (resumable-round API)
+# ----------------------------------------------------------------------------
+
+def resolve_screen_backend(backend: str) -> str:
+    """Resolve the screening correlation/dual-norm backend.
+
+    ``"auto"`` picks the Pallas kernels on TPU and plain XLA einsums
+    elsewhere (where Pallas would run interpreted).
+    """
+    if backend == "auto":
+        return "pallas" if kernel_util.on_tpu() else "xla"
+    if backend not in ("xla", "pallas"):
+        raise ValueError(f"unknown screen backend: {backend!r}")
+    return backend
 
 
-@functools.partial(jax.jit, static_argnames=("rule",))
+@functools.partial(jax.jit, static_argnames=("rule", "backend"))
 def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
-                  lam_max: jax.Array, rule: str):
+                  lam_max: jax.Array, rule: str, backend: str = "xla"):
     """One fused gap + screening round (single XLA program).
 
     The eager version of this round cost ~50 small dispatches; fusing it is
     what makes screening overhead negligible per round (see EXPERIMENTS.md
     §Perf, solver iteration 1).  Returns (gap, theta, group_act, feat_act);
     for rules that do not screen dynamically the masks are all-true.
+
+    ``backend="pallas"`` computes the hot X^T resid correlation through the
+    fused Pallas matvec kernel and the SGL dual norm through the Pallas
+    bisection kernel (kernels.ops); ``"xla"`` uses plain einsums.
     """
     resid = problem.y - jnp.einsum("ngk,gk->n", problem.X, beta)
-    corr = jnp.einsum("ngk,n->gk", problem.X, resid)
-    dual_norm = sgl.sgl_dual_norm(corr, problem.tau, problem.w)
+    if backend == "pallas":
+        corr = kops.screening_corr_grouped(problem.X, resid)
+        dual_norm = kops.sgl_dual_norm_fused(corr, problem.tau, problem.w)
+    else:
+        corr = jnp.einsum("ngk,n->gk", problem.X, resid)
+        dual_norm = sgl.sgl_dual_norm(corr, problem.tau, problem.w)
     scale = jnp.maximum(lam_, dual_norm)
     theta = resid / scale
     gap = sgl.duality_gap(problem, beta, theta, lam_)
@@ -143,6 +230,45 @@ def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
     return gap, theta, res.group_active, res.feat_active
 
 
+def screen_round(
+    problem: SGLProblem,
+    beta: jax.Array,
+    lam_: float,
+    lam_max: float = 0.0,
+    rule: str = "gap",
+    backend: str = "auto",
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Public resumable-round API: one certified gap + screening round.
+
+    Returns ``(gap, theta, group_active, feat_active)`` — a GAP-sphere
+    certificate valid at ``lam_``.  Calling this at a *new* lambda with the
+    *previous* lambda's ``beta`` is exactly the paper's sequential screening
+    rule; the result can be fed to :func:`solve` as ``first_round`` so the
+    solve starts on the reduced problem with zero duplicated work.
+
+    ``rule="dst3"`` needs the true ``lam_max`` (its sphere divides by it).
+    """
+    if rule == "dst3" and not lam_max > 0.0:
+        raise ValueError("rule='dst3' requires lam_max > 0 (pass lambda_max)")
+    if rule == "static":
+        # The static screen is applied once inside solve(), not per round;
+        # _screen_round would return all-true masks that LOOK like a valid
+        # certificate while screening nothing.
+        raise ValueError(
+            "rule='static' has no per-round certificate; use "
+            "screening.static_sphere + screening.screen, or solve()"
+        )
+    dtype = problem.X.dtype
+    return _screen_round(
+        problem,
+        jnp.asarray(beta, dtype),
+        jnp.asarray(lam_, dtype),
+        jnp.asarray(lam_max, dtype),
+        rule,
+        resolve_screen_backend(backend),
+    )
+
+
 def _bucket(n: int, minimum: int = 8) -> int:
     b = minimum
     while b < n:
@@ -150,10 +276,11 @@ def _bucket(n: int, minimum: int = 8) -> int:
     return b
 
 
-@functools.partial(jax.jit, static_argnames=("f_ce", "k_rounds"))
+@functools.partial(jax.jit, static_argnames=("block_epochs", "max_blocks"))
 def _inner_rounds(Xt, Lg, w, y, beta, feat_active, take, gmask, tau, lam_,
-                  tol, f_ce, k_rounds):
-    """Up to ``k_rounds`` blocks of ``f_ce`` BCD epochs in ONE jitted call.
+                  tol, block_epochs, max_blocks):
+    """Up to ``max_blocks`` blocks of ``block_epochs`` BCD epochs in ONE
+    jitted call.
 
     Between blocks the *reduced-problem* duality gap (dual norm over the
     compacted buffer only) is checked for early exit.  This gap is exact
@@ -161,7 +288,9 @@ def _inner_rounds(Xt, Lg, w, y, beta, feat_active, take, gmask, tau, lam_,
     so it is used ONLY as a work heuristic — the caller always recomputes
     the full-problem gap (paper Eq. 15/Thm 2) before stopping or screening.
     Amortises the full X^T rho correlation and the host sync over
-    ~k_rounds x f_ce epochs instead of f_ce (see EXPERIMENTS.md §Perf).
+    ~max_blocks x block_epochs epochs instead of one block (see
+    EXPERIMENTS.md §Perf).  The path engine runs with ``block_epochs=1`` so
+    a warm-started lambda stops after exactly the passes it needs.
 
     ``take`` may contain padded slots aliasing group 0; the scatter uses a
     masked *delta* with .add so duplicate indices contribute zero and the
@@ -186,12 +315,12 @@ def _inner_rounds(Xt, Lg, w, y, beta, feat_active, take, gmask, tau, lam_,
 
     def cond(c):
         bsub, resid, k, gap = c
-        return (k < k_rounds) & (gap > tol)
+        return (k < max_blocks) & (gap > tol)
 
     def body(c):
         bsub, resid, k, gap = c
         bsub, resid = bcd_epochs(
-            Xt, Lg * gmask, w, fmask, bsub, resid, tau, lam_, f_ce
+            Xt, Lg * gmask, w, fmask, bsub, resid, tau, lam_, block_epochs
         )
         return bsub, resid, k + 1, reduced_gap(bsub, resid)
 
@@ -205,9 +334,10 @@ def _inner_rounds(Xt, Lg, w, y, beta, feat_active, take, gmask, tau, lam_,
 
 def _gather_static(problem: SGLProblem, group_active):
     """Gather the active groups' design slices into a power-of-two padded
-    buffer.  Depends only on the active-group set, so ``solve`` caches the
-    result between rounds (the (n x p_active) copy of X is the expensive
-    part); per-round masks are applied by the caller.
+    buffer.  Depends only on the active-group set, so :class:`SolveCaches`
+    caches the result between rounds — and between lambdas on a path — (the
+    (n x p_active) copy of X is the expensive part); per-round masks are
+    applied by the caller.
 
     Masked/padded groups are *not* zeroed in Xt: ``bcd_epochs`` masks their
     updates (feat_mask, live) so their columns never contribute.
@@ -241,6 +371,10 @@ def solve(
     lam_max: Optional[float] = None,
     compact: bool = True,
     inner_rounds: int = 5,
+    check_every: Optional[int] = None,
+    first_round: Optional[tuple] = None,
+    caches: Optional[SolveCaches] = None,
+    screen_backend: str = "auto",
 ) -> SolveResult:
     """Solve one SGL instance at regularisation ``lam_``.
 
@@ -249,11 +383,59 @@ def solve(
     ``inner_rounds``: how many f_ce-epoch blocks run inside one jitted
     call between certified (full-problem) gap/screening rounds; the inner
     early-exit uses the reduced-problem gap, so safety is unaffected.
+    ``check_every``: epochs between reduced-gap early-exit checks inside
+    the jitted inner loop (default ``f_ce``, i.e. one check per block; the
+    path engine passes 1).  At most ``inner_rounds * f_ce`` epochs run
+    between certified full rounds (fewer when ``check_every`` does not
+    divide that product — the block count rounds down).
+    With ``compact=False`` the solver runs plain ``f_ce``-epoch blocks and
+    both ``inner_rounds`` and ``check_every`` are ignored.
+
+    Path-engine parameters:
+
+    * ``first_round``: a ``(gap, theta, group_active, feat_active)`` tuple
+      from :func:`screen_round` evaluated at (``beta0``, ``lam_``);
+      consumed as the first certified round instead of recomputing it.
+      Incompatible with ``rule="static"`` (the static screen re-masks
+      ``beta0``, invalidating the certificate) — a ``ValueError`` is
+      raised.
+    * ``caches``: a :class:`SolveCaches` shared across calls so the
+      compacted gather survives between lambdas.
+    * ``screen_backend``: "auto" | "xla" | "pallas" — correlation/dual-norm
+      backend for the certified rounds (see :func:`resolve_screen_backend`).
     """
+    if first_round is not None and rule == "static":
+        # The static screen re-masks (and zeroes parts of) beta0 before the
+        # loop, so an injected certificate evaluated at the original beta0
+        # would no longer certify the beta actually being solved.
+        raise ValueError(
+            "first_round certifies beta0 as passed; it cannot be combined "
+            "with rule='static'"
+        )
+    if first_round is not None and beta0 is None:
+        # Without beta0 the solve starts from zeros, which the injected
+        # certificate was (almost certainly) not evaluated at — if its gap
+        # were <= tol the zeros would be returned as a "converged" solution.
+        raise ValueError(
+            "first_round requires the beta0 it was evaluated at"
+        )
+    if isinstance(check_every, str):
+        raise ValueError(
+            "check_every must be an int or None for solve(); "
+            "'auto' scheduling exists only on solve_path()"
+        )
     G, ng = problem.G, problem.ng
     dtype = problem.X.dtype
     beta = jnp.zeros((G, ng), dtype) if beta0 is None else jnp.asarray(beta0, dtype)
     lam_j = jnp.asarray(lam_, dtype)
+    backend = resolve_screen_backend(screen_backend)
+    if caches is None:
+        caches = SolveCaches()
+    check = f_ce if check_every is None else max(1, int(check_every))
+    # Never exceed the certified-round cadence, and keep degenerate inputs
+    # (f_ce or inner_rounds <= 0) from collapsing the block size to 0.
+    check = max(1, min(check, f_ce * inner_rounds))
+    max_blocks = max(1, (f_ce * inner_rounds) // check)
 
     if lam_max is None and rule in ("static", "dst3"):
         lam_max = float(sgl.lambda_max(problem))
@@ -272,25 +454,37 @@ def solve(
     gap_history: list = []
     active_history: list = []
     epochs_done = 0
-    theta = problem.y / jnp.maximum(lam_j, sgl.lambda_max(problem))
+    # Placeholder dual point (overwritten by the first certified round);
+    # reuse the caller-provided lam_max instead of recomputing the O(n p)
+    # dual norm of X^T y once per lambda on a path.
+    if lam_max is not None:
+        theta = problem.y / max(float(lam_), float(lam_max))
+    else:
+        theta = problem.y / jnp.maximum(lam_j, sgl.lambda_max(problem))
     gap = jnp.inf
-
-    # Gather cache: the (n x p_active) copy of X is only re-made when the
-    # active-group set actually changes (it shrinks monotonically, so this
-    # amortises to a handful of gathers per lambda).
-    gather_key = None
-    gather_val = None
+    round_res = first_round
 
     while epochs_done < max_epochs:
         # ---- fused gap + screening round (one XLA program; paper does this
-        # every f_ce passes on the full problem) ----
-        lam_max_j = jnp.asarray(lam_max if lam_max is not None else 0.0, dtype)
-        gap, theta, g_act, f_act = _screen_round(
-            problem, beta, lam_j, lam_max_j, rule
-        )
+        # every f_ce passes on the full problem).  The first round may be
+        # injected by the path engine (sequential screening). ----
+        if round_res is None:
+            lam_max_j = jnp.asarray(
+                lam_max if lam_max is not None else 0.0, dtype
+            )
+            round_res = _screen_round(
+                problem, beta, lam_j, lam_max_j, rule, backend
+            )
+        gap, theta, g_act, f_act = round_res
+        round_res = None
         gap_history.append((epochs_done, float(gap)))
 
         if float(gap) <= tol:
+            # Do NOT apply this round's masks: at convergence the rounded
+            # gap can under-estimate the true gap (to exactly 0 in f32), so
+            # its sphere radius is not reliable, and zeroing beta here would
+            # invalidate the gap just reported.  The returned active sets
+            # reflect the last screen actually applied.
             break
 
         if rule in ("gap", "dynamic", "dst3"):
@@ -303,19 +497,15 @@ def solve(
             (epochs_done, int(group_active.sum()), int(feat_active.sum()))
         )
 
-        # ---- up to inner_rounds x f_ce BCD epochs in one jitted call ----
+        # ---- up to max_blocks x check BCD epochs in one jitted call ----
         if compact:
-            key = group_active.tobytes()
-            if key != gather_key:
-                gather_val = _gather_static(problem, group_active)
-                gather_key = key
-            idx, take, Xt, Lg, w, gmask = gather_val
+            idx, take, Xt, Lg, w, gmask = caches.gather(problem, group_active)
             beta, k_done, _ = _inner_rounds(
                 Xt, Lg, w, problem.y, beta, jnp.asarray(feat_active),
                 take, gmask, problem.tau, lam_j, jnp.asarray(tol, dtype),
-                f_ce, inner_rounds
+                check, max_blocks
             )
-            epochs_done += f_ce * (int(k_done) - 1)  # +f_ce added below
+            epochs_done += check * int(k_done)
         else:
             Xt = jnp.transpose(problem.X, (1, 0, 2))
             fmask = jnp.asarray(feat_active, dtype)
@@ -324,7 +514,7 @@ def solve(
             beta, resid = bcd_epochs(
                 Xt, Lg, problem.w, fmask, beta, resid, problem.tau, lam_j, f_ce
             )
-        epochs_done += f_ce
+            epochs_done += f_ce
 
     return SolveResult(
         beta=beta,

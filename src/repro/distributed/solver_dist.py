@@ -26,7 +26,23 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+import inspect
+
+try:                                     # jax >= 0.5 exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                      # jax 0.4.x: experimental home
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    # Older spelling of the replication check is check_rep, regardless of
+    # where the function is exported from.
+    def shard_map(f, *, check_vma=None, **kwargs):
+        if check_vma is not None:
+            kwargs["check_rep"] = check_vma
+        return _shard_map(f, **kwargs)
+
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.sgl import epsilons, group_weight_total, soft_threshold

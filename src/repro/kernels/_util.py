@@ -1,0 +1,19 @@
+"""Shared backend predicates for the Pallas kernels.
+
+Leaf module (imports nothing from this package) so both the kernel entry
+points and their dispatch wrappers in ops.py — and the solver — can use one
+spelling of the "are we on TPU" test.  When Pallas gains another compiled
+backend, this is the only place to update.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode default: compile on TPU, interpret elsewhere."""
+    return not on_tpu()

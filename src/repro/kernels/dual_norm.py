@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._util import default_interpret
+
 
 def _dual_norm_kernel(x_ref, alpha_ref, R_ref, out_ref, *, n_iter: int):
     ax = jnp.abs(x_ref[...])              # (bg, ng)
@@ -56,8 +58,10 @@ def dual_norm_pallas(
     *,
     n_iter: int = 64,
     block_g: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
     G, ng = x.shape
     assert G % block_g == 0, (G, block_g)
     grid = (G // block_g,)

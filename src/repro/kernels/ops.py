@@ -1,7 +1,8 @@
 """Jitted dispatch wrappers for the Pallas kernels.
 
-Handles padding to TPU-aligned block shapes, chooses interpret mode off-TPU,
-and exposes the kernels with the grouped-layout signatures the solver uses.
+Handles padding to TPU-aligned block shapes and exposes the kernels with the
+grouped-layout signatures the solver uses.  Interpret-vs-compile policy lives
+in kernels/_util.py (the kernel entry points default to it).
 """
 from __future__ import annotations
 
@@ -13,10 +14,6 @@ import jax.numpy as jnp
 from .dual_norm import dual_norm_pallas
 from .screening_scores import screening_scores_pallas
 from .sgl_prox import sgl_prox_pallas
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int, value=0.0) -> jax.Array:
@@ -37,9 +34,7 @@ def sgl_prox(beta, step, w, tau: float, lam: float, block_g: int = 256):
     b = _pad_to(beta, 0, bg)
     s = _pad_to(step, 0, bg, value=1.0)
     ww = _pad_to(w, 0, bg, value=1.0)
-    out = sgl_prox_pallas(
-        b, s, ww, tau, lam, block_g=bg, interpret=not _on_tpu()
-    )
+    out = sgl_prox_pallas(b, s, ww, tau, lam, block_g=bg)
     return out[:G]
 
 
@@ -51,8 +46,7 @@ def dual_norm_groups(x, alpha, R, n_iter: int = 64, block_g: int = 256):
     xp = _pad_to(x, 0, bg)
     ap = _pad_to(alpha, 0, bg, value=1.0)
     Rp = _pad_to(R, 0, bg, value=1.0)
-    out = dual_norm_pallas(xp, ap, Rp, n_iter=n_iter, block_g=bg,
-                           interpret=not _on_tpu())
+    out = dual_norm_pallas(xp, ap, Rp, n_iter=n_iter, block_g=bg)
     return out[:G]
 
 
@@ -66,9 +60,24 @@ def screening_scores(Xt, theta, tau: float, block_p: int = 256,
     Xp = _pad_to(_pad_to(Xt, 0, bp), 1, bn)
     tp = _pad_to(theta, 0, bn)
     corr, st2 = screening_scores_pallas(
-        Xp, tp, tau, block_p=bp, block_n=bn, interpret=not _on_tpu()
+        Xp, tp, tau, block_p=bp, block_n=bn
     )
     return corr[:p], st2[:p]
+
+
+def screening_corr_grouped(X: jax.Array, v: jax.Array) -> jax.Array:
+    """Grouped correlation X^T v via the fused Pallas matvec kernel.
+
+    X (n, G, ng) zero-padded grouped design, v (n,) -> (G, ng).  Padded
+    feature columns are zero in X, so their correlations come out zero and
+    stay inert downstream — same contract as the einsum path.  This is the
+    hot half of the solver's certified screening round (solver.screen_round
+    with backend="pallas").
+    """
+    n, G, ng = X.shape
+    Xt = X.reshape(n, G * ng).T                        # (p, n), free reshape
+    corr, _ = screening_scores(Xt, v, tau=0.0)         # st2 unused here
+    return corr.reshape(G, ng)
 
 
 def sgl_dual_norm_fused(corr_grouped, tau, w, n_iter: int = 64):
@@ -98,7 +107,5 @@ def sgl_prox_batched(beta, lam_b, L, w, tau: float, block_g: int = 256):
     b = _pad_to(flat, 0, bg)
     s = _pad_to(step, 0, bg, value=1.0)
     ww = _pad_to(w_flat, 0, bg, value=1.0)
-    out = sgl_prox_pallas(
-        b, s, ww, tau, 1.0, block_g=bg, interpret=not _on_tpu()
-    )
+    out = sgl_prox_pallas(b, s, ww, tau, 1.0, block_g=bg)
     return out[: B * G].reshape(B, G, ng)

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._util import default_interpret
+
 
 def _screening_kernel(xt_ref, theta_ref, corr_ref, st2_ref, *, tau: float, nk: int):
     k = pl.program_id(1)
@@ -45,8 +47,10 @@ def screening_scores_pallas(
     *,
     block_p: int = 256,
     block_n: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
+    if interpret is None:
+        interpret = default_interpret()
     p, n = Xt.shape
     assert p % block_p == 0 and n % block_n == 0, (p, n, block_p, block_n)
     nk = n // block_n

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ._util import default_interpret
+
 
 def _sgl_prox_kernel(beta_ref, step_ref, w_ref, out_ref, *, tau: float, lam: float):
     b = beta_ref[...]                     # (bg, ng)
@@ -41,8 +43,10 @@ def sgl_prox_pallas(
     lam: float,
     *,
     block_g: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    if interpret is None:
+        interpret = default_interpret()
     G, ng = beta.shape
     assert G % block_g == 0, (G, block_g)
     grid = (G // block_g,)

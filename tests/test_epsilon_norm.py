@@ -1,14 +1,13 @@
-"""Unit + property tests for the epsilon-norm machinery (paper Alg. 1, Prop. 9)."""
+"""Unit tests for the epsilon-norm machinery (paper Alg. 1, Prop. 9).
+
+Hypothesis-based property tests live in test_properties.py so this module
+collects and runs in environments without hypothesis installed.
+"""
 import numpy as np
 import jax.numpy as jnp
-import pytest
-from hypothesis import given, settings, strategies as st
-import hypothesis.extra.numpy as hnp
 
 from repro.core import (
-    epsilon_decomposition,
     epsilon_norm,
-    epsilon_norm_dual,
     lam,
     lam_bisect,
 )
@@ -58,55 +57,6 @@ class TestLambdaExact:
             a = float(lam(jnp.asarray(x), alpha, R))
             b = float(lam_bisect(jnp.asarray(x), alpha, R))
             np.testing.assert_allclose(a, b, rtol=1e-9, atol=1e-12)
-
-
-@settings(max_examples=80, deadline=None)
-@given(
-    x=hnp.arrays(
-        np.float64,
-        st.integers(1, 32),
-        elements=st.floats(-50, 50, allow_nan=False),
-    ),
-    eps=st.floats(0.01, 0.99),
-)
-def test_property_epsilon_norm_defining_eq(x, eps):
-    nu = float(epsilon_norm(jnp.asarray(x), eps))
-    if np.all(x == 0):
-        assert nu == 0.0
-        return
-    rel = residual(x, 1.0 - eps, eps, nu)
-    assert abs(rel) <= 1e-8 * max((nu * eps) ** 2, 1.0)
-
-
-@settings(max_examples=60, deadline=None)
-@given(
-    x=hnp.arrays(np.float64, 16, elements=st.floats(-10, 10, allow_nan=False)),
-    y=hnp.arrays(np.float64, 16, elements=st.floats(-10, 10, allow_nan=False)),
-    eps=st.floats(0.05, 0.95),
-)
-def test_property_holder_inequality(x, y, eps):
-    """|<x,y>| <= ||x||_eps * ||y||_eps^D  (duality, paper Lemma 4)."""
-    ne = float(epsilon_norm(jnp.asarray(x), eps))
-    nd = float(epsilon_norm_dual(jnp.asarray(y), eps))
-    assert abs(float(x @ y)) <= ne * nd * (1 + 1e-9) + 1e-9
-
-
-@settings(max_examples=40, deadline=None)
-@given(
-    x=hnp.arrays(np.float64, 24, elements=st.floats(-10, 10, allow_nan=False)),
-    eps=st.floats(0.05, 0.95),
-)
-def test_property_epsilon_decomposition(x, eps):
-    """Lemma 1: x = x_e + x_{1-e}, ||x_e|| = eps*nu, ||x_{1-e}||_inf = (1-eps)*nu."""
-    if np.all(x == 0):
-        return
-    xe, xo, nu = epsilon_decomposition(jnp.asarray(x), eps)
-    nu = float(nu)
-    np.testing.assert_allclose(np.asarray(xe) + np.asarray(xo), x, atol=1e-12)
-    np.testing.assert_allclose(np.linalg.norm(np.asarray(xe)), eps * nu,
-                               rtol=1e-8, atol=1e-10)
-    np.testing.assert_allclose(np.abs(np.asarray(xo)).max(), (1 - eps) * nu,
-                               rtol=1e-8, atol=1e-10)
 
 
 def test_norm_properties(rng):

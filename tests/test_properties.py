@@ -1,0 +1,92 @@
+"""Hypothesis property tests (epsilon-norm laws, screening safety).
+
+Split out of test_epsilon_norm.py / test_solver.py so the rest of the suite
+collects and runs in environments without hypothesis installed; this module
+skips cleanly when it is absent.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st
+import hypothesis.extra.numpy as hnp
+
+from repro.core import (
+    epsilon_decomposition,
+    epsilon_norm,
+    epsilon_norm_dual,
+    lambda_max,
+    make_problem,
+    solve,
+)
+from repro.data.synthetic import make_synthetic
+
+
+def residual(x, alpha, R, nu):
+    """Defining equation residual: sum S_{nu a}(x)^2 - (nu R)^2."""
+    return np.sum(np.maximum(np.abs(x) - nu * alpha, 0.0) ** 2) - (nu * R) ** 2
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    x=hnp.arrays(
+        np.float64,
+        st.integers(1, 32),
+        elements=st.floats(-50, 50, allow_nan=False),
+    ),
+    eps=st.floats(0.01, 0.99),
+)
+def test_property_epsilon_norm_defining_eq(x, eps):
+    nu = float(epsilon_norm(jnp.asarray(x), eps))
+    if np.all(x == 0):
+        assert nu == 0.0
+        return
+    rel = residual(x, 1.0 - eps, eps, nu)
+    assert abs(rel) <= 1e-8 * max((nu * eps) ** 2, 1.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    x=hnp.arrays(np.float64, 16, elements=st.floats(-10, 10, allow_nan=False)),
+    y=hnp.arrays(np.float64, 16, elements=st.floats(-10, 10, allow_nan=False)),
+    eps=st.floats(0.05, 0.95),
+)
+def test_property_holder_inequality(x, y, eps):
+    """|<x,y>| <= ||x||_eps * ||y||_eps^D  (duality, paper Lemma 4)."""
+    ne = float(epsilon_norm(jnp.asarray(x), eps))
+    nd = float(epsilon_norm_dual(jnp.asarray(y), eps))
+    assert abs(float(x @ y)) <= ne * nd * (1 + 1e-9) + 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    x=hnp.arrays(np.float64, 24, elements=st.floats(-10, 10, allow_nan=False)),
+    eps=st.floats(0.05, 0.95),
+)
+def test_property_epsilon_decomposition(x, eps):
+    """Lemma 1: x = x_e + x_{1-e}, ||x_e|| = eps*nu, ||x_{1-e}||_inf = (1-eps)*nu."""
+    if np.all(x == 0):
+        return
+    xe, xo, nu = epsilon_decomposition(jnp.asarray(x), eps)
+    nu = float(nu)
+    np.testing.assert_allclose(np.asarray(xe) + np.asarray(xo), x, atol=1e-12)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(xe)), eps * nu,
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(np.abs(np.asarray(xo)).max(), (1 - eps) * nu,
+                               rtol=1e-8, atol=1e-10)
+
+
+@settings(max_examples=8, deadline=None)
+@given(tau=st.floats(0.05, 0.95), lam_frac=st.floats(0.05, 0.5))
+def test_property_gap_rule_never_changes_solution(tau, lam_frac):
+    """Safety as a property: for random (tau, lambda) the GAP-screened
+    solve must land on the same optimum as the unscreened solve."""
+    X, y, _, sizes = make_synthetic(n=25, p=60, n_groups=10, gamma1=2,
+                                    gamma2=3, seed=11)
+    problem = make_problem(X, y, sizes, tau=tau)
+    lam = float(lambda_max(problem)) * lam_frac
+    bg = solve(problem, lam, tol=1e-10, rule="gap").beta
+    bn = solve(problem, lam, tol=1e-10, rule="none").beta
+    np.testing.assert_allclose(np.asarray(bg), np.asarray(bn), atol=1e-6)

@@ -1,4 +1,8 @@
-"""Solver correctness: optimality conditions, reference agreement, warm starts."""
+"""Solver correctness: optimality conditions, reference agreement, warm starts.
+
+Hypothesis-based property tests live in test_properties.py; path-engine
+tests (sequential screening, cache carrying) in test_path.py.
+"""
 import numpy as np
 import jax.numpy as jnp
 import pytest
@@ -137,24 +141,3 @@ def test_lambda_grid_matches_paper():
     assert g[0] == 100.0
     np.testing.assert_allclose(g[-1], 100.0 * 10 ** -3.0)
     assert len(g) == 100
-
-
-from hypothesis import given, settings, strategies as st
-
-
-@settings(max_examples=8, deadline=None)
-@given(tau=st.floats(0.05, 0.95), lam_frac=st.floats(0.05, 0.5))
-def test_property_gap_rule_never_changes_solution(tau, lam_frac):
-    """Safety as a property: for random (tau, lambda) the GAP-screened
-    solve must land on the same optimum as the unscreened solve."""
-    import numpy as np
-    from repro.core import make_problem, lambda_max, solve
-    from repro.data.synthetic import make_synthetic
-
-    X, y, _, sizes = make_synthetic(n=25, p=60, n_groups=10, gamma1=2,
-                                    gamma2=3, seed=11)
-    problem = make_problem(X, y, sizes, tau=tau)
-    lam = float(lambda_max(problem)) * lam_frac
-    bg = solve(problem, lam, tol=1e-10, rule="gap").beta
-    bn = solve(problem, lam, tol=1e-10, rule="none").beta
-    np.testing.assert_allclose(np.asarray(bg), np.asarray(bn), atol=1e-6)
