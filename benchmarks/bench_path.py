@@ -1,6 +1,7 @@
 """Figure 3b: whole-path computation time on the climate-like dataset as a
 function of the prescribed duality-gap accuracy, GAP rule vs no screening —
-plus the sequential path-engine vs the legacy naive per-lambda loop.
+the sequential path engine vs the legacy naive per-lambda loop vs the
+session front-end.
 
 Paper: NCEP/NCAR Reanalysis 1, n=814, p=73577 (groups of 7 variables per
 grid point), delta=2.5, tau*=0.4.  The offline generator reproduces the
@@ -8,22 +9,35 @@ group structure and preprocessing; the default grid is reduced so the
 harness completes in CPU-minutes (``--full`` restores 144x73).
 
 Modes:
-* ``naive``  — the seed loop: warm-started beta only, fresh caches and a
+* ``naive``   — the seed loop: warm-started beta only, fresh caches and a
   full active-set re-derivation at every lambda, f_ce-block epoch counts.
-* ``engine`` — sequential GAP screening before the first epoch of each
-  lambda, carried gather cache, sequential-gap-adaptive early exit.
+* ``engine``  — sequential GAP screening before the first epoch of each
+  lambda, carried gather cache, sequential-gap-adaptive early exit
+  (via the legacy ``solve_path`` wrapper).
+* ``session`` — the same engine driven through ``SGLSession.solve_path``
+  directly: one session per (rule, tol) owning the caches and, on the
+  Pallas backend, ONE persistent transposed design for every certified
+  round of the whole path.  ``transpose_copies_eliminated`` counts the
+  per-round (p, n) copies of X the pre-session design materialised
+  (``n_rounds``) minus the copies actually measured (trace audit,
+  ``PathResult.n_transpose_copies``); reported as 0 on the XLA backend,
+  where no transposed copy was ever at stake.
 """
 from __future__ import annotations
 
 import time
+import warnings
 
 from repro.core import sgl
 from repro.core.path import lambda_grid, solve_path
+from repro.core.session import SGLSession, SolverConfig
+from repro.core.solver import resolve_screen_backend
 from repro.data.climate import make_climate_like
 
 from .common import emit
 
-MODES = {
+MODES = ("naive", "engine", "session")
+MODE_KWARGS = {
     "naive": dict(sequential=False, check_every=None),
     "engine": dict(sequential=True, check_every="auto"),
 }
@@ -38,10 +52,21 @@ def main(n=256, n_lon=16, n_lat=8, T=20, delta=2.5, tau=0.4,
 
     for rule in ("gap", "none"):
         for tol in tols:
-            for mode, kwargs in MODES.items():
+            for mode in MODES:
                 t0 = time.perf_counter()
-                res = solve_path(problem, lambdas=lambdas, tol=tol,
-                                 max_epochs=max_epochs, rule=rule, **kwargs)
+                if mode == "session":
+                    session = SGLSession(problem, SolverConfig(
+                        tol=tol, max_epochs=max_epochs, rule=rule,
+                    ))
+                    res = session.solve_path(lambdas=lambdas)
+                else:
+                    with warnings.catch_warnings():
+                        warnings.simplefilter("ignore", DeprecationWarning)
+                        res = solve_path(
+                            problem, lambdas=lambdas, tol=tol,
+                            max_epochs=max_epochs, rule=rule,
+                            **MODE_KWARGS[mode],
+                        )
                 dt = time.perf_counter() - t0
                 case = f"{rule}_{mode}_tol{tol:g}"
                 emit("path_fig3b", case, "path_seconds", dt)
@@ -49,6 +74,16 @@ def main(n=256, n_lon=16, n_lat=8, T=20, delta=2.5, tau=0.4,
                 emit("path_fig3b", case, "zero_epoch_lambdas",
                      int((res.epochs == 0).sum()))
                 emit("path_fig3b", case, "gathers", res.n_gathers)
+                emit("path_fig3b", case, "certified_rounds", res.n_rounds)
+                # (p, n) transposed copies of X eliminated by the persistent
+                # transposed design: one per certified round on the Pallas
+                # backend (pre-session behavior), minus any measured copies
+                # (res.n_transpose_copies, from the trace audit).  Only the
+                # Pallas backend ever had a copy at stake, so XLA-backed
+                # runs report 0.
+                pallas = resolve_screen_backend("auto") == "pallas"
+                emit("path_fig3b", case, "transpose_copies_eliminated",
+                     res.n_rounds - res.n_transpose_copies if pallas else 0)
                 if rule == "gap":
                     emit("path_fig3b", case, "seq_screened_groups",
                          int(res.seq_screened.sum()))

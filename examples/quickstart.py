@@ -2,10 +2,19 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Reproduces the paper's core loop on a small synthetic instance: builds the
-problem, computes lambda_max via the epsilon-norm trick (Eq. 22), solves at
-lambda = lambda_max / 20 with Algorithm 2 (ISTA-BC + GAP safe rules), and
-reports the duality gap, the screening statistics, and support recovery.
+Reproduces the paper's core loop on a small synthetic instance through the
+**session API**: builds the problem, opens an :class:`SGLSession` (which
+owns the solver configuration, the screening backend, and the persistent
+transposed design for the Pallas kernels), computes lambda_max via the
+epsilon-norm trick (Eq. 22), solves at lambda = lambda_max / 20 with
+Algorithm 2 (ISTA-BC + GAP safe rules), and reports the duality gap, the
+screening statistics, and support recovery.
+
+Migration note: the legacy ``solve(problem, lam, tol=..., rule=..., ...)``
+kwargs became :class:`SolverConfig` fields with the same names (``tol``,
+``max_epochs``, ``f_ce``, ``rule``, ``compact``, ``inner_rounds``,
+``check_every``, ``screen_backend``, ``warm_gap_factor``); the lambda and
+warm-start state stay on ``session.solve(lam, beta0=...)``.
 """
 import os
 
@@ -13,7 +22,7 @@ os.environ.setdefault("JAX_ENABLE_X64", "1")
 
 import numpy as np
 
-from repro.core import make_problem, lambda_max, solve
+from repro.core import SGLSession, SolverConfig, make_problem
 from repro.data.synthetic import make_synthetic
 
 
@@ -22,13 +31,14 @@ def main():
         n=100, p=1000, n_groups=100, gamma1=5, gamma2=4, seed=0
     )
     problem = make_problem(X, y, sizes, tau=0.2)
+    session = SGLSession(problem, SolverConfig(tol=1e-8, rule="gap"))
 
-    lam_max = float(lambda_max(problem))
+    lam_max = session.lam_max
     lam = lam_max / 20.0
     print(f"lambda_max = {lam_max:.4f}  (Eq. 22, epsilon-norm Algorithm 1)")
     print(f"solving at lambda = lambda_max/20 = {lam:.4f}, tol = 1e-8")
 
-    res = solve(problem, lam, tol=1e-8, rule="gap")
+    res = session.solve(lam)
 
     G, ng = problem.G, problem.ng
     beta = np.asarray(res.beta).reshape(-1)
@@ -40,7 +50,8 @@ def main():
     }
 
     print(f"\nconverged: duality gap = {float(res.gap):.3e} "
-          f"after {res.n_epochs} BCD epochs")
+          f"after {res.n_epochs} BCD epochs "
+          f"({session.rounds} certified screening rounds)")
     print(f"active groups at solution: {int(res.group_active.sum())}/{G} "
           f"(GAP rule screened out {G - int(res.group_active.sum())})")
     print(f"active features: {int(res.feat_active.sum())}/{G * ng}")
@@ -52,6 +63,17 @@ def main():
     for g in found_groups:
         assert res.group_active[g], f"unsafe screen of group {g}!"
     print("\nsafety check passed: every nonzero group survived screening")
+
+    # The session is warm: a second solve nearby reuses the gather caches
+    # and (on TPU) the persistent transposed design, and can be seeded with
+    # a sequential certificate — the paper's sequential screening rule.
+    cert = session.screen(lam / 2.0, res.beta)
+    res2 = session.solve(lam / 2.0, beta0=res.beta, first_round=cert)
+    print(f"warm re-solve at lambda/2: sequential certificate screened "
+          f"{G - int(np.asarray(cert.group_active).sum())}/{G} groups "
+          f"up front; gap {float(res2.gap):.3e} "
+          f"in {res2.n_epochs} epochs")
+    assert float(res2.gap) <= 1e-8
 
 
 if __name__ == "__main__":

@@ -10,12 +10,14 @@ from .sgl import (
     SGLProblem,
     dual,
     flatten,
+    unflatten,
     dual_scale,
     duality_gap,
     group_soft_threshold,
     lambda_max,
     make_problem,
     primal,
+    problem_from_grouped,
     sgl_dual_norm,
     sgl_norm,
     sgl_prox,
@@ -32,6 +34,7 @@ from .screening import (
     static_sphere,
 )
 from .solver import (
+    RoundResult,
     SolveCaches,
     SolveResult,
     bcd_epochs,
@@ -39,18 +42,21 @@ from .solver import (
     screen_round,
     solve,
 )
+from .session import SGLSession, SolverConfig
 from .elastic import make_elastic_problem, elastic_objective
 from .path import PathResult, lambda_grid, solve_path
 
 __all__ = [
-    "SGLProblem", "make_problem", "solve", "solve_path", "lambda_grid",
+    "SGLProblem", "make_problem", "problem_from_grouped",
+    "SGLSession", "SolverConfig",
+    "solve", "solve_path", "lambda_grid",
     "lambda_max", "dual_scale", "duality_gap", "primal", "dual",
     "sgl_norm", "sgl_dual_norm", "sgl_prox", "soft_threshold",
     "group_soft_threshold", "epsilon_norm", "epsilon_norm_dual",
     "epsilon_decomposition", "lam", "lam_bisect",
     "Sphere", "ScreenResult", "gap_sphere", "sequential_sphere",
     "static_sphere", "dynamic_sphere", "dst3_sphere", "screen",
-    "SolveResult", "SolveCaches", "PathResult", "bcd_epochs",
-    "screen_round", "resolve_screen_backend",
-    "make_elastic_problem", "elastic_objective", "flatten",
+    "SolveResult", "SolveCaches", "RoundResult", "PathResult",
+    "bcd_epochs", "screen_round", "resolve_screen_backend",
+    "make_elastic_problem", "elastic_objective", "flatten", "unflatten",
 ]

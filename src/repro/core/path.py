@@ -5,81 +5,47 @@ lambda_t = lambda_max * 10^(-delta * t / (T - 1)),  t = 0..T-1
 
 The paper's headline wall-clock result comes from the *warm-started path*,
 where the GAP safe rule screens both **sequentially** and **dynamically**.
-This engine threads state across the grid instead of treating each lambda as
+The engine threads state across the grid instead of treating each lambda as
 an independent solve:
 
 1. **Sequential GAP screening** — before the first epoch at ``lambda_t`` a
-   certified :func:`repro.core.solver.screen_round` is evaluated at the new
-   lambda with the previous lambda's ``beta_{t-1}`` (residual-rescaled dual
-   point, Eq. 15 + Thm 2).  Groups failing the Theorem-1 test are discarded
-   with **zero BCD work**; if the warm-started gap is already below ``tol``
-   the lambda costs zero epochs outright.  The round is handed to
-   :func:`solve` as ``first_round`` so it is never recomputed.
+   certified round is evaluated at the new lambda with the previous
+   lambda's ``beta_{t-1}`` (residual-rescaled dual point, Eq. 15 + Thm 2).
+   Groups failing the Theorem-1 test are discarded with **zero BCD work**;
+   if the warm-started gap is already below ``tol`` the lambda costs zero
+   epochs outright.  The round is handed to the solve as ``first_round``
+   so it is never recomputed.
 2. **Active warm start + cache carrying** — one
-   :class:`repro.core.solver.SolveCaches` instance is passed down the whole
-   path, so the compacted (n x p_active) gather of the design matrix is
-   reused whenever consecutive lambdas certify the same active set, and XLA
-   recompiles only when the power-of-two bucket actually changes
-   (< log2(G) times for the whole path, not per lambda).
-3. **Sequential-gap-adaptive work schedule** — the sequential round's gap
-   is known *before* any BCD work at the new lambda, so the engine picks
-   the inner early-exit granularity from it: warm lambdas (gap within
-   ``1e3 * tol``) check the reduced gap after every epoch and stop after
-   exactly the passes they need, cold lambdas keep the cheap ``f_ce``-block
-   cadence so the extra per-epoch gap evaluations never slow the hard tail.
+   :class:`repro.core.solver.SolveCaches` instance is carried down the
+   whole path, so the compacted (n x p_active) gather of the design matrix
+   is reused whenever consecutive lambdas certify the same active set.
+3. **Sequential-gap-adaptive work schedule** — warm lambdas (sequential
+   gap within ``warm_gap_factor * tol``) check the reduced gap after every
+   epoch; cold lambdas keep the cheap ``f_ce``-block cadence.
 4. **Pallas-backed rounds** — the certified rounds' X^T resid correlation
    and SGL dual norm route through the fused Pallas kernels on TPU
-   (``screen_backend="auto"``).
+   (``screen_backend="auto"``), fed from ONE persistent transposed design
+   for the whole path.
+
+The engine itself lives on the session API
+(:meth:`repro.core.session.SGLSession.solve_path`); this module keeps the
+grid helper, the dense :class:`PathResult` container (re-exported from
+:mod:`repro.core.session`), and the legacy keyword front-end
+:func:`solve_path`, now a thin deprecated wrapper whose loose kwargs map
+onto :class:`repro.core.session.SolverConfig` fields of the same names.
 
 ``sequential=False, check_every=None`` reproduces the legacy per-instance
 loop exactly (used by ``benchmarks/bench_path.py`` as the baseline).
-
-:class:`PathResult` is dense — one (T, G, ng) coefficient array plus per-
-lambda gap/epoch/active/screen-counter vectors — directly consumable by the
-benchmarks.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Optional, Sequence, Union
+import warnings
+from typing import Optional, Sequence, Union
 
-import numpy as np
-import jax.numpy as jnp
-
-from . import sgl
 from .sgl import SGLProblem
-from .solver import SolveCaches, screen_round, solve
+from .session import PathResult, SGLSession, SolverConfig, lambda_grid
 
 __all__ = ["lambda_grid", "PathResult", "solve_path"]
-
-
-def lambda_grid(lam_max: float, T: int = 100, delta: float = 3.0) -> np.ndarray:
-    t = np.arange(T)
-    return lam_max * 10.0 ** (-delta * t / max(T - 1, 1))
-
-
-class PathResult(NamedTuple):
-    """Dense path outputs; leading axis is the lambda grid (length T)."""
-
-    lambdas: np.ndarray            # (T,)
-    betas: np.ndarray              # (T, G, ng) coefficients
-    gaps: np.ndarray               # (T,) final certified duality gaps
-    epochs: np.ndarray             # (T,) int, BCD passes per lambda
-    group_active_frac: np.ndarray  # (T,)
-    feat_active_frac: np.ndarray   # (T,)
-    group_active: np.ndarray       # (T, G) bool, certified active masks
-                                   #   (solver-final intersected with the
-                                   #   sequential certificate).  False is a
-                                   #   certificate of zero at the optimum,
-                                   #   NOT a support indicator of betas[t]:
-                                   #   a lambda converged on its sequential
-                                   #   round keeps beta un-zeroed there.
-    feat_active: np.ndarray        # (T, G, ng) bool, same semantics
-    seq_screened: np.ndarray       # (T,) int, groups the sequential round
-                                   #   certified inactive before any epoch
-    dyn_screened: np.ndarray       # (T,) int, further groups screened out
-                                   #   during the solve (dynamic rule)
-    n_gathers: int                 # design re-gathers across the whole path
-    results: list                  # per-lambda SolveResult (keep_results=True)
 
 
 def solve_path(
@@ -101,146 +67,34 @@ def solve_path(
 ) -> PathResult:
     """Solve the whole lambda path with sequential + dynamic screening.
 
-    ``compact`` / ``inner_rounds`` / ``check_every`` are forwarded to
-    :func:`solve` for every grid point.  ``check_every="auto"`` schedules
-    from the sequential certificate: a lambda whose warm-start gap is
-    already within ``warm_gap_factor * tol`` runs with per-epoch early-exit
-    checks (it will stop within a handful of passes), everything else keeps
-    the ``f_ce``-block cadence.  ``sequential=False`` together with
-    ``check_every=None`` reproduces the legacy naive loop (fresh caches and
-    no pre-solve screening per lambda).
+    .. deprecated::
+        Thin wrapper over the session API — prefer::
+
+            session = SGLSession(problem, SolverConfig(tol=1e-8))
+            res = session.solve_path(T=100, delta=3.0)
+
+        Solver knobs (``tol``/``max_epochs``/``f_ce``/``rule``/``compact``/
+        ``inner_rounds``/``check_every``/``screen_backend``/
+        ``warm_gap_factor``) are :class:`SolverConfig` fields; the grid
+        (``lambdas``/``T``/``delta``) and ``sequential``/``keep_results``
+        are ``solve_path`` arguments.
+
+    ``check_every="auto"`` schedules from the sequential certificate;
+    ``sequential=False`` together with ``check_every=None`` reproduces the
+    legacy naive loop (fresh caches, no pre-solve screening per lambda).
     """
-    lam_max = float(sgl.lambda_max(problem))
-    if lambdas is None:
-        lambdas = lambda_grid(lam_max, T=T, delta=delta)
-    lambdas = np.asarray(lambdas, float)
-    T_ = len(lambdas)
-
-    G, ng = problem.G, problem.ng
-    dtype = problem.X.dtype
-    n_feat = int(np.asarray(problem.feat_mask).sum())
-    n_groups = int(np.asarray(jnp.any(problem.feat_mask, axis=-1)).sum())
-
-    # One cache for the whole path: the gather (and its jit cache) survives
-    # across lambdas whose certified active set is unchanged.  The naive
-    # mode gets a fresh cache per lambda (seed behavior) but still totals
-    # its gather count for the benchmark comparison.
-    caches = SolveCaches() if sequential else None
-    n_gathers_total = 0
-
-    beta = jnp.zeros((G, ng), dtype)
-    betas = np.zeros((T_, G, ng), np.dtype(dtype))  # problem dtype, no up-cast
-    gaps = np.zeros(T_, float)
-    epochs = np.zeros(T_, np.int64)
-    gfrac = np.zeros(T_, float)
-    ffrac = np.zeros(T_, float)
-    g_act = np.zeros((T_, G), bool)
-    f_act = np.zeros((T_, G, ng), bool)
-    seq_scr = np.zeros(T_, np.int64)
-    dyn_scr = np.zeros(T_, np.int64)
-    results: list = []
-
-    screening_rule = rule in ("gap", "dynamic", "dst3")
-    for t, lam_ in enumerate(lambdas):
-        first_round = None
-        n_seq_active = n_groups
-        if sequential and rule != "static":
-            # Sequential rule: certified round at the NEW lambda from the
-            # PREVIOUS lambda's primal point, before any epoch here.  The
-            # static rule is excluded: solve() applies its up-front static
-            # screen to beta before any round, which would invalidate an
-            # injected certificate evaluated at the un-masked warm start.
-            first_round = screen_round(
-                problem, beta, float(lam_), lam_max, rule=rule,
-                backend=screen_backend,
-            )
-            if screening_rule:
-                n_seq_active = int(np.asarray(first_round[2]).sum())
-                seq_scr[t] = n_groups - n_seq_active
-
-        if check_every == "auto":
-            # Warm lambdas finish in a handful of passes, so per-epoch
-            # early-exit checks beat the f_ce-block floor; cold lambdas keep
-            # the cheap block cadence.  Warmness is read off the sequential
-            # certificate (gap already near tol), or predicted from the path
-            # itself: the previous lambda's epoch count, when positive and
-            # within four f_ce-blocks, marks a warm region (warmness varies
-            # smoothly along a geometric grid).  A zero count (lambda_max,
-            # or a user grid jumping far from the last point) carries no
-            # signal and must not force per-epoch checks on a cold lambda.
-            warm = (first_round is not None
-                    and float(first_round[0]) <= warm_gap_factor * tol)
-            warm |= t > 0 and 0 < epochs[t - 1] <= 4 * f_ce
-            check_t = 1 if warm else None
-        else:
-            check_t = check_every
-
-        lam_caches = caches if caches is not None else SolveCaches()
-        res = solve(
-            problem,
-            float(lam_),
-            beta0=beta,
-            tol=tol,
-            max_epochs=max_epochs,
-            f_ce=f_ce,
-            rule=rule,
-            lam_max=lam_max,
-            compact=compact,
-            inner_rounds=inner_rounds,
-            check_every=check_t,
-            first_round=first_round,
-            caches=lam_caches,
-            screen_backend=screen_backend,
-        )
-        beta = res.beta
-        if caches is None:
-            n_gathers_total += lam_caches.n_gathers
-
-        betas[t] = np.asarray(res.beta)
-        gaps[t] = float(res.gap)
-        epochs[t] = res.n_epochs
-        g_act[t] = np.asarray(res.group_active)
-        f_act[t] = np.asarray(res.feat_active)
-        if first_round is not None and screening_rule:
-            if np.dtype(dtype).itemsize >= 8:
-                # Report the sequential certificate even when solve converged
-                # on that very round without applying it (beta is untouched —
-                # only the REPORTED masks reflect the certificate; see the
-                # converged-round note in solve()).  For lambdas where solve
-                # did apply screens this intersection is a no-op (final masks
-                # are already subsets).  Without it, Fig 2a/2b-style outputs
-                # read 1.0 active exactly at the lambdas screening handled
-                # outright.
-                g_act[t] &= np.asarray(first_round[2])
-                f_act[t] &= np.asarray(first_round[3]) & g_act[t][:, None]
-            elif res.n_epochs == 0:
-                # In low precision the converged gap's cancellation error can
-                # undershoot the GAP radius enough to mis-certify borderline
-                # groups, so the certificate is neither applied nor reported
-                # — zero the counter too, keeping counters and masks
-                # consistent (all-active, nothing discarded).
-                seq_scr[t] = 0
-                n_seq_active = n_groups
-        gfrac[t] = g_act[t].sum() / max(n_groups, 1)
-        ffrac[t] = f_act[t].sum() / max(n_feat, 1)
-        if screening_rule:
-            # g_act already includes the sequential certificate, so this is
-            # non-negative; max() guards rounding of future refactors only.
-            dyn_scr[t] = max(0, n_seq_active - int(g_act[t].sum()))
-        if keep_results:
-            results.append(res)
-
-    return PathResult(
-        lambdas=lambdas,
-        betas=betas,
-        gaps=gaps,
-        epochs=epochs,
-        group_active_frac=gfrac,
-        feat_active_frac=ffrac,
-        group_active=g_act,
-        feat_active=f_act,
-        seq_screened=seq_scr,
-        dyn_screened=dyn_scr,
-        n_gathers=caches.n_gathers if caches is not None else n_gathers_total,
-        results=results,
+    warnings.warn(
+        "repro.core.solve_path() is deprecated; use "
+        "SGLSession(problem, SolverConfig(...)).solve_path(...)",
+        DeprecationWarning, stacklevel=2,
+    )
+    cfg = SolverConfig(
+        tol=tol, max_epochs=max_epochs, f_ce=f_ce, rule=rule,
+        compact=compact, inner_rounds=inner_rounds, check_every=check_every,
+        screen_backend=screen_backend, warm_gap_factor=warm_gap_factor,
+    )
+    session = SGLSession(problem, cfg)
+    return session.solve_path(
+        lambdas=lambdas, T=T, delta=delta, sequential=sequential,
+        keep_results=keep_results,
     )

@@ -21,7 +21,7 @@ a screened-out (False) variable is *provably* zero at the optimum.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -134,15 +134,27 @@ def dst3_sphere(
 # ----------------------------------------------------------------------------
 
 def screen_with_corr(
-    problem: SGLProblem, sphere: Sphere, corr: jax.Array
+    problem: SGLProblem, sphere: Sphere, corr: jax.Array,
+    st2: Optional[jax.Array] = None,
 ) -> ScreenResult:
     """Theorem 1 tests given precomputed correlations corr = X^T theta_c
-    in grouped layout (G, ng)."""
+    in grouped layout (G, ng).
+
+    ``st2``: optional precomputed S_tau(corr)^2, e.g. the second output of
+    the fused Pallas kernel (:func:`repro.kernels.ops.screening_scores`),
+    which thresholds the correlation while the block is still resident in
+    VMEM.  When given, the group test consumes it directly instead of
+    re-thresholding ``corr`` — previously that half of every fused kernel
+    call was discarded and recomputed here (ROADMAP item).
+    """
     tau, w = problem.tau, problem.w
     r = sphere.radius
 
-    ste = soft_threshold(corr, tau)
-    st_norm = jnp.linalg.norm(ste, axis=-1)                     # ||S_tau(.)||
+    if st2 is None:
+        ste = soft_threshold(corr, tau)
+        st_norm = jnp.linalg.norm(ste, axis=-1)                 # ||S_tau(.)||
+    else:
+        st_norm = jnp.sqrt(jnp.sum(st2, axis=-1))
     inf_norm = jnp.max(jnp.abs(jnp.where(problem.feat_mask, corr, 0.0)), axis=-1)
 
     Tg_out = st_norm + r * problem.Xnorm_grp
@@ -161,6 +173,34 @@ def screen_with_corr(
     return ScreenResult(group_active, feat_active, sphere)
 
 
-def screen(problem: SGLProblem, sphere: Sphere) -> ScreenResult:
+def screen(problem: SGLProblem, sphere: Sphere, backend: str = "xla",
+           xt_pre: Optional[jax.Array] = None) -> ScreenResult:
+    """Theorem-1 tests against ``sphere``.
+
+    ``backend="pallas"`` routes the correlation through the *fused*
+    screening-scores kernel — here the threshold ``tau`` applies to
+    ``X^T center`` directly (no dual rescaling), so the kernel's fused
+    S_tau(corr)^2 output is handed to :func:`screen_with_corr` and the
+    group test never re-thresholds.  Requires a concrete (un-traced)
+    problem because ``tau`` is a static kernel parameter.
+
+    ``xt_pre``: persistent transposed design from
+    :func:`repro.kernels.ops.prepare_transposed`; without it every
+    Pallas-backed call materialises a fresh (p, n) transposed copy of X
+    (the per-call copy the session API exists to eliminate).
+    """
+    if backend == "pallas":
+        from ..kernels import ops as kops
+
+        n, G, ng = problem.X.shape
+        p = G * ng
+        Xt = problem.X.reshape(n, p).T if xt_pre is None else xt_pre
+        corr_f, st2_f = kops.screening_scores(
+            Xt, sphere.center, tau=float(problem.tau)
+        )
+        return screen_with_corr(
+            problem, sphere, corr_f[:p].reshape(G, ng),
+            st2=st2_f[:p].reshape(G, ng)
+        )
     corr = jnp.einsum("ngk,n->gk", problem.X, sphere.center)
     return screen_with_corr(problem, sphere, corr)

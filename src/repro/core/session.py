@@ -1,0 +1,1072 @@
+"""Unified solver-session API: one front-end for single-lambda, path, and
+distributed solves.
+
+The paper's speed story is one algorithm — certified GAP rounds (Thm 2) +
+Theorem-1 screening wrapped around an inner solver — and the journal
+follow-up (Ndiaye et al. 2017) frames the rule as penalty- and
+solver-agnostic.  :class:`SGLSession` is that framing in code: it owns the
+problem, the resolved screening backend, a **persistent transposed design**
+for the Pallas correlation kernels, and the cross-call gather caches, and
+exposes the whole algorithm family through three methods:
+
+* :meth:`SGLSession.screen` — one certified gap + Theorem-1 round
+  (:class:`repro.core.solver.RoundResult`), the resumable-round primitive;
+* :meth:`SGLSession.solve` — one regularisation level, warm-startable and
+  certificate-seedable;
+* :meth:`SGLSession.solve_path` — the sequential-screening lambda-path
+  engine (paper Section 7.1).
+
+Strategies
+----------
+``SGLSession(problem)`` runs the single-device ISTA-BC solver
+(Algorithm 2, :mod:`repro.core.solver`).  ``SGLSession(problem,
+mesh=mesh)`` swaps in the distributed FISTA strategy
+(:mod:`repro.distributed.solver_dist`) behind the *same* methods: the
+sequential rule threads :class:`RoundResult` certificates and warm starts
+through the shard_map kernels, and consecutive path points whose certified
+active sets coincide are solved in ONE batched-lambda FISTA run
+(``fista_batch`` — arithmetic intensity scales with the batch).
+
+Persistent transposed design
+----------------------------
+On the Pallas backend the certified round's hot correlation ``X^T resid``
+needs the feature-major (p, n) layout; before this session existed, every
+round materialised a fresh transposed copy of X (ROADMAP perf item).  The
+session builds it once (:func:`repro.kernels.ops.prepare_transposed`) and
+feeds it to every round of every solve of the whole path; the elimination
+is *measured* (``kernels.ops.transpose_trace_count`` moves iff a round
+traced an on-the-fly transpose) and surfaced per path as
+``PathResult.n_rounds`` / ``n_transpose_copies`` for the benchmarks.
+
+Migration from the legacy front-ends
+------------------------------------
+``solve(...)`` / ``solve_path(...)`` loose kwargs became
+:class:`SolverConfig` fields with the same names and defaults (``tol``,
+``max_epochs``, ``f_ce``, ``rule``, ``compact``, ``inner_rounds``,
+``check_every``, ``screen_backend``, ``warm_gap_factor``); per-call state
+(``lam_``, ``beta0``, ``first_round``, ``lambdas``) stays on the method.
+``solve_distributed(mesh, X, y, w, ...)`` raw arrays became
+``SGLSession(problem_from_grouped(X, y, tau, w), mesh=mesh)``.  The legacy
+functions survive as thin deprecated wrappers delegating here.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence, Union
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import screening as scr
+from . import sgl
+from .sgl import SGLProblem
+from .solver import (
+    RoundResult,
+    SolveCaches,
+    SolveResult,
+    _inner_rounds,
+    _screen_round,
+    bcd_epochs,
+    resolve_screen_backend,
+)
+from ..kernels import ops as kops
+
+__all__ = [
+    "SolverConfig",
+    "SGLSession",
+    "PathResult",
+    "lambda_grid",
+]
+
+_UNSET = object()
+
+
+class SolverConfig(NamedTuple):
+    """Frozen bundle of every solver knob (formerly 13 loose kwargs).
+
+    Field names match the legacy ``solve``/``solve_path`` keyword arguments
+    one-to-one; anything not listed here (``lam_``, ``beta0``,
+    ``first_round``, ``lambdas``, ``sequential``) is per-call state and
+    lives on the session methods instead.
+    """
+
+    tol: float = 1e-8              # duality-gap stopping threshold
+    max_epochs: int = 10_000       # BCD epochs (FISTA steps on a mesh)
+    f_ce: int = 10                 # epochs between certified rounds
+    rule: str = "gap"              # gap | static | dynamic | dst3 | none
+    compact: bool = True           # gather active groups into dense buffers
+    inner_rounds: int = 5          # f_ce-blocks per jitted inner call
+    check_every: Union[int, None, str] = "auto"  # reduced-gap exit cadence
+    screen_backend: str = "auto"   # auto | xla | pallas
+    warm_gap_factor: float = 1e3   # warm-lambda threshold for "auto"
+
+
+def lambda_grid(lam_max: float, T: int = 100, delta: float = 3.0) -> np.ndarray:
+    """lambda_t = lambda_max * 10^(-delta t / (T-1)), t = 0..T-1 (paper §7.1)."""
+    t = np.arange(T)
+    return lam_max * 10.0 ** (-delta * t / max(T - 1, 1))
+
+
+class PathResult(NamedTuple):
+    """Dense path outputs; leading axis is the lambda grid (length T)."""
+
+    lambdas: np.ndarray            # (T,)
+    betas: np.ndarray              # (T, G, ng) coefficients
+    gaps: np.ndarray               # (T,) final certified duality gaps
+    epochs: np.ndarray             # (T,) int, BCD passes / FISTA steps
+    group_active_frac: np.ndarray  # (T,)
+    feat_active_frac: np.ndarray   # (T,)
+    group_active: np.ndarray       # (T, G) bool, certified active masks
+                                   #   (solver-final intersected with the
+                                   #   sequential certificate).  False is a
+                                   #   certificate of zero at the optimum,
+                                   #   NOT a support indicator of betas[t]:
+                                   #   a lambda converged on its sequential
+                                   #   round keeps beta un-zeroed there.
+    feat_active: np.ndarray        # (T, G, ng) bool, same semantics
+    seq_screened: np.ndarray       # (T,) int, groups the sequential round
+                                   #   certified inactive before any epoch
+    dyn_screened: np.ndarray       # (T,) int, further groups screened out
+                                   #   during the solve (dynamic rule)
+    n_gathers: int                 # design re-gathers across the whole path
+    results: list                  # per-lambda SolveResult (keep_results)
+    n_rounds: int = 0              # certified rounds dispatched on the path
+    n_transpose_copies: int = 0    # rounds that executed a jitted program
+                                   #   which materialises an on-the-fly
+                                   #   (p, n) transposed copy of X, measured
+                                   #   via kernels.ops.transpose_trace_count
+                                   #   — 0 when the session's persistent
+                                   #   transposed design reached every
+                                   #   Pallas round (and trivially 0 on the
+                                   #   XLA backend, where no copy is ever at
+                                   #   stake)
+
+
+def _global_lipschitz(problem: SGLProblem, n_iter: int = 150) -> float:
+    """||X||_2^2 *estimate* via power iteration, +5% margin.
+
+    NOT a certified upper bound — the Rayleigh quotient converges to the
+    top eigenvalue from below, and a spectrum with a near-tied second
+    singular value can leave the estimate a few percent short.  The FISTA
+    drivers therefore back any auto-estimated constant with a divergence
+    safeguard (gap growing while the active set is unchanged => double L
+    and restart momentum), so an under-estimate costs speed, never
+    correctness.  Callers with the exact constant should pass ``L=``.
+    """
+    X, mask = problem.X, problem.feat_mask
+    dtype = X.dtype
+    v0 = jnp.where(mask, 1.0, 0.0).astype(dtype)
+    v0 = v0 * (1.0 + 1e-3 * jnp.arange(X.shape[2], dtype=dtype)[None, :])
+    v0 = v0 / jnp.maximum(jnp.linalg.norm(v0), 1e-30)
+
+    def body(_, v):
+        u = jnp.einsum("ngk,gk->n", X, v)
+        w = jnp.einsum("ngk,n->gk", X, u)
+        return w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
+
+    v = jax.lax.fori_loop(0, n_iter, body, v0)
+    u = jnp.einsum("ngk,gk->n", X, v)
+    return float(jnp.sum(u * u)) * 1.05
+
+
+class SGLSession:
+    """Stateful front-end over one SGL problem (see module docstring).
+
+    Parameters
+    ----------
+    problem : SGLProblem
+    config : SolverConfig, optional
+    mesh : jax.sharding.Mesh, optional
+        When given, the distributed FISTA strategy replaces the local
+        ISTA-BC solver behind the same ``screen``/``solve``/``solve_path``
+        methods.
+    multi_pod : bool
+        Mesh has the leading "pod" axis (distributed strategy only).
+    L : float, optional
+        Global Lipschitz constant ||X||_2^2 for FISTA; estimated by power
+        iteration when omitted (distributed strategy only).
+    caches : SolveCaches, optional
+        Pre-existing gather caches to adopt (the legacy ``solve`` wrapper
+        passes its ``caches=`` argument through here).
+    """
+
+    def __init__(
+        self,
+        problem: SGLProblem,
+        config: Optional[SolverConfig] = None,
+        *,
+        mesh=None,
+        multi_pod: bool = False,
+        L: Optional[float] = None,
+        caches: Optional[SolveCaches] = None,
+    ) -> None:
+        self.problem = problem
+        self.config = config if config is not None else SolverConfig()
+        self.caches = caches if caches is not None else SolveCaches()
+        self.backend = resolve_screen_backend(self.config.screen_backend)
+        self.mesh = mesh
+        # Auditable round accounting: every certified round dispatched
+        # through this session.  Whether any of those rounds had to build a
+        # per-call (p, n) transposed copy of X is *measured*, not assumed:
+        # kernels.ops.transpose_trace_count() moves iff a jitted round
+        # actually traced an on-the-fly transpose, and solve_path converts
+        # its delta into PathResult.n_transpose_copies.
+        self.rounds = 0
+        # Lambdas solved through the batched-lambda FISTA kernel (mesh
+        # strategy only): path points whose sequential certificates agreed.
+        self.batched_lambdas = 0
+        self._xt_pre: Optional[jax.Array] = None
+        self._lam_max: Optional[float] = None
+        if mesh is not None and self.config.rule != "gap":
+            # The sharded screen kernel computes GAP-sphere certificates
+            # only; accepting another rule here would silently hand back
+            # gap-rule results under a different name.
+            raise ValueError(
+                "the distributed strategy implements rule='gap' only; "
+                f"got rule={self.config.rule!r}"
+            )
+        self._dist = _DistStrategy(self, mesh, multi_pod=multi_pod, L=L) \
+            if mesh is not None else None
+
+    # -- lazily-built shared state -----------------------------------------
+
+    @property
+    def lam_max(self) -> float:
+        """lambda_max = Omega^D(X^T y), computed once per session."""
+        if self._lam_max is None:
+            self._lam_max = float(sgl.lambda_max(self.problem))
+        return self._lam_max
+
+    @property
+    def xt_pre(self) -> Optional[jax.Array]:
+        """Persistent transposed design for the Pallas correlation kernel
+        (None on the XLA backend, where einsums handle layout natively)."""
+        if self.backend != "pallas":
+            return None
+        if self._xt_pre is None:
+            self._xt_pre = kops.prepare_transposed(self.problem.X)
+        return self._xt_pre
+
+    def _certified_round(self, beta, lam_j, lam_max_j, rule) -> RoundResult:
+        self.rounds += 1
+        return _screen_round(
+            self.problem, beta, lam_j, lam_max_j, rule, self.backend,
+            self.xt_pre,
+        )
+
+    # -- the three front-end methods ---------------------------------------
+
+    def screen(self, lam_: float, beta=None,
+               rule: Optional[str] = None) -> RoundResult:
+        """One certified gap + Theorem-1 screening round at ``lam_``.
+
+        Called at a *new* lambda with the *previous* lambda's ``beta`` this
+        is the paper's sequential rule; feed the result to :meth:`solve` as
+        ``first_round``.  ``beta`` defaults to zeros (the cold start).
+        """
+        rule = self.config.rule if rule is None else rule
+        problem = self.problem
+        dtype = problem.X.dtype
+        if beta is None:
+            beta = jnp.zeros((problem.G, problem.ng), dtype)
+        if self._dist is not None:
+            if rule != "gap":
+                raise ValueError(
+                    "the distributed strategy implements rule='gap' only; "
+                    f"got rule={rule!r}"
+                )
+            return self._dist.screen(lam_, beta)
+        if rule == "static":
+            raise ValueError(
+                "rule='static' has no per-round certificate; use "
+                "screening.static_sphere + screening.screen, or solve()"
+            )
+        return self._certified_round(
+            jnp.asarray(beta, dtype),
+            jnp.asarray(lam_, dtype),
+            jnp.asarray(self.lam_max, dtype),
+            rule,
+        )
+
+    def solve(
+        self,
+        lam_: float,
+        beta0=None,
+        *,
+        first_round: Optional[RoundResult] = None,
+        lam_max: Optional[float] = None,
+        check_every=_UNSET,
+        caches: Optional[SolveCaches] = None,
+    ) -> SolveResult:
+        """Solve one SGL instance at regularisation ``lam_``.
+
+        All solver knobs come from ``self.config``; per-call state:
+
+        * ``beta0`` — warm start (required alongside ``first_round``);
+        * ``first_round`` — a :class:`RoundResult` evaluated at
+          (``beta0``, ``lam_``), consumed instead of recomputing round 1;
+        * ``lam_max`` — the true lambda_max when already known (path);
+        * ``check_every`` — per-call override of the config cadence
+          ("auto" resolves from the ``first_round`` warm gap here);
+        * ``caches`` — per-call gather-cache override (the naive path mode
+          uses a throwaway instance; default is the session cache).
+        """
+        if self._dist is not None:
+            return self._dist.solve(lam_, beta0=beta0,
+                                    first_round=first_round)
+        cfg = self.config
+        problem = self.problem
+        rule = cfg.rule
+        tol, max_epochs, f_ce = cfg.tol, cfg.max_epochs, cfg.f_ce
+        if first_round is not None and rule == "static":
+            # The static screen re-masks (and zeroes parts of) beta0 before
+            # the loop, so an injected certificate evaluated at the original
+            # beta0 would no longer certify the beta actually being solved.
+            raise ValueError(
+                "first_round certifies beta0 as passed; it cannot be "
+                "combined with rule='static'"
+            )
+        if first_round is not None and beta0 is None:
+            # Without beta0 the solve starts from zeros, which the injected
+            # certificate was (almost certainly) not evaluated at — if its
+            # gap were <= tol the zeros would be returned as "converged".
+            raise ValueError(
+                "first_round requires the beta0 it was evaluated at"
+            )
+        if first_round is not None and not isinstance(first_round,
+                                                      RoundResult):
+            first_round = RoundResult(*first_round)
+        caches = self.caches if caches is None else caches
+
+        ce = cfg.check_every if check_every is _UNSET else check_every
+        if isinstance(ce, str):
+            if ce != "auto":
+                raise ValueError(f"unknown check_every: {ce!r}")
+            # Warmness read off the injected certificate: a lambda whose
+            # warm-start gap is already near tol stops within a handful of
+            # passes, so per-epoch early-exit checks beat the f_ce floor.
+            warm = (first_round is not None
+                    and float(first_round.gap) <= cfg.warm_gap_factor * tol)
+            ce = 1 if warm else None
+
+        G, ng = problem.G, problem.ng
+        dtype = problem.X.dtype
+        beta = (jnp.zeros((G, ng), dtype) if beta0 is None
+                else jnp.asarray(beta0, dtype))
+        lam_j = jnp.asarray(lam_, dtype)
+        check = f_ce if ce is None else max(1, int(ce))
+        # Never exceed the certified-round cadence, and keep degenerate
+        # inputs (f_ce or inner_rounds <= 0) from collapsing the block size.
+        check = max(1, min(check, f_ce * cfg.inner_rounds))
+        max_blocks = max(1, (f_ce * cfg.inner_rounds) // check)
+
+        if lam_max is None:
+            lam_max = self.lam_max           # session-cached; the legacy
+                                             # stateless solve() recomputed
+                                             # this O(n p) dual norm per call
+
+        group_active = np.array(jnp.any(problem.feat_mask, axis=-1))
+        feat_active = np.array(problem.feat_mask)
+
+        # Static rule screens once, up front.
+        if rule == "static":
+            sphere = scr.static_sphere(
+                problem, lam_j, jnp.asarray(lam_max, dtype)
+            )
+            res = scr.screen(problem, sphere)
+            group_active &= np.asarray(res.group_active)
+            feat_active &= np.asarray(res.feat_active)
+            beta = beta * jnp.asarray(feat_active, dtype)
+
+        gap_history: list = []
+        active_history: list = []
+        epochs_done = 0
+        # Placeholder dual point (overwritten by the first certified
+        # round); lam_max is always known here (cached on the session).
+        theta = problem.y / max(float(lam_), float(lam_max))
+        gap = jnp.inf
+        round_res = first_round
+
+        while epochs_done < max_epochs:
+            # ---- fused gap + screening round (one XLA program; paper does
+            # this every f_ce passes on the full problem).  The first round
+            # may be injected by the path engine (sequential screening). ----
+            if round_res is None:
+                round_res = self._certified_round(
+                    beta, lam_j, jnp.asarray(lam_max, dtype), rule
+                )
+            gap, theta = round_res.gap, round_res.theta
+            g_act, f_act = round_res.group_active, round_res.feat_active
+            round_res = None
+            gap_history.append((epochs_done, float(gap)))
+
+            if float(gap) <= tol:
+                # Do NOT apply this round's masks: at convergence the
+                # rounded gap can under-estimate the true gap (to exactly 0
+                # in f32), so its sphere radius is not reliable, and zeroing
+                # beta here would invalidate the gap just reported.  The
+                # returned active sets reflect the last screen applied.
+                break
+
+            if rule in ("gap", "dynamic", "dst3"):
+                group_active &= np.asarray(g_act)
+                feat_active &= np.asarray(f_act)
+                feat_active &= group_active[:, None]
+                beta = beta * jnp.asarray(feat_active, dtype)
+
+            active_history.append(
+                (epochs_done, int(group_active.sum()),
+                 int(feat_active.sum()))
+            )
+
+            # ---- up to max_blocks x check BCD epochs in one jitted call --
+            if cfg.compact:
+                idx, take, Xt, Lg, w, gmask = caches.gather(
+                    problem, group_active
+                )
+                beta, k_done, _ = _inner_rounds(
+                    Xt, Lg, w, problem.y, beta, jnp.asarray(feat_active),
+                    take, gmask, problem.tau, lam_j,
+                    jnp.asarray(tol, dtype), check, max_blocks
+                )
+                epochs_done += check * int(k_done)
+            else:
+                Xt = jnp.transpose(problem.X, (1, 0, 2))
+                fmask = jnp.asarray(feat_active, dtype)
+                Lg = problem.Lg * jnp.asarray(group_active, dtype)
+                resid = problem.y - jnp.einsum("gnk,gk->n", Xt, beta)
+                beta, resid = bcd_epochs(
+                    Xt, Lg, problem.w, fmask, beta, resid, problem.tau,
+                    lam_j, f_ce
+                )
+                epochs_done += f_ce
+
+        return SolveResult(
+            beta=beta,
+            theta=theta,
+            gap=gap,
+            n_epochs=epochs_done,
+            group_active=group_active,
+            feat_active=feat_active,
+            gap_history=gap_history,
+            active_history=active_history,
+        )
+
+    def solve_path(
+        self,
+        lambdas: Optional[Sequence[float]] = None,
+        *,
+        T: int = 100,
+        delta: float = 3.0,
+        sequential: bool = True,
+        keep_results: bool = False,
+        batch_lambdas: int = 4,
+    ) -> PathResult:
+        """Solve the whole lambda path with sequential + dynamic screening.
+
+        Engine behavior (see the module docstring of
+        :mod:`repro.core.path` for the algorithmic background): a certified
+        :meth:`screen` round at each new lambda from the previous primal
+        point *before* any epoch, one gather cache carried down the grid,
+        and ``check_every="auto"`` scheduling from the sequential gap.
+        ``sequential=False`` reproduces the legacy naive loop (fresh caches
+        and no pre-solve screening per lambda).
+
+        On the distributed strategy, up to ``batch_lambdas`` *consecutive*
+        path points whose sequential certificates agree on the active
+        groups are solved in one batched-lambda FISTA run.
+        """
+        if self._dist is not None:
+            return self._dist.solve_path(
+                lambdas=lambdas, T=T, delta=delta, sequential=sequential,
+                keep_results=keep_results, batch_lambdas=batch_lambdas,
+            )
+        cfg = self.config
+        problem = self.problem
+        rule = cfg.rule
+        lam_max = self.lam_max
+        if lambdas is None:
+            lambdas = lambda_grid(lam_max, T=T, delta=delta)
+        lambdas = np.asarray(lambdas, float)
+        T_ = len(lambdas)
+
+        G, ng = problem.G, problem.ng
+        dtype = problem.X.dtype
+        n_feat = int(np.asarray(problem.feat_mask).sum())
+        n_groups = int(np.asarray(jnp.any(problem.feat_mask, axis=-1)).sum())
+        rounds0 = self.rounds
+        traces0 = kops.transpose_trace_count()
+
+        # One cache for the whole path: the gather (and its jit cache)
+        # survives across lambdas whose certified active set is unchanged.
+        # The naive mode gets a fresh cache per lambda (seed behavior) but
+        # still totals its gather count for the benchmark comparison.
+        caches = self.caches if sequential else None
+        n_gathers_total = 0
+
+        beta = jnp.zeros((G, ng), dtype)
+        betas = np.zeros((T_, G, ng), np.dtype(dtype))   # no up-cast
+        gaps = np.zeros(T_, float)
+        epochs = np.zeros(T_, np.int64)
+        gfrac = np.zeros(T_, float)
+        ffrac = np.zeros(T_, float)
+        g_act = np.zeros((T_, G), bool)
+        f_act = np.zeros((T_, G, ng), bool)
+        seq_scr = np.zeros(T_, np.int64)
+        dyn_scr = np.zeros(T_, np.int64)
+        results: list = []
+
+        screening_rule = rule in ("gap", "dynamic", "dst3")
+        for t, lam_ in enumerate(lambdas):
+            first_round = None
+            n_seq_active = n_groups
+            if sequential and rule != "static":
+                # Sequential rule: certified round at the NEW lambda from
+                # the PREVIOUS lambda's primal point, before any epoch here.
+                # The static rule is excluded: solve() applies its up-front
+                # static screen to beta before any round, which would
+                # invalidate a certificate evaluated at the un-masked warm
+                # start.
+                first_round = self.screen(float(lam_), beta, rule=rule)
+                if screening_rule:
+                    n_seq_active = int(
+                        np.asarray(first_round.group_active).sum()
+                    )
+                    seq_scr[t] = n_groups - n_seq_active
+
+            if cfg.check_every == "auto":
+                # Warm lambdas finish in a handful of passes, so per-epoch
+                # early-exit checks beat the f_ce-block floor; cold lambdas
+                # keep the cheap block cadence.  Warmness is read off the
+                # sequential certificate (gap already near tol), or
+                # predicted from the path itself: the previous lambda's
+                # epoch count, when positive and within four f_ce-blocks,
+                # marks a warm region (warmness varies smoothly along a
+                # geometric grid).  A zero count (lambda_max, or a user grid
+                # jumping far from the last point) carries no signal and
+                # must not force per-epoch checks on a cold lambda.
+                warm = (first_round is not None
+                        and float(first_round.gap)
+                        <= cfg.warm_gap_factor * cfg.tol)
+                warm |= t > 0 and 0 < epochs[t - 1] <= 4 * cfg.f_ce
+                check_t = 1 if warm else None
+            else:
+                check_t = cfg.check_every
+
+            lam_caches = caches if caches is not None else SolveCaches()
+            res = self.solve(
+                float(lam_),
+                beta0=beta,
+                first_round=first_round,
+                lam_max=lam_max,
+                check_every=check_t,
+                caches=lam_caches,
+            )
+            beta = res.beta
+            if caches is None:
+                n_gathers_total += lam_caches.n_gathers
+
+            betas[t] = np.asarray(res.beta)
+            gaps[t] = float(res.gap)
+            epochs[t] = res.n_epochs
+            g_act[t] = np.asarray(res.group_active)
+            f_act[t] = np.asarray(res.feat_active)
+            if first_round is not None and screening_rule:
+                if np.dtype(dtype).itemsize >= 8:
+                    # Report the sequential certificate even when solve
+                    # converged on that very round without applying it (beta
+                    # is untouched — only the REPORTED masks reflect the
+                    # certificate; see the converged-round note in solve()).
+                    # For lambdas where solve did apply screens this
+                    # intersection is a no-op (final masks are already
+                    # subsets).  Without it, Fig 2a/2b-style outputs read
+                    # 1.0 active exactly at the lambdas screening handled
+                    # outright.
+                    g_act[t] &= np.asarray(first_round.group_active)
+                    f_act[t] &= (np.asarray(first_round.feat_active)
+                                 & g_act[t][:, None])
+                elif res.n_epochs == 0:
+                    # In low precision the converged gap's cancellation
+                    # error can undershoot the GAP radius enough to
+                    # mis-certify borderline groups, so the certificate is
+                    # neither applied nor reported — zero the counter too,
+                    # keeping counters and masks consistent (all-active,
+                    # nothing discarded).
+                    seq_scr[t] = 0
+                    n_seq_active = n_groups
+            gfrac[t] = g_act[t].sum() / max(n_groups, 1)
+            ffrac[t] = f_act[t].sum() / max(n_feat, 1)
+            if screening_rule:
+                # g_act already includes the sequential certificate, so this
+                # is non-negative; max() guards rounding of refactors only.
+                dyn_scr[t] = max(0, n_seq_active - int(g_act[t].sum()))
+            if keep_results:
+                results.append(res)
+
+        return PathResult(
+            lambdas=lambdas,
+            betas=betas,
+            gaps=gaps,
+            epochs=epochs,
+            group_active_frac=gfrac,
+            feat_active_frac=ffrac,
+            group_active=g_act,
+            feat_active=f_act,
+            seq_screened=seq_scr,
+            dyn_screened=dyn_scr,
+            n_gathers=(caches.n_gathers if caches is not None
+                       else n_gathers_total),
+            results=results,
+            n_rounds=self.rounds - rounds0,
+            # Measured, not assumed: if any round during this path traced an
+            # on-the-fly transpose (persistent-design wiring regressed),
+            # every subsequent execution of that trace re-copies — attribute
+            # the whole path's rounds to it.
+            n_transpose_copies=(
+                self.rounds - rounds0
+                if kops.transpose_trace_count() > traces0 else 0
+            ),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Distributed strategy: FISTA + GAP screening under shard_map, behind the
+# same session methods
+# ---------------------------------------------------------------------------
+
+
+class _DistStrategy:
+    """Distributed FISTA strategy for :class:`SGLSession` (mesh mode).
+
+    Wraps the shard_map kernels of :mod:`repro.distributed.solver_dist`:
+    the certified round is the sharded ``screen`` kernel (GAP sphere +
+    Theorem-1 tests with psum/pmax collectives), single lambdas run the
+    ``fista`` kernel, and consecutive path points with coinciding certified
+    active sets run the ``fista_batch`` kernel — one X read serving all B
+    lambdas per step.
+    """
+
+    def __init__(self, session: SGLSession, mesh, *, multi_pod: bool,
+                 L: Optional[float]) -> None:
+        from ..distributed.solver_dist import make_dist_step
+
+        self.session = session
+        problem = session.problem
+        self.kernels = make_dist_step(
+            mesh, tau=float(problem.tau), multi_pod=multi_pod
+        )
+        self.fista = jax.jit(self.kernels.fista)
+        self.fista_batch = jax.jit(self.kernels.fista_batch)
+        self.screen_k = jax.jit(self.kernels.screen)
+        # Design-matrix norms: constants of the problem, computed once per
+        # session on the mesh (Frobenius group bound — safe for Thm 1).
+        self.colnorm, self.gfro = jax.jit(self.kernels.norms)(problem.X)
+        self.ynorm2 = float(jnp.sum(problem.y * problem.y))
+        self.L = float(L) if L is not None else _global_lipschitz(problem)
+
+    # -- certified round ----------------------------------------------------
+
+    def _round(self, lam_, beta, feat_mask):
+        """Raw sharded round: (feat_mask', group_mask, gap, dual_scale)."""
+        s = self.session
+        problem = s.problem
+        dtype = problem.X.dtype
+        s.rounds += 1
+        return self.screen_k(
+            problem.X, problem.y, jnp.asarray(beta, dtype),
+            jnp.asarray(feat_mask, dtype), problem.w,
+            self.colnorm, self.gfro,
+            jnp.asarray(lam_, dtype), jnp.asarray(self.ynorm2, dtype),
+        )
+
+    def screen(self, lam_, beta) -> RoundResult:
+        problem = self.session.problem
+        fm0 = jnp.asarray(problem.feat_mask, problem.X.dtype)
+        fmask, gmask, gap, _sc = self._round(lam_, beta, fm0)
+        # theta stays sharded on the mesh; certificates travel as masks.
+        return RoundResult(gap, None, np.asarray(gmask) > 0,
+                           np.asarray(fmask) > 0)
+
+    # -- single-lambda solve ------------------------------------------------
+
+    def _divergence_step(self, gap, state, mask_unchanged, gap0):
+        """FISTA restart + divergence safeguard, one check at a time.
+
+        ``state`` is the per-lambda ``[prev_gap, rose_before]`` pair
+        (mutated in place).  Returns ``(restart, raise_L)``:
+
+        * ``restart`` — the gap rose since the last check with no new
+          screening: kill the momentum (adaptive restart, O'Donoghue &
+          Candes 2015).  FISTA's gap is not monotone, and its ripples near
+          convergence can span two orders of magnitude, so a rise alone
+          says nothing about the step size — threshold-based detectors
+          (2x-previous, 100x-best) were both observed to false-trigger and
+          run L up by factors of 2^27.
+        * ``raise_L`` — the gap rose at TWO consecutive checks despite the
+          restart (or went non-finite) AND sits an order of magnitude above
+          the solve's first gap ``gap0``: after a restart the first steps
+          are momentum-free ISTA, which descends whenever the step is
+          valid, so a persistent rise (with the active set unchanged) that
+          also climbed past where the solve *started* is the signature of
+          an under-estimated Lipschitz constant (see
+          :func:`_global_lipschitz`).  L is doubled and persisted for the
+          rest of the session: an under-estimate costs speed, never
+          correctness.  The ``gap0`` gate exists because low-precision
+          runs wobble indefinitely at the f32 gap floor — consecutive-rise
+          noise there drove L up by 2^26 in testing, while true divergence
+          blows past 10x the initial gap within a few rounds.
+        """
+        g = float(gap)
+        if not np.isfinite(g):
+            self.L *= 2.0
+            state[0], state[1] = None, False
+            return True, True
+        rose = (state[0] is not None and mask_unchanged
+                and g > state[0])
+        raise_L = (rose and state[1]
+                   and gap0 is not None and g > 10.0 * gap0)
+        if raise_L:
+            self.L *= 2.0
+        state[0], state[1] = g, rose
+        return rose, raise_L
+
+    def solve(self, lam_, beta0=None, first_round=None,
+              feat_mask0=None) -> SolveResult:
+        cfg = self.session.config
+        problem = self.session.problem
+        dtype = problem.X.dtype
+        tol, f_ce, max_steps = cfg.tol, cfg.f_ce, cfg.max_epochs
+        # Low-precision guard (same reasoning as the single-device path
+        # reporter): at convergence the rounded gap's cancellation error
+        # can undershoot the GAP radius and mis-certify borderline groups,
+        # so sub-f64 runs do not adopt the converged round's masks.
+        low_prec = np.dtype(dtype).itemsize < 8
+        beta = (jnp.zeros((problem.G, problem.ng), dtype) if beta0 is None
+                else jnp.asarray(beta0, dtype))
+        z = beta
+        t_mom = jnp.ones(())
+        feat_mask = (jnp.asarray(problem.feat_mask, dtype)
+                     if feat_mask0 is None else jnp.asarray(feat_mask0,
+                                                            dtype))
+        gmask = jnp.asarray(jnp.any(problem.feat_mask, axis=-1), dtype)
+        lam_j = jnp.asarray(lam_, dtype)
+        gap = jnp.asarray(jnp.inf, dtype)
+        gap_history: list = []
+        injected = first_round
+        div_state = [None, False]      # [prev_gap, rose_before]
+        gap0 = None                    # first finite gap of this solve
+        best_gap, best_beta = None, None
+        prev_nact = None
+        n_steps = 0
+
+        for step in range(max_steps):
+            if step % f_ce == 0:
+                if injected is not None:
+                    # Sequential certificate from the path engine — consumed
+                    # as round 0 instead of recomputing it.
+                    gap = injected.gap
+                    gm_new = jnp.asarray(injected.group_active, dtype)
+                    fm_new = feat_mask * jnp.asarray(
+                        injected.feat_active, dtype
+                    )
+                    injected = None
+                else:
+                    fm_new, gm_new, gap, _sc = self._round(
+                        lam_j, beta, feat_mask
+                    )
+                gap_history.append((step, float(gap)))
+                if gap0 is None and np.isfinite(float(gap)):
+                    gap0 = float(gap)
+                if float(gap) <= tol:
+                    if not low_prec:
+                        feat_mask, gmask = fm_new, gm_new
+                    break
+                finite = np.isfinite(float(gap))
+                nact = float(jnp.sum(fm_new))
+                restart, raised = self._divergence_step(
+                    gap, div_state, nact == prev_nact, gap0
+                )
+                if raised:
+                    # A diverged trajectory can sit astronomically far from
+                    # the optimum (FISTA would need O(dist^2) epochs to walk
+                    # back): rewind to the best iterate seen.
+                    beta = (best_beta if best_beta is not None
+                            else jnp.zeros_like(beta))
+                if restart:
+                    z = beta
+                    t_mom = jnp.ones(())
+                if finite:
+                    # A NaN round's Theorem-1 comparisons all read False —
+                    # adopting those masks would permanently (masks are
+                    # monotone) zero beta on a round that certified
+                    # nothing.  Only finite rounds update the masks.
+                    if best_gap is None or float(gap) < best_gap:
+                        best_gap, best_beta = float(gap), beta
+                    prev_nact = nact
+                    feat_mask, gmask = fm_new, gm_new
+                beta = beta * feat_mask
+                z = z * feat_mask
+            beta, z, t_mom = self.fista(
+                problem.X, problem.y, beta, z, feat_mask, problem.w, t_mom,
+                lam_j, jnp.asarray(self.L, dtype),
+            )
+            n_steps = step + 1
+
+        return SolveResult(
+            beta=beta,
+            theta=None,
+            gap=gap,
+            n_epochs=n_steps,
+            group_active=np.asarray(gmask) > 0,
+            feat_active=np.asarray(feat_mask) > 0,
+            gap_history=gap_history,
+            active_history=[],
+        )
+
+    # -- batched-lambda solve (coinciding certified active sets) ------------
+
+    def _solve_batch(self, lams, beta0, certs):
+        """Solve B consecutive path points in ONE batched FISTA run.
+
+        All B lambdas warm-start from the same previous-lambda beta and
+        carry their own per-lambda certificate masks ((B, G, ng) state);
+        every f_ce steps each unconverged lambda gets its own certified
+        round (dynamic screening inside the batch).  Returns per-lambda
+        SolveResults (beta/masks snapshotted at first convergence).
+        """
+        cfg = self.session.config
+        problem = self.session.problem
+        dtype = problem.X.dtype
+        tol, f_ce, max_steps = cfg.tol, cfg.f_ce, cfg.max_epochs
+        low_prec = np.dtype(dtype).itemsize < 8
+        B = len(lams)
+        self.session.batched_lambdas += B
+
+        fm_full = jnp.asarray(problem.feat_mask, dtype)
+        gm_full = jnp.asarray(jnp.any(problem.feat_mask, axis=-1), dtype)
+        mask = jnp.stack([c[0] for c in certs])            # (B, G, ng)
+        gmask_b = [c[1] for c in certs]
+        gap_b = [c[2] for c in certs]
+        gap_history = [[(0, float(g))] for g in gap_b]
+        done = np.array([float(g) <= tol for g in gap_b])
+        steps_b = np.zeros(B, np.int64)
+        final_beta = [beta0 if done[b] else None for b in range(B)]
+        # Low-precision guard: a certificate whose gap already reads <= tol
+        # converged on a possibly-mis-rounded round, so sub-f64 runs report
+        # the full masks instead of adopting it (mirrors the single-device
+        # path reporter and _DistStrategy.solve).
+        conv_mask = (lambda b: fm_full) if low_prec else (lambda b: mask[b])
+        final_mask = [conv_mask(b) if done[b] else None for b in range(B)]
+        if low_prec:
+            gmask_b = [gm_full if done[b] else gmask_b[b] for b in range(B)]
+
+        beta = jnp.repeat(beta0[None], B, axis=0) * mask
+        z = beta
+        t_mom = jnp.ones((B,))
+        lam_j = jnp.asarray(np.asarray(lams), dtype)
+        div_state = [[None, False] for _ in range(B)]
+        gap0_b = [float(g) if np.isfinite(float(g)) else None
+                  for g in gap_b]      # per-lambda first gap (certificate)
+        best_gb = [None] * B
+        best_bb = [None] * B
+        prev_nact = [None] * B
+
+        step = 0
+        while not done.all() and step < max_steps:
+            for _ in range(f_ce):
+                beta, z, t_mom = self.fista_batch(
+                    problem.X, problem.y, beta, z, mask, problem.w, t_mom,
+                    lam_j, jnp.asarray(self.L, dtype),
+                )
+            step += f_ce
+            new_mask = []
+            restart_b = []
+            for b in range(B):
+                if done[b]:
+                    # Converged lambdas keep iterating inert under their
+                    # frozen mask (their reported state is the snapshot).
+                    new_mask.append(mask[b])
+                    continue
+                fm, gm, gap, _sc = self._round(lams[b], beta[b], mask[b])
+                gap_history[b].append((step, float(gap)))
+                if float(gap) <= tol:
+                    done[b] = True
+                    steps_b[b] = step
+                    final_beta[b] = beta[b]
+                    # Same low-precision converged-round guard as above.
+                    final_mask[b] = mask[b] if low_prec else fm
+                    if not low_prec:
+                        gmask_b[b] = gm
+                    new_mask.append(fm if not low_prec else mask[b])
+                    continue
+                finite = np.isfinite(float(gap))
+                if gap0_b[b] is None and finite:
+                    gap0_b[b] = float(gap)
+                nact = float(jnp.sum(fm))
+                restart, raised = self._divergence_step(
+                    gap, div_state[b], nact == prev_nact[b], gap0_b[b]
+                )
+                if raised:
+                    # Rewind the diverged lambda to its best iterate (see
+                    # the single-lambda driver).
+                    beta = beta.at[b].set(
+                        best_bb[b] if best_bb[b] is not None else 0.0
+                    )
+                if restart:
+                    restart_b.append(b)
+                if finite:
+                    # NaN-round masks certify nothing — keep the previous
+                    # ones (see the single-lambda driver).
+                    gmask_b[b] = gm
+                    if best_gb[b] is None or float(gap) < best_gb[b]:
+                        best_gb[b], best_bb[b] = float(gap), beta[b]
+                    prev_nact[b] = nact
+                    new_mask.append(fm)
+                else:
+                    new_mask.append(mask[b])
+            mask = jnp.stack(new_mask)
+            beta = beta * mask
+            z = z * mask
+            for b in restart_b:                       # adaptive restarts
+                z = z.at[b].set(beta[b])
+                t_mom = t_mom.at[b].set(1.0)
+
+        for b in range(B):
+            if not done[b]:       # max_steps stragglers
+                steps_b[b] = step
+                final_beta[b] = beta[b]
+                final_mask[b] = mask[b]
+
+        return [
+            SolveResult(
+                beta=final_beta[b],
+                theta=None,
+                gap=gap_history[b][-1][1],
+                n_epochs=int(steps_b[b]),
+                group_active=np.asarray(gmask_b[b]) > 0,
+                feat_active=np.asarray(final_mask[b]) > 0,
+                gap_history=gap_history[b],
+                active_history=[],
+            )
+            for b in range(B)
+        ]
+
+    # -- path engine --------------------------------------------------------
+
+    def solve_path(self, lambdas, T, delta, sequential, keep_results,
+                   batch_lambdas) -> PathResult:
+        s = self.session
+        cfg = s.config
+        problem = s.problem
+        dtype = problem.X.dtype
+        lam_max = s.lam_max
+        if lambdas is None:
+            lambdas = lambda_grid(lam_max, T=T, delta=delta)
+        lambdas = np.asarray(lambdas, float)
+        T_ = len(lambdas)
+        G, ng = problem.G, problem.ng
+        fm_full = jnp.asarray(problem.feat_mask, dtype)
+        n_feat = int(np.asarray(problem.feat_mask).sum())
+        n_groups = int(np.asarray(jnp.any(problem.feat_mask, axis=-1)).sum())
+        rounds0 = s.rounds
+
+        betas = np.zeros((T_, G, ng), np.dtype(dtype))
+        gaps = np.zeros(T_, float)
+        epochs = np.zeros(T_, np.int64)
+        gfrac = np.zeros(T_, float)
+        ffrac = np.zeros(T_, float)
+        g_act = np.zeros((T_, G), bool)
+        f_act = np.zeros((T_, G, ng), bool)
+        seq_scr = np.zeros(T_, np.int64)
+        dyn_scr = np.zeros(T_, np.int64)
+        results: list = []
+
+        def record(t, res, n_seq_active):
+            betas[t] = np.asarray(res.beta)
+            gaps[t] = float(res.gap)
+            epochs[t] = res.n_epochs
+            g_act[t] = np.asarray(res.group_active)
+            f_act[t] = np.asarray(res.feat_active)
+            gfrac[t] = g_act[t].sum() / max(n_groups, 1)
+            ffrac[t] = f_act[t].sum() / max(n_feat, 1)
+            dyn_scr[t] = max(0, n_seq_active - int(g_act[t].sum()))
+            if keep_results:
+                results.append(res)
+
+        beta = jnp.zeros((G, ng), dtype)
+        t = 0
+        while t < T_:
+            if sequential:
+                # Sequential certificates for the upcoming run, all from the
+                # current (previous lambda's) primal point — every GAP
+                # sphere from a feasible point is safe, so one beta can
+                # certify several lambdas ahead.
+                certs = [self._round(lambdas[t], beta, fm_full)]
+                base = np.asarray(certs[0][1]) > 0
+                while (len(certs) < batch_lambdas
+                       and t + len(certs) < T_):
+                    k = t + len(certs)
+                    ck = self._round(lambdas[k], beta, fm_full)
+                    if np.array_equal(np.asarray(ck[1]) > 0, base):
+                        certs.append(ck)
+                    else:
+                        # Mismatch: k re-certifies later from a warmer beta.
+                        break
+                for j, c in enumerate(certs):
+                    seq_scr[t + j] = n_groups - int(
+                        (np.asarray(c[1]) > 0).sum()
+                    )
+            else:
+                certs = [None]
+
+            low_prec = np.dtype(dtype).itemsize < 8
+            if len(certs) == 1:
+                cert = certs[0]
+                first = None
+                n_seq_active = n_groups
+                if cert is not None:
+                    first = RoundResult(
+                        cert[2], None, np.asarray(cert[1]) > 0,
+                        np.asarray(cert[0]) > 0,
+                    )
+                    n_seq_active = int(np.asarray(first.group_active).sum())
+                res = self.solve(float(lambdas[t]), beta0=beta,
+                                 first_round=first)
+                if low_prec and res.n_epochs == 0:
+                    # Converged on the certificate round in sub-f64: the
+                    # solve did not adopt (and does not report) its masks,
+                    # so keep counters consistent (see the single-device
+                    # path reporter).
+                    seq_scr[t] = 0
+                    n_seq_active = n_groups
+                record(t, res, n_seq_active)
+                beta = res.beta
+                t += 1
+            else:
+                run = self._solve_batch(lambdas[t:t + len(certs)], beta,
+                                        certs)
+                for j, res in enumerate(run):
+                    if low_prec and res.n_epochs == 0:
+                        seq_scr[t + j] = 0
+                    n_seq_active = n_groups - int(seq_scr[t + j])
+                    record(t + j, res, n_seq_active)
+                beta = run[-1].beta
+                t += len(certs)
+
+        return PathResult(
+            lambdas=lambdas,
+            betas=betas,
+            gaps=gaps,
+            epochs=epochs,
+            group_active_frac=gfrac,
+            feat_active_frac=ffrac,
+            group_active=g_act,
+            feat_active=f_act,
+            seq_screened=seq_scr,
+            dyn_screened=dyn_scr,
+            n_gathers=0,
+            results=results,
+            n_rounds=s.rounds - rounds0,
+            n_transpose_copies=0,   # sharded rounds are einsum-based: no
+                                    # feature-major copy is ever at stake
+        )

@@ -31,6 +31,9 @@ from .epsilon_norm import lam
 __all__ = [
     "SGLProblem",
     "make_problem",
+    "problem_from_grouped",
+    "flatten",
+    "unflatten",
     "sgl_norm",
     "sgl_dual_norm",
     "primal",
@@ -143,9 +146,69 @@ def make_problem(
     )
 
 
+def problem_from_grouped(
+    X: jax.Array,
+    y: jax.Array,
+    tau: float,
+    w=None,
+    feat_mask=None,
+) -> SGLProblem:
+    """Build an :class:`SGLProblem` directly from a grouped (n, G, ng) design.
+
+    Cheap constructor: column norms are exact, but the per-group spectral
+    norm ``Xnorm_grp`` (and hence ``Lg``) uses the Frobenius upper bound
+    ``||X_g||_F >= ||X_g||_2`` instead of a power iteration.  An upper bound
+    keeps both consumers valid — Theorem-1 tests stay *safe* (larger radius
+    term means fewer, never wrong, screens) and block-Lipschitz BCD steps
+    stay convergent (smaller steps).  This is the constructor behind the
+    raw-array ``solve_distributed`` wrapper, where the mesh kernels
+    recompute their own sharded norms anyway.
+
+    ``feat_mask`` defaults to the all-zero-column test (matching the
+    zero-padding convention of :func:`make_problem`).
+    """
+    X = jnp.asarray(X)
+    y = jnp.asarray(y, X.dtype)
+    if feat_mask is None:
+        feat_mask = jnp.any(X != 0, axis=0)           # (G, ng)
+    else:
+        feat_mask = jnp.asarray(feat_mask, bool)
+    if w is None:
+        w = jnp.sqrt(jnp.sum(feat_mask, axis=-1).astype(X.dtype))
+    else:
+        w = jnp.asarray(w, X.dtype)
+    col = jnp.linalg.norm(X, axis=0)                  # (G, ng)
+    fro2 = jnp.sum(X * X, axis=(0, 2))                # ||X_g||_F^2  (G,)
+    return SGLProblem(
+        X=X,
+        y=y,
+        w=w,
+        tau=jnp.asarray(tau, X.dtype),
+        feat_mask=feat_mask,
+        Lg=fro2,
+        Xnorm_col=col,
+        Xnorm_grp=jnp.sqrt(fro2),
+    )
+
+
 def flatten(problem: SGLProblem, beta_g: jax.Array) -> jax.Array:
     """Grouped (G, ng) -> flat (p,) coefficient view."""
     return beta_g[problem.feat_mask]
+
+
+def unflatten(problem: SGLProblem, beta_flat: jax.Array) -> jax.Array:
+    """Flat (p,) -> grouped (G, ng) coefficient view (inverse of
+    :func:`flatten`; padded slots come back zero).
+
+    jit-compatible: the scatter is expressed as a cumulative-count gather
+    over the static ``feat_mask`` rather than boolean indexing.
+    """
+    mask = jnp.ravel(problem.feat_mask)
+    beta_flat = jnp.asarray(beta_flat)
+    pos = jnp.cumsum(mask) - 1                         # flat slot -> (p,) index
+    vals = jnp.take(beta_flat, jnp.clip(pos, 0, beta_flat.shape[0] - 1))
+    vals = jnp.where(mask, vals, 0)
+    return vals.reshape(problem.feat_mask.shape).astype(beta_flat.dtype)
 
 
 # ----------------------------------------------------------------------------

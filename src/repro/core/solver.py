@@ -20,13 +20,18 @@ shrink monotonically.  The full-matrix correlation X^T theta needed for the
 gap/screening round is kept on the *full* problem, exactly as in the paper
 (that cost is amortised by f_ce).
 
-Path-engine hooks (used by :mod:`repro.core.path`):
+This module holds the jitted machinery (``bcd_epochs``, ``_inner_rounds``,
+``_screen_round``, ``_gather_static``) plus the round/caches primitives; the
+outer drivers live on :class:`repro.core.session.SGLSession` and the
+module-level :func:`solve` is a thin deprecated wrapper delegating there.
+
+Path-engine hooks (used by :meth:`repro.core.session.SGLSession.solve_path`):
 
 * :func:`screen_round` is the public resumable-round API — one certified
-  gap + Theorem-1 screening round.  The path engine calls it at a new
-  ``lambda_t`` with the previous lambda's ``beta`` (the paper's *sequential*
-  rule) and hands the result to :func:`solve` as ``first_round`` so the
-  round is not recomputed.
+  gap + Theorem-1 screening round, returned as a :class:`RoundResult`.
+  The path engine calls it at a new ``lambda_t`` with the previous
+  lambda's ``beta`` (the paper's *sequential* rule) and hands the result
+  to the solve as ``first_round`` so the round is not recomputed.
 * the hot correlation ``X^T resid`` and the SGL dual norm inside the round
   are routed through the Pallas kernels (:mod:`repro.kernels.ops`) when
   ``screen_backend`` resolves to ``"pallas"`` (the default on TPU).
@@ -42,7 +47,8 @@ Path-engine hooks (used by :mod:`repro.core.path`):
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple, Optional, Tuple
+import warnings
+from typing import NamedTuple, Optional
 
 import numpy as np
 import jax
@@ -57,11 +63,27 @@ from ..kernels import ops as kops
 __all__ = [
     "SolveResult",
     "SolveCaches",
+    "RoundResult",
     "solve",
     "bcd_epochs",
     "screen_round",
     "resolve_screen_backend",
 ]
+
+
+class RoundResult(NamedTuple):
+    """One certified gap + Theorem-1 screening round (GAP-sphere certificate).
+
+    Replaces the bare ``(gap, theta, group_active, feat_active)`` 4-tuple the
+    round family used to hand around by positional index; being a tuple
+    subclass, positional unpacking still works.  ``theta`` is None on the
+    distributed strategy (the dual point stays sharded on the mesh).
+    """
+
+    gap: jax.Array                   # certified duality gap at (beta, lam)
+    theta: Optional[jax.Array]       # (n,) dual feasible point (Eq. 15)
+    group_active: jax.Array          # (G,) bool — False = certified zero
+    feat_active: jax.Array           # (G, ng) bool — False = certified zero
 
 
 class SolveResult(NamedTuple):
@@ -187,21 +209,25 @@ def resolve_screen_backend(backend: str) -> str:
 
 @functools.partial(jax.jit, static_argnames=("rule", "backend"))
 def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
-                  lam_max: jax.Array, rule: str, backend: str = "xla"):
+                  lam_max: jax.Array, rule: str, backend: str = "xla",
+                  xt_pre: Optional[jax.Array] = None):
     """One fused gap + screening round (single XLA program).
 
     The eager version of this round cost ~50 small dispatches; fusing it is
     what makes screening overhead negligible per round (see EXPERIMENTS.md
-    §Perf, solver iteration 1).  Returns (gap, theta, group_act, feat_act);
-    for rules that do not screen dynamically the masks are all-true.
+    §Perf, solver iteration 1).  Returns a :class:`RoundResult`; for rules
+    that do not screen dynamically the masks are all-true.
 
     ``backend="pallas"`` computes the hot X^T resid correlation through the
-    fused Pallas matvec kernel and the SGL dual norm through the Pallas
+    corr-only Pallas matvec kernel and the SGL dual norm through the Pallas
     bisection kernel (kernels.ops); ``"xla"`` uses plain einsums.
+    ``xt_pre`` is the persistent (p, n) transposed design from
+    :func:`repro.kernels.ops.prepare_transposed` — without it every
+    Pallas-backed round materialises a fresh transposed copy of X.
     """
     resid = problem.y - jnp.einsum("ngk,gk->n", problem.X, beta)
     if backend == "pallas":
-        corr = kops.screening_corr_grouped(problem.X, resid)
+        corr = kops.screening_corr_grouped(problem.X, resid, xt_pre=xt_pre)
         dual_norm = kops.sgl_dual_norm_fused(corr, problem.tau, problem.w)
     else:
         corr = jnp.einsum("ngk,n->gk", problem.X, resid)
@@ -227,7 +253,7 @@ def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
             jnp.asarray(problem.feat_mask),
             scr.Sphere(theta, jnp.inf),
         )
-    return gap, theta, res.group_active, res.feat_active
+    return RoundResult(gap, theta, res.group_active, res.feat_active)
 
 
 def screen_round(
@@ -237,16 +263,20 @@ def screen_round(
     lam_max: float = 0.0,
     rule: str = "gap",
     backend: str = "auto",
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    xt_pre: Optional[jax.Array] = None,
+) -> RoundResult:
     """Public resumable-round API: one certified gap + screening round.
 
-    Returns ``(gap, theta, group_active, feat_active)`` — a GAP-sphere
-    certificate valid at ``lam_``.  Calling this at a *new* lambda with the
-    *previous* lambda's ``beta`` is exactly the paper's sequential screening
-    rule; the result can be fed to :func:`solve` as ``first_round`` so the
-    solve starts on the reduced problem with zero duplicated work.
+    Returns a :class:`RoundResult` — a GAP-sphere certificate valid at
+    ``lam_``.  Calling this at a *new* lambda with the *previous* lambda's
+    ``beta`` is exactly the paper's sequential screening rule; the result
+    can be fed to :func:`solve` as ``first_round`` so the solve starts on
+    the reduced problem with zero duplicated work.
 
     ``rule="dst3"`` needs the true ``lam_max`` (its sphere divides by it).
+    ``xt_pre``: persistent transposed design (Pallas backend only) — see
+    :meth:`repro.core.session.SGLSession.screen`, which supplies it
+    automatically.
     """
     if rule == "dst3" and not lam_max > 0.0:
         raise ValueError("rule='dst3' requires lam_max > 0 (pass lambda_max)")
@@ -266,6 +296,7 @@ def screen_round(
         jnp.asarray(lam_max, dtype),
         rule,
         resolve_screen_backend(backend),
+        xt_pre,
     )
 
 
@@ -378,6 +409,18 @@ def solve(
 ) -> SolveResult:
     """Solve one SGL instance at regularisation ``lam_``.
 
+    .. deprecated::
+        Thin wrapper over the session API — loose kwargs map onto
+        :class:`repro.core.session.SolverConfig` fields of the same names
+        and the solve delegates to
+        :meth:`repro.core.session.SGLSession.solve`.  Prefer::
+
+            session = SGLSession(problem, SolverConfig(tol=1e-8))
+            res = session.solve(lam_)
+
+        A session additionally keeps a persistent transposed design for the
+        Pallas-backed rounds and carries the gather cache across calls.
+
     rule in {"gap", "static", "dynamic", "dst3", "none"}.
     ``tol`` is the duality-gap stopping threshold (paper uses 1e-8).
     ``inner_rounds``: how many f_ce-epoch blocks run inside one jitted
@@ -385,144 +428,30 @@ def solve(
     early-exit uses the reduced-problem gap, so safety is unaffected.
     ``check_every``: epochs between reduced-gap early-exit checks inside
     the jitted inner loop (default ``f_ce``, i.e. one check per block; the
-    path engine passes 1).  At most ``inner_rounds * f_ce`` epochs run
-    between certified full rounds (fewer when ``check_every`` does not
-    divide that product — the block count rounds down).
-    With ``compact=False`` the solver runs plain ``f_ce``-epoch blocks and
-    both ``inner_rounds`` and ``check_every`` are ignored.
-
-    Path-engine parameters:
-
-    * ``first_round``: a ``(gap, theta, group_active, feat_active)`` tuple
-      from :func:`screen_round` evaluated at (``beta0``, ``lam_``);
-      consumed as the first certified round instead of recomputing it.
-      Incompatible with ``rule="static"`` (the static screen re-masks
-      ``beta0``, invalidating the certificate) — a ``ValueError`` is
-      raised.
-    * ``caches``: a :class:`SolveCaches` shared across calls so the
-      compacted gather survives between lambdas.
-    * ``screen_backend``: "auto" | "xla" | "pallas" — correlation/dual-norm
-      backend for the certified rounds (see :func:`resolve_screen_backend`).
+    path engine passes 1).  With ``compact=False`` the solver runs plain
+    ``f_ce``-epoch blocks and ``inner_rounds``/``check_every`` are ignored.
+    ``first_round``: a :class:`RoundResult` from :func:`screen_round`
+    evaluated at (``beta0``, ``lam_``), consumed as the first certified
+    round.  ``caches``: a :class:`SolveCaches` shared across calls.
     """
-    if first_round is not None and rule == "static":
-        # The static screen re-masks (and zeroes parts of) beta0 before the
-        # loop, so an injected certificate evaluated at the original beta0
-        # would no longer certify the beta actually being solved.
-        raise ValueError(
-            "first_round certifies beta0 as passed; it cannot be combined "
-            "with rule='static'"
-        )
-    if first_round is not None and beta0 is None:
-        # Without beta0 the solve starts from zeros, which the injected
-        # certificate was (almost certainly) not evaluated at — if its gap
-        # were <= tol the zeros would be returned as a "converged" solution.
-        raise ValueError(
-            "first_round requires the beta0 it was evaluated at"
-        )
     if isinstance(check_every, str):
         raise ValueError(
             "check_every must be an int or None for solve(); "
             "'auto' scheduling exists only on solve_path()"
         )
-    G, ng = problem.G, problem.ng
-    dtype = problem.X.dtype
-    beta = jnp.zeros((G, ng), dtype) if beta0 is None else jnp.asarray(beta0, dtype)
-    lam_j = jnp.asarray(lam_, dtype)
-    backend = resolve_screen_backend(screen_backend)
-    if caches is None:
-        caches = SolveCaches()
-    check = f_ce if check_every is None else max(1, int(check_every))
-    # Never exceed the certified-round cadence, and keep degenerate inputs
-    # (f_ce or inner_rounds <= 0) from collapsing the block size to 0.
-    check = max(1, min(check, f_ce * inner_rounds))
-    max_blocks = max(1, (f_ce * inner_rounds) // check)
+    from .session import SGLSession, SolverConfig
 
-    if lam_max is None and rule in ("static", "dst3"):
-        lam_max = float(sgl.lambda_max(problem))
-
-    group_active = np.array(jnp.any(problem.feat_mask, axis=-1))
-    feat_active = np.array(problem.feat_mask)
-
-    # Static rule screens once, up front.
-    if rule == "static":
-        sphere = scr.static_sphere(problem, lam_j, jnp.asarray(lam_max, dtype))
-        res = scr.screen(problem, sphere)
-        group_active &= np.asarray(res.group_active)
-        feat_active &= np.asarray(res.feat_active)
-        beta = beta * jnp.asarray(feat_active, dtype)
-
-    gap_history: list = []
-    active_history: list = []
-    epochs_done = 0
-    # Placeholder dual point (overwritten by the first certified round);
-    # reuse the caller-provided lam_max instead of recomputing the O(n p)
-    # dual norm of X^T y once per lambda on a path.
-    if lam_max is not None:
-        theta = problem.y / max(float(lam_), float(lam_max))
-    else:
-        theta = problem.y / jnp.maximum(lam_j, sgl.lambda_max(problem))
-    gap = jnp.inf
-    round_res = first_round
-
-    while epochs_done < max_epochs:
-        # ---- fused gap + screening round (one XLA program; paper does this
-        # every f_ce passes on the full problem).  The first round may be
-        # injected by the path engine (sequential screening). ----
-        if round_res is None:
-            lam_max_j = jnp.asarray(
-                lam_max if lam_max is not None else 0.0, dtype
-            )
-            round_res = _screen_round(
-                problem, beta, lam_j, lam_max_j, rule, backend
-            )
-        gap, theta, g_act, f_act = round_res
-        round_res = None
-        gap_history.append((epochs_done, float(gap)))
-
-        if float(gap) <= tol:
-            # Do NOT apply this round's masks: at convergence the rounded
-            # gap can under-estimate the true gap (to exactly 0 in f32), so
-            # its sphere radius is not reliable, and zeroing beta here would
-            # invalidate the gap just reported.  The returned active sets
-            # reflect the last screen actually applied.
-            break
-
-        if rule in ("gap", "dynamic", "dst3"):
-            group_active &= np.asarray(g_act)
-            feat_active &= np.asarray(f_act)
-            feat_active &= group_active[:, None]
-            beta = beta * jnp.asarray(feat_active, dtype)
-
-        active_history.append(
-            (epochs_done, int(group_active.sum()), int(feat_active.sum()))
-        )
-
-        # ---- up to max_blocks x check BCD epochs in one jitted call ----
-        if compact:
-            idx, take, Xt, Lg, w, gmask = caches.gather(problem, group_active)
-            beta, k_done, _ = _inner_rounds(
-                Xt, Lg, w, problem.y, beta, jnp.asarray(feat_active),
-                take, gmask, problem.tau, lam_j, jnp.asarray(tol, dtype),
-                check, max_blocks
-            )
-            epochs_done += check * int(k_done)
-        else:
-            Xt = jnp.transpose(problem.X, (1, 0, 2))
-            fmask = jnp.asarray(feat_active, dtype)
-            Lg = problem.Lg * jnp.asarray(group_active, dtype)
-            resid = problem.y - jnp.einsum("gnk,gk->n", Xt, beta)
-            beta, resid = bcd_epochs(
-                Xt, Lg, problem.w, fmask, beta, resid, problem.tau, lam_j, f_ce
-            )
-            epochs_done += f_ce
-
-    return SolveResult(
-        beta=beta,
-        theta=theta,
-        gap=gap,
-        n_epochs=epochs_done,
-        group_active=group_active,
-        feat_active=feat_active,
-        gap_history=gap_history,
-        active_history=active_history,
+    warnings.warn(
+        "repro.core.solve() is deprecated; use "
+        "SGLSession(problem, SolverConfig(...)).solve(lam_)",
+        DeprecationWarning, stacklevel=2,
+    )
+    cfg = SolverConfig(
+        tol=tol, max_epochs=max_epochs, f_ce=f_ce, rule=rule,
+        compact=compact, inner_rounds=inner_rounds, check_every=check_every,
+        screen_backend=screen_backend,
+    )
+    session = SGLSession(problem, cfg, caches=caches)
+    return session.solve(
+        lam_, beta0=beta0, first_round=first_round, lam_max=lam_max
     )

@@ -247,38 +247,35 @@ def solve_distributed(
 ):
     """Host driver: FISTA with screening every f_ce steps on a live mesh.
 
-    Used by tests on the single-device mesh and by launch/train.py on the
-    production mesh.
+    .. deprecated::
+        Thin wrapper over the session API — the raw-array signature became
+        ``SGLSession(problem_from_grouped(X, y, tau, w), mesh=mesh)``::
+
+            from repro.core import SGLSession, SolverConfig, problem_from_grouped
+            session = SGLSession(problem_from_grouped(X, y, tau=tau, w=w),
+                                 SolverConfig(tol=tol, max_epochs=max_steps,
+                                              f_ce=f_ce),
+                                 mesh=mesh, L=L)
+            res = session.solve(lam_)
+
+        The session form additionally exposes ``solve_path`` (sequential
+        certificates + batched-lambda FISTA on the mesh) and ``screen``.
+
+    Returns the legacy tuple ``(beta, gap, gaps, feat_mask)``.
     """
-    kernels = make_dist_step(mesh, tau=tau, multi_pod=multi_pod)
-    fista = jax.jit(kernels.fista)
-    screen = jax.jit(kernels.screen)
-    norms = jax.jit(kernels.norms)
+    import warnings
 
-    G, ng = X.shape[1], X.shape[2]
-    beta = jnp.zeros((G, ng), X.dtype)
-    z = jnp.zeros_like(beta)
-    t = jnp.ones(())
-    feat_mask = jnp.ones((G, ng), X.dtype)
-    ynorm2 = float(jnp.sum(y * y))
-    gap = jnp.inf
-    colnorm, gfro = norms(X)   # constants of the problem — computed once
+    from repro.core.session import SGLSession, SolverConfig
+    from repro.core.sgl import problem_from_grouped
 
-    gaps = []
-    for step in range(max_steps):
-        if step % f_ce == 0:
-            feat_mask, gmask, gap, sc = screen(
-                X, y, beta, feat_mask, w, colnorm, gfro,
-                jnp.asarray(lam_, X.dtype), jnp.asarray(ynorm2, X.dtype),
-            )
-            gaps.append((step, float(gap)))
-            if float(gap) <= tol:
-                break
-            beta = beta * feat_mask
-            z = z * feat_mask
-        beta, z, t = fista(
-            X, y, beta, z, feat_mask, w, t,
-            jnp.asarray(lam_, X.dtype), jnp.asarray(L, X.dtype),
-        )
-
-    return beta, float(gap), gaps, feat_mask
+    warnings.warn(
+        "solve_distributed() is deprecated; use "
+        "SGLSession(problem_from_grouped(...), mesh=mesh).solve(lam_)",
+        DeprecationWarning, stacklevel=2,
+    )
+    problem = problem_from_grouped(X, y, tau=tau, w=w)
+    cfg = SolverConfig(tol=tol, max_epochs=max_steps, f_ce=f_ce)
+    session = SGLSession(problem, cfg, mesh=mesh, multi_pod=multi_pod, L=L)
+    res = session.solve(lam_)
+    feat_mask = jnp.asarray(res.feat_active, problem.X.dtype)
+    return res.beta, float(res.gap), res.gap_history, feat_mask

@@ -10,7 +10,12 @@ Three kernels (each `<name>.py` + dispatch in `ops.py` + oracle in `ref.py`):
 * ``screening_scores`` -- fused correlation matvec X^T theta with the
                          soft-thresholded square needed by the Theorem-1
                          tests, accumulated in VMEM so the correlation vector
-                         never round-trips through HBM before thresholding.
+                         never round-trips through HBM before thresholding;
+                         plus a corr-only variant for the certified gap
+                         round, which rescales before thresholding and fed
+                         from the session's persistent transposed design
+                         (``ops.prepare_transposed``) avoids the per-round
+                         (p, n) transposed copy of X.
 
 On CPU (this container) they execute with ``interpret=True`` and are validated
 against the ``ref.py`` pure-jnp oracles; on TPU the same code lowers to Mosaic.

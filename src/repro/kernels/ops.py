@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from .dual_norm import dual_norm_pallas
-from .screening_scores import screening_scores_pallas
+from .screening_scores import screening_corr_pallas, screening_scores_pallas
 from .sgl_prox import sgl_prox_pallas
 
 
@@ -50,13 +50,19 @@ def dual_norm_groups(x, alpha, R, n_iter: int = 64, block_g: int = 256):
     return out[:G]
 
 
+def _corr_blocks(p: int, n: int, block_p: int = 256, block_n: int = 128):
+    """Block shapes the correlation kernels tile (p, n) with — shared by the
+    on-the-fly pad path and :func:`prepare_transposed` so a persistent
+    transposed design is always laid out exactly as the kernel expects."""
+    return min(block_p, max(8, p)), min(block_n, max(8, n))
+
+
 @functools.partial(jax.jit, static_argnames=("tau", "block_p", "block_n"))
 def screening_scores(Xt, theta, tau: float, block_p: int = 256,
                      block_n: int = 128):
     """Fused corr = X^T theta and S_tau(corr)^2; Xt (p, n), theta (n,)."""
     p, n = Xt.shape
-    bp = min(block_p, max(8, p))
-    bn = min(block_n, max(8, n))
+    bp, bn = _corr_blocks(p, n, block_p, block_n)
     Xp = _pad_to(_pad_to(Xt, 0, bp), 1, bn)
     tp = _pad_to(theta, 0, bn)
     corr, st2 = screening_scores_pallas(
@@ -65,19 +71,83 @@ def screening_scores(Xt, theta, tau: float, block_p: int = 256,
     return corr[:p], st2[:p]
 
 
-def screening_corr_grouped(X: jax.Array, v: jax.Array) -> jax.Array:
-    """Grouped correlation X^T v via the fused Pallas matvec kernel.
+@functools.partial(jax.jit, static_argnames=("block_p", "block_n"))
+def screening_corr(Xt, theta, block_p: int = 256, block_n: int = 128):
+    """Corr-only Pallas matvec: Xt (p, n), theta (n,) -> (p,).
+
+    Unlike :func:`screening_scores` there is no S_tau(corr)^2 output — this
+    is the right entry point for the certified gap round, whose correlation
+    is rescaled by the (corr-dependent) dual scale before any thresholding.
+    ``Xt`` may be pre-padded to the kernel blocks (see
+    :func:`prepare_transposed`); padding rows/cols are zero and inert.
+    """
+    p, n = Xt.shape
+    bp, bn = _corr_blocks(p, n, block_p, block_n)
+    Xp = _pad_to(_pad_to(Xt, 0, bp), 1, bn)
+    tp = _pad_to(theta, 0, bn)
+    corr = screening_corr_pallas(Xp, tp, block_p=bp, block_n=bn)
+    return corr[:p]
+
+
+def prepare_transposed(X: jax.Array) -> jax.Array:
+    """Materialise the (p, n) transposed design ONCE, padded to the
+    correlation-kernel blocks.
+
+    X (n, G, ng) grouped design -> (p_pad, n_pad) array suitable as the
+    ``xt_pre`` argument of :func:`screening_corr_grouped`.  The Pallas
+    correlation kernels need the feature-major layout; without a persistent
+    copy, every certified screening round's ``X.reshape(n, p).T`` forces XLA
+    to materialise a fresh (p, n) transpose per call (ROADMAP perf item).
+    An :class:`repro.core.session.SGLSession` builds this once and reuses it
+    across every round of a whole lambda path.
+    """
+    n, G, ng = X.shape
+    p = G * ng
+    bp, bn = _corr_blocks(p, n)
+    Xt = X.reshape(n, p).T
+    return _pad_to(_pad_to(Xt, 0, bp), 1, bn)
+
+
+# Audit hook: number of jit TRACES (not executions) in which
+# screening_corr_grouped had to materialise the (p, n) transpose itself
+# because no persistent design was supplied.  A session-driven path must
+# leave this untouched — if the xt_pre wiring ever regressed, the first
+# certified round would build a transposing trace and move this counter,
+# which is exactly what tests/benchmarks watch for.  Each such trace
+# re-executes its transpose on every call, so any nonzero delta means
+# per-round copies are back.
+_TRANSPOSE_TRACES = 0
+
+
+def transpose_trace_count() -> int:
+    return _TRANSPOSE_TRACES
+
+
+def screening_corr_grouped(X: jax.Array, v: jax.Array,
+                           xt_pre: jax.Array | None = None) -> jax.Array:
+    """Grouped correlation X^T v via the corr-only Pallas matvec kernel.
 
     X (n, G, ng) zero-padded grouped design, v (n,) -> (G, ng).  Padded
     feature columns are zero in X, so their correlations come out zero and
     stay inert downstream — same contract as the einsum path.  This is the
     hot half of the solver's certified screening round (solver.screen_round
     with backend="pallas").
+
+    ``xt_pre``: persistent transposed design from :func:`prepare_transposed`.
+    When given, the kernel consumes it directly and the per-call (p, n)
+    transposed copy of X is eliminated; when None, the transpose is
+    materialised on the fly (legacy behavior).
     """
     n, G, ng = X.shape
-    Xt = X.reshape(n, G * ng).T                        # (p, n), free reshape
-    corr, _ = screening_scores(Xt, v, tau=0.0)         # st2 unused here
-    return corr.reshape(G, ng)
+    p = G * ng
+    if xt_pre is None:
+        global _TRANSPOSE_TRACES
+        _TRANSPOSE_TRACES += 1
+        Xt = X.reshape(n, p).T
+    else:
+        Xt = xt_pre
+    corr = screening_corr(Xt, v)
+    return corr[:p].reshape(G, ng)
 
 
 def sgl_dual_norm_fused(corr_grouped, tau, w, n_iter: int = 64):

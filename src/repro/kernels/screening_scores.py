@@ -1,17 +1,30 @@
-"""Fused correlation + screening-statistics Pallas kernel.
+"""Fused correlation + screening-statistics Pallas kernels.
 
-Computes, in one pass over the design matrix tiles:
+Two variants over the same blocked matvec:
 
-    corr = X^T theta                      (p,)   — needed by the feature test
-    st2  = S_tau(corr)^2                  (p,)   — summed per group by the
+* :func:`screening_scores_pallas` computes, in one pass over the design
+  matrix tiles:
+
+      corr = X^T theta                    (p,)   — needed by the feature test
+      st2  = S_tau(corr)^2                (p,)   — summed per group by the
                                                    wrapper for the group test
+
+  Used when the screening threshold ``tau`` applies to ``corr`` itself
+  (sphere centers, i.e. ``corr = X^T theta_c``): the soft-thresholded
+  square never makes an HBM round trip before thresholding, and
+  ``screening.screen_with_corr`` consumes ``st2`` directly instead of
+  re-thresholding.
+
+* :func:`screening_corr_pallas` is the corr-only variant for the certified
+  gap round, where ``corr = X^T resid`` still has to be *rescaled* by the
+  (corr-dependent) dual scale before any thresholding — computing st2 there
+  would be wasted work that the caller must discard (the pre-PR-2 behavior).
 
 The matvec is blocked (bp x bn) with the K (sample) axis as the innermost
 sequential grid dimension; the correlation block accumulates in the output
-VMEM tile across K steps (standard Pallas accumulation pattern), and the
-soft-thresholded square is computed on the final K step while the block is
-still resident — the correlation never makes an HBM round trip before
-thresholding.  MXU-friendly when bp, bn are multiples of 128.
+VMEM tile across K steps (standard Pallas accumulation pattern), and any
+finalisation happens on the final K step while the block is still resident.
+MXU-friendly when bp, bn are multiples of 128.
 """
 from __future__ import annotations
 
@@ -73,3 +86,47 @@ def screening_scores_pallas(
         interpret=interpret,
     )(Xt, theta[:, None])
     return corr[:, 0], st2[:, 0]
+
+
+def _corr_kernel(xt_ref, theta_ref, corr_ref, *, nk: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        corr_ref[...] = jnp.zeros_like(corr_ref)
+
+    corr_ref[...] += xt_ref[...] @ theta_ref[...]      # (bp, bn) @ (bn, 1)
+
+
+def screening_corr_pallas(
+    Xt: jax.Array,       # (p, n) design matrix transposed
+    theta: jax.Array,    # (n,)
+    *,
+    block_p: int = 256,
+    block_n: int = 128,
+    interpret: bool | None = None,
+):
+    """Corr-only variant: blocked corr = Xt @ theta without the st2 output.
+
+    The certified gap round rescales corr by the dual scale before
+    thresholding, so the fused kernel's S_tau(corr)^2 half is dead weight
+    there — this variant skips both its compute and its (p,) HBM write.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    p, n = Xt.shape
+    assert p % block_p == 0 and n % block_n == 0, (p, n, block_p, block_n)
+    nk = n // block_n
+    grid = (p // block_p, nk)
+    corr = pl.pallas_call(
+        functools.partial(_corr_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_p, block_n), lambda i, k: (i, k)),
+            pl.BlockSpec((block_n, 1), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_p, 1), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, 1), Xt.dtype),
+        interpret=interpret,
+    )(Xt, theta[:, None])
+    return corr[:, 0]

@@ -57,6 +57,9 @@ def parse_args():
     ap.add_argument("--n", type=int, default=100)
     ap.add_argument("--p", type=int, default=1000)
     ap.add_argument("--groups", type=int, default=100)
+    ap.add_argument("--path-T", type=int, default=1,
+                    help="also run a T-point lambda path on the mesh "
+                         "(sequential certificates + batched FISTA)")
     return ap.parse_args()
 
 
@@ -64,8 +67,8 @@ def run_solver(args):
     import jax
     import jax.numpy as jnp
 
+    from repro.core import SGLSession, SolverConfig, make_problem
     from repro.data.synthetic import make_synthetic
-    from repro.distributed.solver_dist import solve_distributed
     from repro.launch import mesh as meshlib
 
     mesh = (meshlib.make_production_mesh() if args.production_mesh
@@ -73,26 +76,37 @@ def run_solver(args):
     X, y, _, sizes = make_synthetic(n=args.n, p=args.p,
                                     n_groups=args.groups, dtype=np.float32)
     G = args.groups
-    ng = args.p // G
-    Xg = jnp.asarray(X.reshape(args.n, G, ng))
-    yj = jnp.asarray(y)
-    w = jnp.sqrt(jnp.full((G,), float(ng), jnp.float32))
     L = float(jnp.linalg.norm(X, 2) ** 2)
 
-    from repro.core import make_problem, lambda_max
-    lam_max = float(lambda_max(make_problem(X, y, sizes, tau=args.tau)))
-    lam = lam_max / 20.0
+    # One session = problem + mesh strategy + solver config; the same
+    # front-end the single-device examples use.
+    problem = make_problem(X, y, sizes, tau=args.tau)
+    session = SGLSession(
+        problem, SolverConfig(tol=args.tol, max_epochs=5000),
+        mesh=mesh, L=L,
+    )
+    lam = session.lam_max / 20.0
     print(f"distributed FISTA+GAP on mesh {dict(zip(mesh.axis_names, mesh.devices.shape))}, "
           f"lam = lam_max/20 = {lam:.4f}")
     t0 = time.perf_counter()
-    beta, gap, gaps, mask = solve_distributed(
-        mesh, Xg, yj, w, tau=args.tau, lam_=lam, L=L,
-        tol=args.tol, max_steps=5000,
-    )
+    res = session.solve(lam)
     dt = time.perf_counter() - t0
-    active = int(jnp.sum(jnp.any(jnp.abs(beta) > 0, axis=1)))
-    print(f"gap {gap:.3e} in {dt:.1f}s; active groups {active}/{G}; "
-          f"screened {G - int(jnp.sum(jnp.any(mask > 0, axis=1)))}")
+    active = int(jnp.sum(jnp.any(jnp.abs(res.beta) > 0, axis=1)))
+    print(f"gap {float(res.gap):.3e} in {dt:.1f}s ({res.n_epochs} FISTA "
+          f"steps, {session.rounds} screen rounds); "
+          f"active groups {active}/{G}; "
+          f"screened {G - int(res.group_active.sum())}")
+
+    if args.path_T > 1:
+        # Lambda path on the mesh: sequential certificates + batched-lambda
+        # FISTA for consecutive points with coinciding certified sets.
+        t0 = time.perf_counter()
+        path = session.solve_path(T=args.path_T, delta=2.0)
+        dt = time.perf_counter() - t0
+        print(f"path T={args.path_T}: {dt:.1f}s, "
+              f"epochs {path.epochs.tolist()}, "
+              f"seq screened {int(path.seq_screened.sum())} certificates, "
+              f"{session.batched_lambdas} lambdas batched")
 
 
 def run_train(args):
