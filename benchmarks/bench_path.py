@@ -22,6 +22,17 @@ Modes:
   (``n_rounds``) minus the copies actually measured (trace audit,
   ``PathResult.n_transpose_copies``); reported as 0 on the XLA backend,
   where no transposed copy was ever at stake.
+
+The session mode additionally reports the compacted-certified-round audit:
+``compact_rounds`` / ``full_rounds`` split the path's certified rounds by
+whether they ran on the compacted (n, p_active) buffer or the full
+problem, and ``round_flop_reduction`` is the measured ratio between what
+full-rounds-only would have cost (rounds x ~4 n p) and the round FLOPs
+actually spent (``PathResult.round_flops``, fallback attempts included).
+
+``--smoke`` runs a reduced synthetic config and *asserts* the two audits
+the CI watches — zero on-the-fly transposed copies, compact rounds
+actually exercised — plus engine-vs-naive beta parity, then exits.
 """
 from __future__ import annotations
 
@@ -41,6 +52,60 @@ MODE_KWARGS = {
     "naive": dict(sequential=False, check_every=None),
     "engine": dict(sequential=True, check_every="auto"),
 }
+
+
+def smoke(n=64, p=512, n_groups=64, T=10, delta=2.0, tau=0.3,
+          tol=1e-7, max_epochs=20_000) -> None:
+    """CI-sized audit run: transpose + compact-round accounting asserted.
+
+    Exercises both audits on every PR instead of only in manual benchmark
+    runs: a session-wiring regression that reintroduced per-round (p, n)
+    transposed copies, or one that silently stopped dispatching compact
+    rounds, fails this step outright.
+    """
+    import numpy as np
+
+    from repro.data.synthetic import make_synthetic
+
+    X, y, _, sizes = make_synthetic(n=n, p=p, n_groups=n_groups, gamma1=3,
+                                    gamma2=3, seed=11)
+    problem = sgl.make_problem(X, y, sizes, tau=tau)
+
+    # full_round_every is disabled so full rounds can ONLY come from the T
+    # sequential screens, bound-crossing fallbacks, oversized buffers, and
+    # the converged-round confirmation — which makes the full-round floor
+    # below a real check of the confirmation invariant instead of being
+    # satisfied by the sequential rounds alone.
+    session = SGLSession(problem, SolverConfig(tol=tol,
+                                               max_epochs=max_epochs,
+                                               full_round_every=10 ** 9))
+    res = session.solve_path(T=T, delta=delta)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        naive = solve_path(problem, T=T, delta=delta, tol=tol,
+                           max_epochs=max_epochs, **MODE_KWARGS["naive"])
+
+    assert (res.gaps <= tol).all(), "session path missed tolerance"
+    assert res.n_transpose_copies == 0, (
+        f"per-round transposed copies are back: {res.n_transpose_copies}"
+    )
+    assert res.n_compact_rounds > 0, "no compact certified rounds dispatched"
+    # One sequential full round per lambda PLUS one converged full round
+    # per lambda that ran epochs (lambdas converging on the sequential
+    # round itself already reported a full-round gap).
+    worked = int((res.epochs > 0).sum())
+    assert res.n_full_rounds >= T + worked, (
+        "every lambda's converged round must be a full round "
+        f"(full={res.n_full_rounds}, T={T}, worked={worked})"
+    )
+    np.testing.assert_allclose(res.betas, naive.betas, atol=1e-8)
+    full_equiv = res.n_rounds * 4.0 * problem.n * problem.G * problem.ng
+    emit("path_smoke", "audit", "compact_rounds", res.n_compact_rounds)
+    emit("path_smoke", "audit", "full_rounds", res.n_full_rounds)
+    emit("path_smoke", "audit", "transpose_copies", res.n_transpose_copies)
+    emit("path_smoke", "audit", "round_flop_reduction",
+         full_equiv / max(res.round_flops, 1.0))
+    print("SMOKE PASS")
 
 
 def main(n=256, n_lon=16, n_lat=8, T=20, delta=2.5, tau=0.4,
@@ -84,6 +149,17 @@ def main(n=256, n_lon=16, n_lat=8, T=20, delta=2.5, tau=0.4,
                 pallas = resolve_screen_backend("auto") == "pallas"
                 emit("path_fig3b", case, "transpose_copies_eliminated",
                      res.n_rounds - res.n_transpose_copies if pallas else 0)
+                if mode == "session":
+                    # Compacted-certified-round audit (session engine only;
+                    # the legacy wrappers spin up their own sessions whose
+                    # counters are not surfaced here).
+                    emit("path_fig3b", case, "compact_rounds",
+                         res.n_compact_rounds)
+                    emit("path_fig3b", case, "full_rounds", res.n_full_rounds)
+                    full_equiv = (res.n_rounds * 4.0 * problem.n
+                                  * problem.G * problem.ng)
+                    emit("path_fig3b", case, "round_flop_reduction",
+                         full_equiv / max(res.round_flops, 1.0))
                 if rule == "gap":
                     emit("path_fig3b", case, "seq_screened_groups",
                          int(res.seq_screened.sum()))
@@ -98,9 +174,14 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run asserting the transpose and "
+                         "compact-round audits")
     args = ap.parse_args()
     header()
-    if args.full:
+    if args.smoke:
+        smoke()
+    elif args.full:
         main(n=814, n_lon=144, n_lat=73, T=100)
     else:
         main()

@@ -19,6 +19,7 @@ from .sgl import (
     primal,
     problem_from_grouped,
     sgl_dual_norm,
+    sgl_dual_norm_terms,
     sgl_norm,
     sgl_prox,
     soft_threshold,
@@ -30,6 +31,8 @@ from .screening import (
     dynamic_sphere,
     gap_sphere,
     screen,
+    screened_dual_bound,
+    screened_group_rate,
     sequential_sphere,
     static_sphere,
 )
@@ -51,7 +54,8 @@ __all__ = [
     "SGLSession", "SolverConfig",
     "solve", "solve_path", "lambda_grid",
     "lambda_max", "dual_scale", "duality_gap", "primal", "dual",
-    "sgl_norm", "sgl_dual_norm", "sgl_prox", "soft_threshold",
+    "sgl_norm", "sgl_dual_norm", "sgl_dual_norm_terms", "sgl_prox",
+    "soft_threshold", "screened_dual_bound", "screened_group_rate",
     "group_soft_threshold", "epsilon_norm", "epsilon_norm_dual",
     "epsilon_decomposition", "lam", "lam_bisect",
     "Sphere", "ScreenResult", "gap_sphere", "sequential_sphere",

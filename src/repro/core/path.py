@@ -26,6 +26,12 @@ an independent solve:
    and SGL dual norm route through the fused Pallas kernels on TPU
    (``screen_backend="auto"``), fed from ONE persistent transposed design
    for the whole path.
+5. **Compacted certified rounds** — once groups hold permanent
+   certificates, most rounds run on the gathered (n, p_active) buffer with
+   the screened groups' dual-norm terms bounded from the last full round's
+   cached reference (exact when the bound holds; fallback policy and the
+   always-full converged round are described in
+   :mod:`repro.core.session`).
 
 The engine itself lives on the session API
 (:meth:`repro.core.session.SGLSession.solve_path`); this module keeps the

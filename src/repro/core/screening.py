@@ -18,6 +18,27 @@ Spheres implemented (paper Section 7.1):
 All tests operate on the grouped layout of :mod:`repro.core.sgl` and return a
 :class:`ScreenResult` with boolean *active* masks (True = keep).  Safety means
 a screened-out (False) variable is *provably* zero at the optimum.
+
+Bounded dual-norm terms (compacted certified rounds)
+----------------------------------------------------
+Certificates are permanent, so a screened group's exact correlation
+``X_g^T resid`` is never needed again for *screening* — it only re-enters
+through the dual scaling ``Omega^D(X^T resid)`` (Eq. 15), which maxes the
+per-group eps-norm terms over ALL groups.  :func:`screened_dual_bound`
+bounds the screened groups' part of that max from a cached reference:
+
+    ||X_g^T resid||_eps  <=  ||X_g^T resid_ref||_eps
+                             + ||X_g||_2 * ||resid - resid_ref||_2
+
+by the triangle inequality (the eps-norm is a norm) plus
+``||v||_eps <= ||v||_2`` and Cauchy-Schwarz.  The l2-domination holds
+because coordinatewise ``(|v_i| - c)_+ <= |v_i| (||v||_2 - c)_+ / ||v||_2``
+for any c >= 0, so at nu = ||v||_2 the defining equation's left side
+``sum S_{(1-eps)nu}(v)^2 <= (eps nu)^2`` already — the root is <= ||v||_2.
+Whenever the bound stays below ``max(lambda, active-group max)``, the full
+dual norm provably equals the active-group max and a round computed on the
+compacted active buffer alone is *exact* (see
+:mod:`repro.core.solver`).
 """
 from __future__ import annotations
 
@@ -40,6 +61,9 @@ __all__ = [
     "dst3_sphere",
     "screen",
     "screen_with_corr",
+    "screened_dual_bound",
+    "screened_group_rate",
+    "theorem1_tests",
 ]
 
 
@@ -130,8 +154,84 @@ def dst3_sphere(
 
 
 # ----------------------------------------------------------------------------
+# Bounded dual-norm terms for compacted certified rounds
+# ----------------------------------------------------------------------------
+
+def screened_group_rate(problem: SGLProblem) -> jax.Array:
+    """Per-group growth rate of the dual-norm term under a residual shift:
+    ``||X_g||_2 / (tau + (1-tau) w_g)`` — the Lipschitz constant of
+    ``resid -> ||X_g^T resid||_eps / scale_g`` (see the module docstring).
+    Constants of the problem; (G,)."""
+    return problem.Xnorm_grp / sgl.group_weight_total(problem.tau, problem.w)
+
+
+def screened_dual_bound(
+    ref_terms: jax.Array,
+    rate: jax.Array,
+    resid_shift: jax.Array,
+    screened: jax.Array,
+) -> jax.Array:
+    """Upper bound on ``max_{g screened} ||X_g^T resid||_eps / scale_g``.
+
+    ``ref_terms``: (G,) per-group dual-norm terms at a reference residual
+    (:func:`repro.core.sgl.sgl_dual_norm_terms` of ``X^T resid_ref``);
+    ``rate``: (G,) from :func:`screened_group_rate`;
+    ``resid_shift``: scalar ``||resid - resid_ref||_2``;
+    ``screened``: (G,) bool, True for the groups to bound.
+
+    Safety: by the triangle inequality on the eps-norm and
+    ``||X_g^T d||_eps <= ||X_g^T d||_2 <= ||X_g||_2 ||d||_2`` (module
+    docstring), every screened group's true term at ``resid`` is <= its
+    bound, so if the returned max is <= max(lambda, max over *exact* active
+    terms), the full-problem dual norm equals the active-term max exactly.
+    Returns 0 when nothing is screened (the bound then constrains nothing).
+    """
+    b = ref_terms + rate * resid_shift
+    return jnp.max(jnp.where(screened, b, 0.0))
+
+
+# ----------------------------------------------------------------------------
 # Screening tests (Theorem 1)
 # ----------------------------------------------------------------------------
+
+def theorem1_tests(
+    corr: jax.Array,       # (..., ng) X^T theta_c, grouped
+    radius,                # sphere radius r
+    Xnorm_grp: jax.Array,  # (...,) ||X_g||_2 (any safe upper bound)
+    Xnorm_col: jax.Array,  # (..., ng) column norms
+    w: jax.Array,          # (...,) group weights
+    feat_mask: jax.Array,  # (..., ng) bool, real features
+    tau,
+    st_norm: Optional[jax.Array] = None,
+):
+    """Raw Theorem-1 keep-tests; the ONE implementation of the paper's
+    group/feature test formulas.
+
+    Shared by the full round (:func:`screen_with_corr`) and the compacted
+    round (:func:`repro.core.solver._screen_round_compact`), whose safety
+    contract is exact agreement with the full round on the gathered groups
+    — keeping a single copy of the formulas is what guarantees they cannot
+    drift apart.  Operates on any leading batch shape (full (G, ...) or a
+    gathered (Gb, ...) buffer).  Returns ``(group_keep, feat_keep)``
+    *before* the caller's extra masking (group wipe-out of features,
+    feat_mask, already-screened groups).
+
+    ``st_norm``: optional precomputed ||S_tau(corr)|| per group (e.g. from
+    the fused Pallas kernel's S_tau(corr)^2 output).
+    """
+    if st_norm is None:
+        ste = soft_threshold(corr, tau)
+        st_norm = jnp.linalg.norm(ste, axis=-1)                 # ||S_tau(.)||
+    inf_norm = jnp.max(jnp.abs(jnp.where(feat_mask, corr, 0.0)), axis=-1)
+
+    Tg_out = st_norm + radius * Xnorm_grp
+    Tg_in = jnp.maximum(inf_norm + radius * Xnorm_grp - tau, 0.0)
+    Tg = jnp.where(inf_norm > tau, Tg_out, Tg_in)
+    group_keep = Tg >= (1.0 - tau) * w                          # keep if test fails
+
+    feat_keep = jnp.abs(corr) + radius * Xnorm_col >= tau
+    return group_keep, feat_keep
+
 
 def screen_with_corr(
     problem: SGLProblem, sphere: Sphere, corr: jax.Array,
@@ -147,24 +247,11 @@ def screen_with_corr(
     re-thresholding ``corr`` — previously that half of every fused kernel
     call was discarded and recomputed here (ROADMAP item).
     """
-    tau, w = problem.tau, problem.w
-    r = sphere.radius
-
-    if st2 is None:
-        ste = soft_threshold(corr, tau)
-        st_norm = jnp.linalg.norm(ste, axis=-1)                 # ||S_tau(.)||
-    else:
-        st_norm = jnp.sqrt(jnp.sum(st2, axis=-1))
-    inf_norm = jnp.max(jnp.abs(jnp.where(problem.feat_mask, corr, 0.0)), axis=-1)
-
-    Tg_out = st_norm + r * problem.Xnorm_grp
-    Tg_in = jnp.maximum(inf_norm + r * problem.Xnorm_grp - tau, 0.0)
-    Tg = jnp.where(inf_norm > tau, Tg_out, Tg_in)
-    group_active = Tg >= (1.0 - tau) * w                        # keep if test fails
-
-    feat_bound = jnp.abs(corr) + r * problem.Xnorm_col
-    feat_active = feat_bound >= tau
-
+    st_norm = None if st2 is None else jnp.sqrt(jnp.sum(st2, axis=-1))
+    group_active, feat_active = theorem1_tests(
+        corr, sphere.radius, problem.Xnorm_grp, problem.Xnorm_col,
+        problem.w, problem.feat_mask, problem.tau, st_norm=st_norm,
+    )
     # Feature-level screening only has bite for tau > 0; for tau == 0 the
     # test |.| < 0 never fires, which the >= comparison already encodes.
     # Screened groups wipe all their features; padding is always inactive.
@@ -187,14 +274,16 @@ def screen(problem: SGLProblem, sphere: Sphere, backend: str = "xla",
     ``xt_pre``: persistent transposed design from
     :func:`repro.kernels.ops.prepare_transposed`; without it every
     Pallas-backed call materialises a fresh (p, n) transposed copy of X
-    (the per-call copy the session API exists to eliminate).
+    (the per-call copy the session API exists to eliminate) — built through
+    the counted :func:`repro.kernels.ops.transposed_design` so the
+    transpose audit sees this path too.
     """
     if backend == "pallas":
         from ..kernels import ops as kops
 
         n, G, ng = problem.X.shape
         p = G * ng
-        Xt = problem.X.reshape(n, p).T if xt_pre is None else xt_pre
+        Xt = kops.transposed_design(problem.X) if xt_pre is None else xt_pre
         corr_f, st2_f = kops.screening_scores(
             Xt, sphere.center, tau=float(problem.tau)
         )

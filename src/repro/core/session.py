@@ -38,6 +38,29 @@ is *measured* (``kernels.ops.transpose_trace_count`` moves iff a round
 traced an on-the-fly transpose) and surfaced per path as
 ``PathResult.n_rounds`` / ``n_transpose_copies`` for the benchmarks.
 
+Compacted certified rounds
+--------------------------
+The certified round itself used to stay O(n p) per round no matter how many
+groups held a permanent certificate.  With ``SolverConfig.compact_rounds``
+(default True, ``rule="gap"`` + compacted buffers only) the driver runs
+most rounds through :func:`repro.core.solver._screen_round_compact` on the
+gathered (n, p_active) buffer: screened groups re-enter the round only via
+the dual scaling (Eq. 15), and their per-group eps-norm terms are bounded
+from the last full round's cached reference by
+
+    term_g(resid) <= term_g(resid_ref) + ||X_g||_2/scale_g * ||resid - resid_ref||
+
+(proof in :mod:`repro.core.screening`).  Fallback policy — a FULL round
+runs instead whenever (1) the bound crosses max(lambda, active-term max),
+i.e. the residual drifted too far from the reference (the full round
+refreshes it), (2) ``full_round_every`` compact rounds ran since the last
+full one, or (3) a compact round's gap reaches ``tol``: convergence is
+always re-confirmed on the full problem, so the *reported* gap and
+certificate of every solve (and of every lambda on a path) are
+full-problem exact even though compact rounds are themselves exact when
+their bound holds.  ``PathResult.n_compact_rounds`` / ``n_full_rounds`` /
+``round_flops`` audit the split next to the transpose audit.
+
 Migration from the legacy front-ends
 ------------------------------------
 ``solve(...)`` / ``solve_path(...)`` loose kwargs became
@@ -64,8 +87,10 @@ from .solver import (
     RoundResult,
     SolveCaches,
     SolveResult,
+    _bucket,
     _inner_rounds,
     _screen_round,
+    _screen_round_compact,
     bcd_epochs,
     resolve_screen_backend,
 )
@@ -99,6 +124,13 @@ class SolverConfig(NamedTuple):
     check_every: Union[int, None, str] = "auto"  # reduced-gap exit cadence
     screen_backend: str = "auto"   # auto | xla | pallas
     warm_gap_factor: float = 1e3   # warm-lambda threshold for "auto"
+    compact_rounds: bool = True    # run certified rounds on the compacted
+                                   #   active buffer when provably exact
+                                   #   (rule="gap" + compact buffers only);
+                                   #   False restores full rounds everywhere
+    full_round_every: int = 10     # certified rounds between forced full
+                                   #   rounds (reference refresh); <= 0
+                                   #   disables compact rounds outright
 
 
 def lambda_grid(lam_max: float, T: int = 100, delta: float = 3.0) -> np.ndarray:
@@ -140,6 +172,18 @@ class PathResult(NamedTuple):
                                    #   Pallas round (and trivially 0 on the
                                    #   XLA backend, where no copy is ever at
                                    #   stake)
+    n_compact_rounds: int = 0      # certified rounds run on the compacted
+                                   #   active buffer (O(n p_active))
+    n_full_rounds: int = 0         # certified rounds run on the full
+                                   #   problem (every converged round, the
+                                   #   sequential rounds, the forced
+                                   #   full_round_every refreshes, and any
+                                   #   bound-crossing fallbacks)
+    round_flops: float = 0.0       # estimated FLOPs spent in certified
+                                   #   rounds (~4*n*p_buffer per round,
+                                   #   incl. discarded fallback attempts);
+                                   #   full-round-only engines spend
+                                   #   (n_compact+n_full) * 4*n*p
 
 
 def _global_lipschitz(problem: SGLProblem, n_iter: int = 150) -> float:
@@ -212,6 +256,15 @@ class SGLSession:
         # actually traced an on-the-fly transpose, and solve_path converts
         # its delta into PathResult.n_transpose_copies.
         self.rounds = 0
+        # Compact-round audit: rounds run on the compacted active buffer vs
+        # the full problem, attempts discarded because the screened-group
+        # bound crossed the active max, and the estimated FLOPs actually
+        # spent in rounds (~4 n p_buffer each, fallback attempts included).
+        self.compact_rounds = 0
+        self.full_rounds = 0
+        self.compact_fallbacks = 0
+        self.round_flops = 0.0
+        self._rounds_since_full = 0
         # Lambdas solved through the batched-lambda FISTA kernel (mesh
         # strategy only): path points whose sequential certificates agreed.
         self.batched_lambdas = 0
@@ -247,12 +300,60 @@ class SGLSession:
             self._xt_pre = kops.prepare_transposed(self.problem.X)
         return self._xt_pre
 
-    def _certified_round(self, beta, lam_j, lam_max_j, rule) -> RoundResult:
+    def _certified_round(self, beta, lam_j, lam_max_j, rule,
+                         caches: Optional[SolveCaches] = None) -> RoundResult:
+        """One FULL certified round; refreshes the compact-round reference
+        (residual + per-group dual-norm terms) on ``caches``."""
+        caches = self.caches if caches is None else caches
+        problem = self.problem
         self.rounds += 1
-        return _screen_round(
-            self.problem, beta, lam_j, lam_max_j, rule, self.backend,
+        self.full_rounds += 1
+        self._rounds_since_full = 0
+        self.round_flops += 4.0 * problem.n * problem.G * problem.ng
+        res, resid, terms = _screen_round(
+            problem, beta, lam_j, lam_max_j, rule, self.backend,
             self.xt_pre,
         )
+        caches.set_refs(problem, resid, terms)
+        return res
+
+    def _compact_round(self, beta, lam_j, group_active, feat_active,
+                       caches: SolveCaches) -> Optional[RoundResult]:
+        """Certified round on the compacted active buffer, or None.
+
+        Returns None — the caller must fall back to a full round — when no
+        reference state is cached yet or when the screened-group dual-norm
+        bound crossed max(lambda, active max) (the residual drifted too far
+        from the last full round's reference; the fallback refreshes it).
+        A non-None result is *exact* (see
+        :func:`repro.core.solver._screen_round_compact`).
+        """
+        if caches.resid_ref is None or caches.ref_terms is None:
+            return None
+        problem = self.problem
+        _, take, Xt, _, _, gmask = caches.gather(problem, group_active)
+        xt_rows = None
+        if self.backend == "pallas":
+            xt_rows = caches.gather_xt_rows(problem, group_active,
+                                            self.xt_pre)
+        dtype = problem.X.dtype
+        gap, theta, g_keep, f_keep, valid = _screen_round_compact(
+            problem, Xt, take, gmask,
+            jnp.asarray(beta, dtype),
+            jnp.asarray(feat_active),
+            jnp.asarray(group_active),
+            caches.ref_terms, caches.resid_ref, lam_j,
+            self.backend, xt_rows,
+        )
+        # Attempt cost is spent either way (honest FLOP accounting).
+        self.round_flops += 4.0 * problem.n * Xt.shape[0] * problem.ng
+        if not bool(valid):
+            self.compact_fallbacks += 1
+            return None
+        self.rounds += 1
+        self.compact_rounds += 1
+        self._rounds_since_full += 1
+        return RoundResult(gap, theta, g_keep, f_keep, True)
 
     # -- the three front-end methods ---------------------------------------
 
@@ -386,14 +487,58 @@ class SGLSession:
         theta = problem.y / max(float(lam_), float(lam_max))
         gap = jnp.inf
         round_res = first_round
+        lam_max_j = jnp.asarray(lam_max, dtype)
+        n_real_groups = int(np.asarray(
+            jnp.any(problem.feat_mask, axis=-1)).sum())
+        # Non-compact branch state, hoisted out of the round loop: ONE
+        # transposed design for the whole solve and a carried residual —
+        # the loop used to re-materialise a fresh (G, n, ng) copy of X and
+        # recompute the full residual einsum every certified round.
+        Xt_full = None
+        resid_nc = None
 
         while epochs_done < max_epochs:
-            # ---- fused gap + screening round (one XLA program; paper does
-            # this every f_ce passes on the full problem).  The first round
-            # may be injected by the path engine (sequential screening). ----
+            # ---- fused gap + screening round (paper does this every f_ce
+            # passes on the full problem; here it runs on the compacted
+            # active buffer whenever the screened-group bound proves that
+            # exact — see _compact_round).  The first round may be injected
+            # by the path engine (sequential screening). ----
             if round_res is None:
+                # A compact round only pays when the gathered buffer is
+                # smaller than the problem: with power-of-two buckets a
+                # barely-screened active set rounds up PAST the real group
+                # count (e.g. 130/200 active -> bucket 256), where the
+                # "compacted" buffer would cost more than the full round it
+                # replaces — those rounds go full directly.
+                n_act = int(group_active.sum())
+                if (rule == "gap" and cfg.compact and cfg.compact_rounds
+                        and self._rounds_since_full < cfg.full_round_every
+                        and 0 < n_act
+                        and _bucket(n_act) < n_real_groups):
+                    round_res = self._compact_round(
+                        beta, lam_j, group_active, feat_active, caches
+                    )
+                if round_res is None:
+                    round_res = self._certified_round(
+                        beta, lam_j, lam_max_j, rule, caches=caches
+                    )
+                    if not cfg.compact:
+                        # The full round just recomputed y - X beta exactly
+                        # (stored as the compact-round reference): adopt it
+                        # so the carried residual's incremental drift is
+                        # reset every full round, matching the pre-hoist
+                        # per-round recomputation.  Copied because
+                        # bcd_epochs donates its residual buffer, which
+                        # would otherwise invalidate the cached reference.
+                        resid_nc = caches.resid_ref.copy()
+            if bool(round_res.compact) and float(round_res.gap) <= tol:
+                # The REPORTED gap/certificate must always be full-problem
+                # exact: re-confirm an (exact, but buffer-computed)
+                # compact-round convergence with a full round before
+                # stopping.  If the full gap disagrees (> tol), the loop
+                # simply continues from the full round.
                 round_res = self._certified_round(
-                    beta, lam_j, jnp.asarray(lam_max, dtype), rule
+                    beta, lam_j, lam_max_j, rule, caches=caches
                 )
             gap, theta = round_res.gap, round_res.theta
             g_act, f_act = round_res.group_active, round_res.feat_active
@@ -409,10 +554,24 @@ class SGLSession:
                 break
 
             if rule in ("gap", "dynamic", "dst3"):
+                n_g0 = int(group_active.sum())
+                n_f0 = int(feat_active.sum())
                 group_active &= np.asarray(g_act)
                 feat_active &= np.asarray(f_act)
                 feat_active &= group_active[:, None]
-                beta = beta * jnp.asarray(feat_active, dtype)
+                masks_changed = (int(group_active.sum()) != n_g0
+                                 or int(feat_active.sum()) != n_f0)
+                beta_masked = beta * jnp.asarray(feat_active, dtype)
+                if resid_nc is not None and masks_changed:
+                    # Keep the carried residual consistent with the newly
+                    # zeroed coefficients (masks shrink monotonically, so
+                    # an unchanged mask leaves beta — and resid — as-is).
+                    if Xt_full is None:
+                        Xt_full = jnp.transpose(problem.X, (1, 0, 2))
+                    resid_nc = resid_nc + jnp.einsum(
+                        "gnk,gk->n", Xt_full, beta - beta_masked
+                    )
+                beta = beta_masked
 
             active_history.append(
                 (epochs_done, int(group_active.sum()),
@@ -431,13 +590,17 @@ class SGLSession:
                 )
                 epochs_done += check * int(k_done)
             else:
-                Xt = jnp.transpose(problem.X, (1, 0, 2))
+                if Xt_full is None:
+                    Xt_full = jnp.transpose(problem.X, (1, 0, 2))
                 fmask = jnp.asarray(feat_active, dtype)
                 Lg = problem.Lg * jnp.asarray(group_active, dtype)
-                resid = problem.y - jnp.einsum("gnk,gk->n", Xt, beta)
-                beta, resid = bcd_epochs(
-                    Xt, Lg, problem.w, fmask, beta, resid, problem.tau,
-                    lam_j, f_ce
+                if resid_nc is None:
+                    resid_nc = problem.y - jnp.einsum(
+                        "gnk,gk->n", Xt_full, beta
+                    )
+                beta, resid_nc = bcd_epochs(
+                    Xt_full, Lg, problem.w, fmask, beta, resid_nc,
+                    problem.tau, lam_j, f_ce
                 )
                 epochs_done += f_ce
 
@@ -495,6 +658,9 @@ class SGLSession:
         n_feat = int(np.asarray(problem.feat_mask).sum())
         n_groups = int(np.asarray(jnp.any(problem.feat_mask, axis=-1)).sum())
         rounds0 = self.rounds
+        compact0 = self.compact_rounds
+        full0 = self.full_rounds
+        flops0 = self.round_flops
         traces0 = kops.transpose_trace_count()
 
         # One cache for the whole path: the gather (and its jit cache)
@@ -626,6 +792,9 @@ class SGLSession:
                 self.rounds - rounds0
                 if kops.transpose_trace_count() > traces0 else 0
             ),
+            n_compact_rounds=self.compact_rounds - compact0,
+            n_full_rounds=self.full_rounds - full0,
+            round_flops=self.round_flops - flops0,
         )
 
 
@@ -672,6 +841,8 @@ class _DistStrategy:
         problem = s.problem
         dtype = problem.X.dtype
         s.rounds += 1
+        s.full_rounds += 1           # sharded rounds are always full-problem
+        s.round_flops += 4.0 * problem.n * problem.G * problem.ng
         return self.screen_k(
             problem.X, problem.y, jnp.asarray(beta, dtype),
             jnp.asarray(feat_mask, dtype), problem.w,
@@ -969,6 +1140,7 @@ class _DistStrategy:
         n_feat = int(np.asarray(problem.feat_mask).sum())
         n_groups = int(np.asarray(jnp.any(problem.feat_mask, axis=-1)).sum())
         rounds0 = s.rounds
+        flops0 = s.round_flops
 
         betas = np.zeros((T_, G, ng), np.dtype(dtype))
         gaps = np.zeros(T_, float)
@@ -1069,4 +1241,8 @@ class _DistStrategy:
             n_rounds=s.rounds - rounds0,
             n_transpose_copies=0,   # sharded rounds are einsum-based: no
                                     # feature-major copy is ever at stake
+            n_compact_rounds=0,     # the mesh strategy always screens on
+                                    # the full (sharded) problem
+            n_full_rounds=s.rounds - rounds0,
+            round_flops=s.round_flops - flops0,
         )

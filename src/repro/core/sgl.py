@@ -36,6 +36,7 @@ __all__ = [
     "unflatten",
     "sgl_norm",
     "sgl_dual_norm",
+    "sgl_dual_norm_terms",
     "primal",
     "dual",
     "duality_gap",
@@ -233,16 +234,28 @@ def sgl_norm(beta: jax.Array, tau, w) -> jax.Array:
     return tau * l1 + (1.0 - tau) * l2
 
 
+def sgl_dual_norm_terms(xi: jax.Array, tau, w) -> jax.Array:
+    """Per-group terms of Omega^D: ||xi_g||_{eps_g} / (tau + (1-tau) w_g).
+
+    The dual norm (Eq. 20) is the max of these; the compacted certified
+    round (:mod:`repro.core.solver`) needs them individually — each screened
+    group's term at a reference residual is cached so later rounds can bound
+    it without re-touching that group's columns.  xi: grouped (G, ng) or any
+    (..., ng) batch with w broadcastable to the leading shape.
+    """
+    xi = jnp.asarray(xi)
+    eps = epsilons(tau, xi.dtype.type(1) * jnp.asarray(w, xi.dtype))
+    scale = group_weight_total(tau, jnp.asarray(w, xi.dtype))
+    return lam(xi, 1.0 - eps, eps) / scale
+
+
 def sgl_dual_norm(xi: jax.Array, tau, w) -> jax.Array:
     """Omega^D(xi) = max_g ||xi_g||_{eps_g} / (tau + (1-tau) w_g)  (Eq. 20).
 
     xi: grouped (G, ng) (padded entries must be 0 — they are then inert:
     S_threshold of 0 contributes nothing).
     """
-    eps = epsilons(tau, xi.dtype.type(1) * jnp.asarray(w, xi.dtype))
-    scale = group_weight_total(tau, jnp.asarray(w, xi.dtype))
-    per_group = lam(xi, 1.0 - eps, eps)  # (G,)
-    return jnp.max(per_group / scale)
+    return jnp.max(sgl_dual_norm_terms(xi, tau, w))
 
 
 def primal(problem: SGLProblem, beta: jax.Array, lam_: jax.Array) -> jax.Array:

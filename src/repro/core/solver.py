@@ -16,9 +16,24 @@ TPU/XLA adaptation (see DESIGN.md §3): screened variables are removed by
 buckets**, so the inner jitted BCD epochs only touch active data; XLA
 recompiles at most log2(G) times and the compile cache is shared across the
 lambda path.  Screening certificates are permanent (safe), so active sets
-shrink monotonically.  The full-matrix correlation X^T theta needed for the
-gap/screening round is kept on the *full* problem, exactly as in the paper
-(that cost is amortised by f_ce).
+shrink monotonically.
+
+Compacted certified rounds: the paper keeps the gap/screening round's
+correlation X^T theta on the *full* problem every f_ce passes, which stays
+O(n p) even when 99% of groups hold a permanent certificate — exactly the
+cost the rule exists to kill.  Since certificates are permanent, screened
+groups never need exact correlations again; they re-enter only through the
+dual scaling Omega^D(X^T resid) (Eq. 15).  :func:`_screen_round_compact`
+therefore runs the whole round — residual, correlation, dual norm, gap,
+Theorem-1 tests — on the gathered (n, p_active) buffer and *bounds* the
+screened groups' dual-norm terms from the last full round's cached
+reference (``SolveCaches.resid_ref`` / ``ref_terms``; bound proof in
+:mod:`repro.core.screening`).  When the bound stays below
+max(lambda, active-term max) the compact round is EXACT; otherwise the
+driver falls back to the full :func:`_screen_round` (which also refreshes
+the reference).  The driver additionally forces a full round every
+``full_round_every`` rounds and always re-confirms convergence with a full
+round, so every *reported* gap/certificate is full-problem exact.
 
 This module holds the jitted machinery (``bcd_epochs``, ``_inner_rounds``,
 ``_screen_round``, ``_gather_static``) plus the round/caches primitives; the
@@ -76,14 +91,19 @@ class RoundResult(NamedTuple):
 
     Replaces the bare ``(gap, theta, group_active, feat_active)`` 4-tuple the
     round family used to hand around by positional index; being a tuple
-    subclass, positional unpacking still works.  ``theta`` is None on the
-    distributed strategy (the dual point stays sharded on the mesh).
+    subclass, positional unpacking still works (slice ``[:4]`` for the
+    legacy quartet).  ``theta`` is None on the distributed strategy (the
+    dual point stays sharded on the mesh).  ``compact`` marks a round
+    evaluated on the compacted active buffer (exact, but the driver always
+    confirms convergence with a full round before reporting — see
+    :meth:`repro.core.session.SGLSession.solve`).
     """
 
     gap: jax.Array                   # certified duality gap at (beta, lam)
     theta: Optional[jax.Array]       # (n,) dual feasible point (Eq. 15)
     group_active: jax.Array          # (G,) bool — False = certified zero
     feat_active: jax.Array           # (G, ng) bool — False = certified zero
+    compact: bool = False            # round ran on the compacted buffer
 
 
 class SolveResult(NamedTuple):
@@ -109,31 +129,75 @@ class SolveCaches:
     re-gathers entirely and keeps XLA's compile cache warm (same power-of-two
     bucket shapes).
 
+    Also carries the compact-round reference state: the residual and the
+    per-group dual-norm terms of the last *full* certified round
+    (``resid_ref`` / ``ref_terms``, refreshed by
+    :meth:`repro.core.session.SGLSession._certified_round`), which let
+    :func:`_screen_round_compact` bound the screened groups' dual-norm
+    contribution without touching their columns, plus (Pallas backend) the
+    active-row slice of the persistent transposed design keyed on the same
+    active-set bytes as the gather.
+
     Entries are keyed on problem identity + active-set bytes, so sharing an
     instance across problems degrades to a miss instead of serving stale
     buffers; one instance per lambda path is the intended use.
     """
 
-    __slots__ = ("gather_key", "gather_val", "n_gathers", "_problem")
+    __slots__ = ("gather_key", "gather_val", "n_gathers", "_problem",
+                 "xt_rows_key", "xt_rows_val", "resid_ref", "ref_terms")
 
     def __init__(self) -> None:
         self.gather_key: Optional[bytes] = None
         self.gather_val = None
         self.n_gathers: int = 0
         self._problem: Optional[SGLProblem] = None
+        self.xt_rows_key: Optional[bytes] = None
+        self.xt_rows_val = None
+        self.resid_ref: Optional[jax.Array] = None
+        self.ref_terms: Optional[jax.Array] = None
 
-    def gather(self, problem: SGLProblem, group_active: np.ndarray):
+    def _sync_problem(self, problem: SGLProblem) -> None:
         if problem is not self._problem:
             # A different problem with a byte-identical mask must be a cache
-            # MISS, not silently-served stale buffers.
+            # MISS, not silently-served stale buffers; reference residuals
+            # of another problem are meaningless here.
             self._problem = problem
             self.gather_key = None
+            self.xt_rows_key = None
+            self.resid_ref = None
+            self.ref_terms = None
+
+    def gather(self, problem: SGLProblem, group_active: np.ndarray):
+        self._sync_problem(problem)
         key = group_active.tobytes()
         if key != self.gather_key:
             self.gather_val = _gather_static(problem, group_active)
             self.gather_key = key
             self.n_gathers += 1
         return self.gather_val
+
+    def gather_xt_rows(self, problem: SGLProblem, group_active: np.ndarray,
+                       xt_pre: jax.Array):
+        """Active-row slice of the persistent transposed design (Pallas
+        compact rounds), keyed on the same active-set bytes as ``gather``
+        — a row *gather*, never an on-the-fly transpose."""
+        self._sync_problem(problem)
+        key = group_active.tobytes()
+        if key != self.xt_rows_key:
+            _, take, *_ = self.gather(problem, group_active)
+            self.xt_rows_val = kops.gather_transposed_rows(
+                xt_pre, take, problem.ng
+            )
+            self.xt_rows_key = key
+        return self.xt_rows_val
+
+    def set_refs(self, problem: SGLProblem, resid: jax.Array,
+                 terms: jax.Array) -> None:
+        """Adopt a full round's residual + per-group dual-norm terms as the
+        compact-round reference point."""
+        self._sync_problem(problem)
+        self.resid_ref = resid
+        self.ref_terms = terms
 
 
 # ----------------------------------------------------------------------------
@@ -211,12 +275,16 @@ def resolve_screen_backend(backend: str) -> str:
 def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
                   lam_max: jax.Array, rule: str, backend: str = "xla",
                   xt_pre: Optional[jax.Array] = None):
-    """One fused gap + screening round (single XLA program).
+    """One fused FULL gap + screening round (single XLA program).
 
     The eager version of this round cost ~50 small dispatches; fusing it is
     what makes screening overhead negligible per round (see EXPERIMENTS.md
-    §Perf, solver iteration 1).  Returns a :class:`RoundResult`; for rules
-    that do not screen dynamically the masks are all-true.
+    §Perf, solver iteration 1).  Returns ``(RoundResult, resid, terms)``
+    where ``resid``/``terms`` (the residual and the per-group dual-norm
+    terms) are the reference state the compacted round
+    (:func:`_screen_round_compact`) bounds screened groups from — the
+    session stores them on :class:`SolveCaches` after every full round.
+    For rules that do not screen dynamically the masks are all-true.
 
     ``backend="pallas"`` computes the hot X^T resid correlation through the
     corr-only Pallas matvec kernel and the SGL dual norm through the Pallas
@@ -228,10 +296,11 @@ def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
     resid = problem.y - jnp.einsum("ngk,gk->n", problem.X, beta)
     if backend == "pallas":
         corr = kops.screening_corr_grouped(problem.X, resid, xt_pre=xt_pre)
-        dual_norm = kops.sgl_dual_norm_fused(corr, problem.tau, problem.w)
+        terms = kops.sgl_dual_norm_terms_fused(corr, problem.tau, problem.w)
     else:
         corr = jnp.einsum("ngk,n->gk", problem.X, resid)
-        dual_norm = sgl.sgl_dual_norm(corr, problem.tau, problem.w)
+        terms = sgl.sgl_dual_norm_terms(corr, problem.tau, problem.w)
+    dual_norm = jnp.max(terms)
     scale = jnp.maximum(lam_, dual_norm)
     theta = resid / scale
     gap = sgl.duality_gap(problem, beta, theta, lam_)
@@ -253,7 +322,114 @@ def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
             jnp.asarray(problem.feat_mask),
             scr.Sphere(theta, jnp.inf),
         )
-    return RoundResult(gap, theta, res.group_active, res.feat_active)
+    round_res = RoundResult(gap, theta, res.group_active, res.feat_active)
+    return round_res, resid, terms
+
+
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _screen_round_compact(
+    problem: SGLProblem,
+    Xt: jax.Array,            # (Gb, n, ng) gathered active design
+    take: jax.Array,          # (Gb,) group indices (padded slots alias 0)
+    gmask: jax.Array,         # (Gb,) float, 0 on padded slots
+    beta: jax.Array,          # (G, ng) full coefficients (0 off the buffer)
+    feat_active: jax.Array,   # (G, ng) bool current mask
+    group_active: jax.Array,  # (G,) bool current mask
+    ref_terms: jax.Array,     # (G,) dual-norm terms at resid_ref
+    resid_ref: jax.Array,     # (n,) residual of the last full round
+    lam_: jax.Array,
+    backend: str = "xla",
+    xt_rows: Optional[jax.Array] = None,
+):
+    """Certified gap + Theorem-1 round on the compacted active buffer.
+
+    O(n * p_active) instead of O(n * p): the residual, the correlation, the
+    dual norm, the gap, and the Theorem-1 tests all touch only the gathered
+    groups.  Screened groups enter solely through the dual scaling
+    (Eq. 15), where their eps-norm terms are *bounded* from the cached
+    reference (:func:`repro.core.screening.screened_dual_bound`):
+
+        term_g(resid) <= ref_terms_g + rate_g * ||resid - resid_ref||.
+
+    ``valid`` is True iff that bound stays <= max(lambda, active-term max),
+    in which case the full dual norm provably equals the active-term max
+    and every returned quantity is EXACT (bit-level identical up to einsum
+    reduction order) — not an approximation.  On ``valid=False`` the caller
+    must discard the result and fall back to :func:`_screen_round`.
+
+    Returns ``(gap, theta, group_keep, feat_keep, valid)`` with full-size
+    (G,) / (G, ng) masks; groups outside the buffer come back False (they
+    hold a permanent certificate and the caller's masks are intersected
+    monotonically).
+
+    ``backend="pallas"`` routes the correlation through the corr-only
+    kernel over ``xt_rows`` (the active-row slice of the persistent
+    transposed design, :func:`repro.kernels.ops.gather_transposed_rows`)
+    and the per-group dual terms through the bisection kernel.
+    """
+    dtype = Xt.dtype
+    tau = problem.tau
+    Gb, ng = Xt.shape[0], Xt.shape[2]
+
+    fmask_sub = (jnp.take(feat_active, take, axis=0).astype(dtype)
+                 * gmask[:, None])
+    bsub = jnp.take(beta, take, axis=0) * fmask_sub
+    resid = problem.y - jnp.einsum("gnk,gk->n", Xt, bsub)
+    shift = jnp.linalg.norm(resid - resid_ref)
+
+    if backend == "pallas":
+        corr = kops.screening_corr(xt_rows, resid)[: Gb * ng]
+        corr = corr.reshape(Gb, ng)
+    else:
+        corr = jnp.einsum("gnk,n->gk", Xt, resid)
+    corr = corr * gmask[:, None]          # padded slots alias group 0
+
+    w_sub = jnp.take(problem.w, take)
+    if backend == "pallas":
+        terms_sub = kops.sgl_dual_norm_terms_fused(corr, tau, w_sub)
+    else:
+        terms_sub = sgl.sgl_dual_norm_terms(corr, tau, w_sub)
+    gact_sub = jnp.take(group_active, take) & (gmask > 0)
+    dual_active = jnp.max(jnp.where(gact_sub, terms_sub, 0.0))
+    scale = jnp.maximum(lam_, dual_active)
+
+    real_grp = jnp.any(problem.feat_mask, axis=-1)
+    screened = real_grp & ~group_active
+    bound = scr.screened_dual_bound(
+        ref_terms, scr.screened_group_rate(problem), shift, screened
+    )
+    valid = bound <= scale
+
+    theta = resid / scale
+    # sgl.primal on the buffer: beta is exactly zero off it, so the
+    # residual and the SGL norm restricted to the gathered groups ARE the
+    # full primal; the dual is O(n) and reused verbatim.
+    primal = (0.5 * jnp.sum(resid * resid)
+              + lam_ * sgl.sgl_norm(bsub, tau, w_sub))
+    gap = primal - sgl.dual(problem, theta, lam_)
+
+    # Theorem-1 tests on the buffer: the SAME shared formulas as the full
+    # round (screening.theorem1_tests), on the gathered slices.
+    r = jnp.sqrt(2.0 * jnp.maximum(gap, 0.0)) / lam_
+    corr_s = corr / scale
+    fm_real_sub = (jnp.take(problem.feat_mask, take, axis=0)
+                   & (gmask[:, None] > 0))
+    xg = jnp.take(problem.Xnorm_grp, take)
+    xc = jnp.take(problem.Xnorm_col, take, axis=0)
+    g_keep_sub, f_keep_sub = scr.theorem1_tests(
+        corr_s, r, xg, xc, w_sub, fm_real_sub, tau
+    )
+    g_keep_sub = g_keep_sub & gact_sub
+    f_keep_sub = f_keep_sub & g_keep_sub[:, None] & fm_real_sub
+
+    # Scatter back to full-size masks; padded slots carry False and .add
+    # with int values keeps duplicate (aliased) indices harmless.
+    G = problem.feat_mask.shape[0]
+    g_keep = jnp.zeros((G,), jnp.int32).at[take].add(
+        g_keep_sub.astype(jnp.int32)) > 0
+    f_keep = jnp.zeros(problem.feat_mask.shape, jnp.int32).at[take].add(
+        f_keep_sub.astype(jnp.int32)) > 0
+    return gap, theta, g_keep, f_keep, valid
 
 
 def screen_round(
@@ -289,7 +465,7 @@ def screen_round(
             "screening.static_sphere + screening.screen, or solve()"
         )
     dtype = problem.X.dtype
-    return _screen_round(
+    res, _resid, _terms = _screen_round(
         problem,
         jnp.asarray(beta, dtype),
         jnp.asarray(lam_, dtype),
@@ -298,6 +474,7 @@ def screen_round(
         resolve_screen_backend(backend),
         xt_pre,
     )
+    return res
 
 
 def _bucket(n: int, minimum: int = 8) -> int:

@@ -108,19 +108,36 @@ def prepare_transposed(X: jax.Array) -> jax.Array:
     return _pad_to(_pad_to(Xt, 0, bp), 1, bn)
 
 
-# Audit hook: number of jit TRACES (not executions) in which
-# screening_corr_grouped had to materialise the (p, n) transpose itself
+# Audit hook: number of times (jit traces for jitted callers, eager calls
+# otherwise) an on-the-fly (p, n) transposed copy of X was materialised
 # because no persistent design was supplied.  A session-driven path must
 # leave this untouched — if the xt_pre wiring ever regressed, the first
 # certified round would build a transposing trace and move this counter,
 # which is exactly what tests/benchmarks watch for.  Each such trace
 # re-executes its transpose on every call, so any nonzero delta means
-# per-round copies are back.
+# per-round copies are back.  Every fallback path that builds the transpose
+# must go through :func:`transposed_design` (or bump the counter itself) so
+# the audit cannot under-report.
 _TRANSPOSE_TRACES = 0
 
 
 def transpose_trace_count() -> int:
     return _TRANSPOSE_TRACES
+
+
+def transposed_design(X: jax.Array) -> jax.Array:
+    """On-the-fly (p, n) transposed copy of a grouped design — COUNTED.
+
+    The counted fallback twin of :func:`prepare_transposed` (which builds
+    the persistent copy once per session and intentionally does NOT count).
+    ``screening.screen(backend="pallas")`` with ``xt_pre=None`` used to
+    build this reshape inline and bypass the audit, leaving a
+    session-wiring regression on that path invisible.
+    """
+    global _TRANSPOSE_TRACES
+    _TRANSPOSE_TRACES += 1
+    n, G, ng = X.shape
+    return X.reshape(n, G * ng).T
 
 
 def screening_corr_grouped(X: jax.Array, v: jax.Array,
@@ -136,28 +153,50 @@ def screening_corr_grouped(X: jax.Array, v: jax.Array,
     ``xt_pre``: persistent transposed design from :func:`prepare_transposed`.
     When given, the kernel consumes it directly and the per-call (p, n)
     transposed copy of X is eliminated; when None, the transpose is
-    materialised on the fly (legacy behavior).
+    materialised on the fly (legacy behavior, counted by the audit).
     """
     n, G, ng = X.shape
     p = G * ng
-    if xt_pre is None:
-        global _TRANSPOSE_TRACES
-        _TRANSPOSE_TRACES += 1
-        Xt = X.reshape(n, p).T
-    else:
-        Xt = xt_pre
+    Xt = transposed_design(X) if xt_pre is None else xt_pre
     corr = screening_corr(Xt, v)
     return corr[:p].reshape(G, ng)
 
 
-def sgl_dual_norm_fused(corr_grouped, tau, w, n_iter: int = 64):
-    """Omega^D via the Pallas bisection kernel (drop-in for sgl.sgl_dual_norm)."""
+def gather_transposed_rows(xt_pre: jax.Array, take, ng: int) -> jax.Array:
+    """Active-row slice of the persistent transposed design for the
+    compacted certified round.
+
+    ``take``: (Gb,) active-group indices from the solver's gather (padded
+    slots alias group 0 — their duplicated correlations are masked by the
+    caller's ``gmask``).  Row ``take[i]*ng + k`` of ``xt_pre`` is feature k
+    of the i-th gathered group, so the slice is the (p_active, n) layout the
+    corr kernel wants, re-padded to its block shape.  This is a gather (one
+    (p_active, n) copy), NOT a transpose — it is keyed on the active set by
+    :class:`repro.core.solver.SolveCaches` exactly like the BCD gather
+    buffers, so it is rebuilt only when the certified active set shrinks.
+    """
+    take = jnp.asarray(take)
+    rows = (take[:, None] * ng + jnp.arange(ng)[None, :]).reshape(-1)
+    sl = jnp.take(xt_pre, rows, axis=0)
+    bp, _ = _corr_blocks(sl.shape[0], xt_pre.shape[1])
+    return _pad_to(sl, 0, bp)
+
+
+def sgl_dual_norm_terms_fused(corr_grouped, tau, w, n_iter: int = 64):
+    """Per-group Omega^D terms via the Pallas bisection kernel (drop-in for
+    sgl.sgl_dual_norm_terms; the compact round caches these per group)."""
     from repro.core.sgl import epsilons, group_weight_total
 
     eps = epsilons(tau, w)
     scale = group_weight_total(tau, w)
     per_group = dual_norm_groups(corr_grouped, 1.0 - eps, eps, n_iter=n_iter)
-    return jnp.max(per_group / scale)
+    return per_group / scale
+
+
+def sgl_dual_norm_fused(corr_grouped, tau, w, n_iter: int = 64):
+    """Omega^D via the Pallas bisection kernel (drop-in for sgl.sgl_dual_norm)."""
+    return jnp.max(sgl_dual_norm_terms_fused(corr_grouped, tau, w,
+                                             n_iter=n_iter))
 
 
 def sgl_prox_batched(beta, lam_b, L, w, tau: float, block_g: int = 256):

@@ -120,6 +120,35 @@ def test_screen_monotone_in_radius(small_problem):
         prev_groups, prev_feats = g, f
 
 
+def test_pallas_screen_fallback_transpose_is_audited(small_problem):
+    """Regression (session-wiring audit): screen(backend='pallas') without a
+    persistent transposed design materialises a (p, n) transpose on the fly
+    — that copy must move kernels.ops.transpose_trace_count(), and the
+    xt_pre-fed call must not, or a broken xt_pre wiring on this path would
+    be invisible to the audit the tests/benchmarks watch."""
+    from repro.kernels import ops as kops
+
+    lmax = float(lambda_max(small_problem))
+    theta = small_problem.y / lmax
+    from repro.core import Sphere
+    sphere = Sphere(theta, jnp.asarray(0.1))
+
+    t0 = kops.transpose_trace_count()
+    res_nopre = screen(small_problem, sphere, backend="pallas")
+    assert kops.transpose_trace_count() == t0 + 1
+
+    xt = kops.prepare_transposed(small_problem.X)  # persistent: not counted
+    t1 = kops.transpose_trace_count()
+    assert t1 == t0 + 1
+    res_pre = screen(small_problem, sphere, backend="pallas", xt_pre=xt)
+    assert kops.transpose_trace_count() == t1
+    # same screens either way
+    assert np.array_equal(np.asarray(res_nopre.group_active),
+                          np.asarray(res_pre.group_active))
+    assert np.array_equal(np.asarray(res_nopre.feat_active),
+                          np.asarray(res_pre.feat_active))
+
+
 def test_lambda_max_is_critical(small_problem):
     """Remark 2: beta = 0 optimal iff lam >= lambda_max."""
     lmax = float(lambda_max(small_problem))

@@ -73,7 +73,8 @@ def test_screen_round_is_roundresult(prob, session_path):
     session, res = session_path
     cert = session.screen(0.2 * session.lam_max, res.betas[-1])
     assert isinstance(cert, RoundResult)
-    gap, theta, g_act, f_act = cert          # positional unpack still works
+    gap, theta, g_act, f_act = cert[:4]      # legacy positional quartet
+    assert not bool(cert.compact)            # screen() is always a full round
     assert g_act.shape == (prob.G,)
     assert f_act.shape == (prob.G, prob.ng)
     assert float(gap) >= 0 or np.isfinite(float(gap))
