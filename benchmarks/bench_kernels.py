@@ -54,8 +54,60 @@ def main(G=512, ng=16, n=256, tau=0.3) -> None:
          1e6 * timeit(lambda: ops.dual_norm_groups(x, alpha, R)))
 
 
-if __name__ == "__main__":
-    from .common import header
+def bcd_epoch_case(Gb=32, n=128, ng=8, n_epochs=10, B=4) -> None:
+    """Fused BCD-epoch mega-kernel vs the lax.scan reference.
 
+    Correctness: f64 bit-parity (max_err must read exactly 0.0 — the
+    kernel's contract, not an allclose).  Timing compares one fused launch
+    per epoch block against the per-group scan dispatch; on this CPU
+    container the kernel runs interpreted, so treat the wall-clock as a
+    dispatch-overhead floor, not a TPU number.  ``launches_per_block``
+    records the dispatch-count story: 1 fused launch vs Gb scan steps.
+    """
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 5)
+    dt = jnp.float64
+    Xt = jax.random.normal(ks[0], (Gb, n, ng), dt) / jnp.sqrt(n * 1.0)
+    Lg = jnp.abs(jax.random.normal(ks[1], (Gb,), dt)) + 0.5
+    w = jnp.sqrt(jnp.full((Gb,), float(ng), dt))
+    fm = (jax.random.uniform(ks[2], (B, Gb, ng)) < 0.9).astype(dt)
+    beta = jax.random.normal(ks[3], (B, Gb, ng), dt) * fm
+    resid = jax.random.normal(ks[4], (B, n), dt)
+    tau = jnp.asarray(0.3, dt)
+    lam_b = jnp.linspace(0.2, 0.8, B, dtype=dt)
+
+    got = ops.bcd_epochs_fused(Xt, Lg, w, fm, beta, resid, tau, lam_b,
+                               n_epochs)
+    want = ref.bcd_epochs_ref(Xt, Lg, w, fm, beta, resid, tau, lam_b,
+                              n_epochs)
+    err = max(float(jnp.max(jnp.abs(a - b))) for a, b in zip(got, want))
+    assert err == 0.0, f"fused BCD kernel lost f64 bit-parity: {err}"
+    case = f"bcd_epoch_G{Gb}_B{B}"
+    emit("kernels", case, "max_err", err)
+    emit("kernels", case, "launches_per_block_fused", 1)
+    emit("kernels", case, "launches_per_block_scan", Gb)
+    emit("kernels", case, "us_per_call_fused",
+         1e6 * timeit(lambda: ops.bcd_epochs_fused(
+             Xt, Lg, w, fm, beta, resid, tau, lam_b, n_epochs)))
+
+    scan_ref = jax.jit(
+        lambda b, r: ref.bcd_epochs_ref(Xt, Lg, w, fm, b, r, tau, lam_b,
+                                        n_epochs))
+    emit("kernels", case, "us_per_call_scan",
+         1e6 * timeit(lambda: scan_ref(beta, resid)))
+
+
+if __name__ == "__main__":
+    import argparse
+
+    from .common import header, write_json
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="dump emitted rows as machine-readable JSON")
+    args = ap.parse_args()
     header()
     main()
+    bcd_epoch_case()
+    if args.json:
+        write_json(args.json)

@@ -30,9 +30,20 @@ problem, and ``round_flop_reduction`` is the measured ratio between what
 full-rounds-only would have cost (rounds x ~4 n p) and the round FLOPs
 actually spent (``PathResult.round_flops``, fallback attempts included).
 
-``--smoke`` runs a reduced synthetic config and *asserts* the two audits
-the CI watches — zero on-the-fly transposed copies, compact rounds
-actually exercised — plus engine-vs-naive beta parity, then exits.
+The ``path_pr4`` case records the fused-BCD-solver trajectory
+(``solver_backend="pallas"``): wall-clock, epochs, certified-round split,
+round FLOPs, fused-epoch-launch and batched-lambda counts, against the XLA
+``lax.scan`` twin on the same grid.  ``--json PATH`` dumps every emitted row
+(plus environment metadata) as machine-readable JSON — the recorded
+``BENCH_pr4.json`` baseline future PRs diff against.
+
+``--smoke`` runs a reduced synthetic config and *asserts* the audits the CI
+watches — zero on-the-fly transposed copies, compact rounds actually
+exercised, engine-vs-naive beta parity, AND the fused-solver invariants:
+``solver_backend="pallas"`` (interpret mode on CPU) reproduces the XLA
+path bit-for-bit with ``n_fused_epoch_launches > 0``, and the
+batched-lambda run batches at least one coinciding-active-set stretch
+(``batched_lambdas > 0``) while staying within tolerance — then exits.
 """
 from __future__ import annotations
 
@@ -105,6 +116,46 @@ def smoke(n=64, p=512, n_groups=64, T=10, delta=2.0, tau=0.3,
     emit("path_smoke", "audit", "transpose_copies", res.n_transpose_copies)
     emit("path_smoke", "audit", "round_flop_reduction",
          full_equiv / max(res.round_flops, 1.0))
+
+    # ---- fused-BCD solver backend (interpret mode on CPU) ----
+    # Bit parity: the Pallas mega-kernel path must reproduce the XLA
+    # lax.scan path exactly — betas, epoch counts, and screen counters —
+    # while actually dispatching fused launches (so the kernel path cannot
+    # silently rot on CPU-only CI).
+    sess_p = SGLSession(problem, SolverConfig(tol=tol,
+                                              max_epochs=max_epochs,
+                                              full_round_every=10 ** 9,
+                                              solver_backend="pallas"))
+    res_p = sess_p.solve_path(T=T, delta=delta, batch_lambdas=1)
+    assert res_p.n_fused_epoch_launches > 0, "no fused epoch launches"
+    np.testing.assert_array_equal(res_p.betas, res.betas)
+    assert (res_p.epochs == res.epochs).all(), "epoch counts diverged"
+    assert np.array_equal(res_p.seq_screened, res.seq_screened)
+    assert np.array_equal(res_p.dyn_screened, res.dyn_screened)
+    emit("path_smoke", "pallas", "fused_epoch_launches",
+         res_p.n_fused_epoch_launches)
+
+    # Batched-lambda single-device path, on a DENSE grid whose warm tail
+    # has coinciding certified active sets (batching is gated to warm
+    # stretches — see SGLSession.solve_path): the stretch must batch
+    # through the kernel's lambda-batch grid axis, stay safe, and land
+    # within solver tolerance of the per-lambda XLA reference.
+    dense = dict(T=T, delta=0.5)
+    ref_d = SGLSession(problem, SolverConfig(
+        tol=tol, max_epochs=max_epochs, full_round_every=10 ** 9,
+    )).solve_path(batch_lambdas=1, **dense)
+    sess_b = SGLSession(problem, SolverConfig(tol=tol,
+                                              max_epochs=max_epochs,
+                                              full_round_every=10 ** 9,
+                                              solver_backend="pallas"))
+    res_b = sess_b.solve_path(batch_lambdas=4, **dense)
+    assert res_b.batched_lambdas > 0, "no batched lambdas on this grid"
+    assert (res_b.gaps <= tol).all(), "batched path missed tolerance"
+    np.testing.assert_allclose(res_b.betas, ref_d.betas, atol=1e-8)
+    emit("path_smoke", "pallas_batched", "batched_lambdas",
+         res_b.batched_lambdas)
+    emit("path_smoke", "pallas_batched", "fused_epoch_launches",
+         res_b.n_fused_epoch_launches)
     print("SMOKE PASS")
 
 
@@ -160,6 +211,11 @@ def main(n=256, n_lon=16, n_lat=8, T=20, delta=2.5, tau=0.4,
                                   * problem.G * problem.ng)
                     emit("path_fig3b", case, "round_flop_reduction",
                          full_equiv / max(res.round_flops, 1.0))
+                    emit("path_fig3b", case, "round_flops", res.round_flops)
+                    emit("path_fig3b", case, "fused_epoch_launches",
+                         res.n_fused_epoch_launches)
+                    emit("path_fig3b", case, "batched_lambdas",
+                         res.batched_lambdas)
                 if rule == "gap":
                     emit("path_fig3b", case, "seq_screened_groups",
                          int(res.seq_screened.sum()))
@@ -167,21 +223,79 @@ def main(n=256, n_lon=16, n_lat=8, T=20, delta=2.5, tau=0.4,
                          int(res.dyn_screened.sum()))
 
 
+def pallas_case(n=64, p=512, n_groups=64, T=12, delta=2.0, tau=0.3,
+                tol=1e-6, max_epochs=20_000) -> None:
+    """Fused-BCD-solver trajectory vs its XLA twin on one synthetic grid.
+
+    On this CPU container the fused kernel runs interpreted, so its
+    wall-clock is an upper bound on dispatch overhead rather than a TPU
+    number — the launch/batching audits and the epoch counts are the
+    durable metrics (compiled-TPU wall-clock belongs in EXPERIMENTS.md).
+    """
+    import numpy as np
+
+    from repro.data.synthetic import make_synthetic
+
+    X, y, _, sizes = make_synthetic(n=n, p=p, n_groups=n_groups, gamma1=3,
+                                    gamma2=3, seed=11)
+    problem = sgl.make_problem(X, y, sizes, tau=tau)
+    # Batching is gated to warm stretches, so the batched case runs on a
+    # DENSE grid (delta=0.5: near-duplicate consecutive lambdas) where
+    # coinciding-active-set warm stretches actually occur; its reference
+    # is the XLA run of the SAME grid.
+    runs = (
+        ("xla", "xla", 1, delta),
+        ("pallas", "pallas", 1, delta),
+        ("xla_dense", "xla", 1, 0.5),
+        ("pallas_batched", "pallas", 4, 0.5),
+    )
+    betas_ref = {}
+    for case, backend, batch, delta_c in runs:
+        session = SGLSession(problem, SolverConfig(
+            tol=tol, max_epochs=max_epochs, solver_backend=backend,
+        ))
+        t0 = time.perf_counter()
+        res = session.solve_path(T=T, delta=delta_c, batch_lambdas=batch)
+        dt = time.perf_counter() - t0
+        emit("path_pr4", case, "path_seconds", dt)
+        emit("path_pr4", case, "total_epochs", int(res.epochs.sum()))
+        emit("path_pr4", case, "certified_rounds", res.n_rounds)
+        emit("path_pr4", case, "compact_rounds", res.n_compact_rounds)
+        emit("path_pr4", case, "full_rounds", res.n_full_rounds)
+        emit("path_pr4", case, "round_flops", res.round_flops)
+        emit("path_pr4", case, "fused_epoch_launches",
+             res.n_fused_epoch_launches)
+        emit("path_pr4", case, "batched_lambdas", res.batched_lambdas)
+        if delta_c not in betas_ref:
+            betas_ref[delta_c] = np.asarray(res.betas)
+        else:
+            emit("path_pr4", case, "beta_max_diff_vs_xla",
+                 float(np.abs(np.asarray(res.betas)
+                              - betas_ref[delta_c]).max()))
+
+
 if __name__ == "__main__":
     import argparse
 
-    from .common import header
+    from .common import header, write_json
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized run asserting the transpose and "
-                         "compact-round audits")
+                    help="CI-sized run asserting the transpose, "
+                         "compact-round, and fused-solver audits")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="dump emitted rows as machine-readable JSON "
+                         "(the BENCH_pr4.json perf-trajectory record)")
     args = ap.parse_args()
     header()
     if args.smoke:
         smoke()
     elif args.full:
         main(n=814, n_lon=144, n_lat=73, T=100)
+        pallas_case()
     else:
         main()
+        pallas_case()
+    if args.json:
+        write_json(args.json)

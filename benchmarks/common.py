@@ -2,9 +2,16 @@
 
 Every benchmark emits rows through ``emit`` so ``benchmarks.run`` can
 aggregate a single CSV:  benchmark,case,metric,value
+
+``write_json`` additionally dumps the emitted rows (plus environment
+metadata) to a machine-readable JSON file — the perf-trajectory record
+(e.g. ``BENCH_pr4.json``) future PRs diff against instead of prose in
+CHANGES.md.
 """
 from __future__ import annotations
 
+import json
+import platform
 import time
 from typing import Callable
 
@@ -24,6 +31,32 @@ def emit(bench: str, case: str, metric: str, value) -> None:
 
 def rows():
     return list(_ROWS)
+
+
+def write_json(path: str, extra: dict | None = None) -> None:
+    """Dump every row emitted so far (plus environment metadata) as JSON.
+
+    Schema: ``{"meta": {...}, "rows": [{benchmark, case, metric, value}]}``
+    — flat rows rather than nesting so a diff tool can join on
+    (benchmark, case, metric) without knowing any benchmark's shape.
+    """
+    payload = {
+        "meta": {
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "x64": bool(jax.config.read("jax_enable_x64")),
+            **(extra or {}),
+        },
+        "rows": [
+            {"benchmark": b, "case": c, "metric": m, "value": v}
+            for b, c, m, v in _ROWS
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(_ROWS)} rows -> {path}")
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, repeat: int = 3) -> float:

@@ -36,6 +36,7 @@ def main() -> None:
     if "kernels" in only:
         from . import bench_kernels
         bench_kernels.main()
+        bench_kernels.bcd_epoch_case()
     if "active_sets" in only:
         from . import bench_active_sets
         bench_active_sets.main()
@@ -48,6 +49,7 @@ def main() -> None:
             bench_path.main(n=814, n_lon=144, n_lat=73, T=100)
         else:
             bench_path.main()
+        bench_path.pallas_case()
 
     os.makedirs("artifacts", exist_ok=True)
     with open("artifacts/bench_results.csv", "w") as f:

@@ -15,6 +15,21 @@ kwargs became :class:`SolverConfig` fields with the same names (``tol``,
 ``max_epochs``, ``f_ce``, ``rule``, ``compact``, ``inner_rounds``,
 ``check_every``, ``screen_backend``, ``warm_gap_factor``); the lambda and
 warm-start state stay on ``session.solve(lam, beta0=...)``.
+
+``SolverConfig.solver_backend`` (new) picks the inner-epoch engine:
+``"auto"`` (default) fuses whole BCD epoch blocks into ONE Pallas kernel
+launch on TPU (``kernels/bcd_epoch.py`` — VMEM-resident residual, and a
+lambda-batch axis that solves coinciding-active-set path points together)
+and keeps the ``lax.scan`` reference elsewhere; force ``"pallas"`` /
+``"xla"`` to override.  The fused kernel's epoch math is bit-identical to
+the scan in f64, so switching is a performance choice, not a numerics one
+(the backends' between-block early-exit heuristics can in principle differ
+in the last ulp; the CI smoke pins end-to-end equality on its config).
+On warm path stretches whose certified active sets coincide, the Pallas
+backend additionally batches consecutive lambdas through the kernel's
+lambda-batch axis (``solve_path(batch_lambdas=...)``) — results there are
+tol-level equivalent, not bit-equal; pass ``batch_lambdas=1`` for exact
+per-lambda reproduction.
 """
 import os
 

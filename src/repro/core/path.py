@@ -68,6 +68,7 @@ def solve_path(
     check_every: Union[int, None, str] = "auto",
     sequential: bool = True,
     screen_backend: str = "auto",
+    solver_backend: str = "auto",
     keep_results: bool = False,
     warm_gap_factor: float = 1e3,
 ) -> PathResult:
@@ -81,7 +82,8 @@ def solve_path(
 
         Solver knobs (``tol``/``max_epochs``/``f_ce``/``rule``/``compact``/
         ``inner_rounds``/``check_every``/``screen_backend``/
-        ``warm_gap_factor``) are :class:`SolverConfig` fields; the grid
+        ``solver_backend``/``warm_gap_factor``) are :class:`SolverConfig`
+        fields; the grid
         (``lambdas``/``T``/``delta``) and ``sequential``/``keep_results``
         are ``solve_path`` arguments.
 
@@ -97,7 +99,8 @@ def solve_path(
     cfg = SolverConfig(
         tol=tol, max_epochs=max_epochs, f_ce=f_ce, rule=rule,
         compact=compact, inner_rounds=inner_rounds, check_every=check_every,
-        screen_backend=screen_backend, warm_gap_factor=warm_gap_factor,
+        screen_backend=screen_backend, solver_backend=solver_backend,
+        warm_gap_factor=warm_gap_factor,
     )
     session = SGLSession(problem, cfg)
     return session.solve_path(

@@ -61,12 +61,29 @@ full-problem exact even though compact rounds are themselves exact when
 their bound holds.  ``PathResult.n_compact_rounds`` / ``n_full_rounds`` /
 ``round_flops`` audit the split next to the transpose audit.
 
+Fused BCD epochs and batched lambdas
+------------------------------------
+``SolverConfig.solver_backend`` (``"auto"``/``"xla"``/``"pallas"``, same
+resolution policy as the screening backend) picks the inner-epoch engine on
+the single-device strategy: ``"pallas"`` dispatches whole epoch blocks as
+ONE fused :mod:`repro.kernels.bcd_epoch` launch — residual carried in VMEM
+across the group loop, design streamed tile-by-tile — instead of the
+``lax.scan`` over groups (kept as the XLA fallback and bit-parity
+reference).  The kernel's lambda-batch grid axis also brings the
+batched-lambda path optimisation to the single-device solver: consecutive
+path points whose sequential certificates agree on the active groups solve
+in one run (:meth:`SGLSession._solve_batch_bcd`), mirroring the mesh
+strategy's ``fista_batch``.  Audited as
+``PathResult.n_fused_epoch_launches`` / ``batched_lambdas`` (session
+counters ``fused_epoch_launches`` / ``batched_lambdas``).
+
 Migration from the legacy front-ends
 ------------------------------------
 ``solve(...)`` / ``solve_path(...)`` loose kwargs became
 :class:`SolverConfig` fields with the same names and defaults (``tol``,
 ``max_epochs``, ``f_ce``, ``rule``, ``compact``, ``inner_rounds``,
-``check_every``, ``screen_backend``, ``warm_gap_factor``); per-call state
+``check_every``, ``screen_backend``, ``solver_backend``,
+``warm_gap_factor``); per-call state
 (``lam_``, ``beta0``, ``first_round``, ``lambdas``) stays on the method.
 ``solve_distributed(mesh, X, y, w, ...)`` raw arrays became
 ``SGLSession(problem_from_grouped(X, y, tau, w), mesh=mesh)``.  The legacy
@@ -93,6 +110,7 @@ from .solver import (
     _screen_round_compact,
     bcd_epochs,
     resolve_screen_backend,
+    resolve_solver_backend,
 )
 from ..kernels import ops as kops
 
@@ -131,6 +149,15 @@ class SolverConfig(NamedTuple):
     full_round_every: int = 10     # certified rounds between forced full
                                    #   rounds (reference refresh); <= 0
                                    #   disables compact rounds outright
+    solver_backend: str = "auto"   # auto | xla | pallas — backend for the
+                                   #   inner BCD epochs: "pallas" fuses
+                                   #   whole epoch blocks into ONE kernel
+                                   #   launch (kernels/bcd_epoch.py, VMEM-
+                                   #   resident residual, batched-lambda
+                                   #   grid); "xla" keeps the lax.scan
+                                   #   reference.  Single-device strategy
+                                   #   only (the mesh strategy's FISTA
+                                   #   kernels have their own dispatch).
 
 
 def lambda_grid(lam_max: float, T: int = 100, delta: float = 3.0) -> np.ndarray:
@@ -184,6 +211,43 @@ class PathResult(NamedTuple):
                                    #   incl. discarded fallback attempts);
                                    #   full-round-only engines spend
                                    #   (n_compact+n_full) * 4*n*p
+    n_fused_epoch_launches: int = 0  # epoch blocks dispatched as ONE fused
+                                   #   Pallas launch (solver_backend=
+                                   #   "pallas"); the lax.scan path would
+                                   #   have paid O(G) scan steps per block.
+                                   #   0 on the XLA solver backend and on
+                                   #   the mesh strategy.
+    batched_lambdas: int = 0       # path points solved through a
+                                   #   batched-lambda run: the fused BCD
+                                   #   kernel's lambda-batch grid axis on
+                                   #   the single-device strategy, the
+                                   #   fista_batch kernel on the mesh —
+                                   #   consecutive lambdas whose sequential
+                                   #   certificates agreed on the active
+                                   #   groups.  0 when no batching engaged.
+
+
+@jax.jit
+def _batch_reduced_gaps(Xt, fmask_b, bsub, resid, w, y, tau, lam_b):
+    """Per-lambda reduced-problem duality gaps on a shared batch buffer.
+
+    The jitted batched twin of ``_inner_rounds``' early-exit heuristic —
+    one einsum + vmapped norms per epoch block instead of per-lambda eager
+    dispatches.  Work scheduling only; never reported (convergence is
+    always confirmed by a full certified round).  The correlation stays an
+    XLA einsum even on the Pallas solver backend: vmapping the corr kernel
+    over the batch axis is a TPU-tuning leftover (see ROADMAP).
+    """
+    corr = jnp.einsum("gnk,bn->bgk", Xt, resid) * fmask_b
+    dn = jax.vmap(sgl.sgl_dual_norm, in_axes=(0, None, None))(corr, tau, w)
+    theta = resid / jnp.maximum(lam_b, dn)[:, None]
+    primal = (0.5 * jnp.sum(resid * resid, axis=1)
+              + lam_b * jax.vmap(sgl.sgl_norm,
+                                 in_axes=(0, None, None))(bsub, tau, w))
+    diff = theta - y[None] / lam_b[:, None]
+    dual = (0.5 * jnp.sum(y * y)
+            - 0.5 * lam_b * lam_b * jnp.sum(diff * diff, axis=1))
+    return primal - dual
 
 
 def _global_lipschitz(problem: SGLProblem, n_iter: int = 150) -> float:
@@ -248,6 +312,13 @@ class SGLSession:
         self.config = config if config is not None else SolverConfig()
         self.caches = caches if caches is not None else SolveCaches()
         self.backend = resolve_screen_backend(self.config.screen_backend)
+        # Inner-epoch backend (single-device BCD strategy): "pallas" runs
+        # whole epoch blocks through the fused kernels/bcd_epoch.py launch,
+        # "xla" keeps the lax.scan reference.  Resolved eagerly so an
+        # invalid knob fails at session construction, like screen_backend.
+        self.solver_backend = resolve_solver_backend(
+            self.config.solver_backend
+        )
         self.mesh = mesh
         # Auditable round accounting: every certified round dispatched
         # through this session.  Whether any of those rounds had to build a
@@ -265,9 +336,14 @@ class SGLSession:
         self.compact_fallbacks = 0
         self.round_flops = 0.0
         self._rounds_since_full = 0
-        # Lambdas solved through the batched-lambda FISTA kernel (mesh
-        # strategy only): path points whose sequential certificates agreed.
+        # Lambdas solved through a batched-lambda run: the fused BCD
+        # kernel's lambda-batch grid axis (single-device Pallas strategy)
+        # or the fista_batch kernel (mesh strategy) — path points whose
+        # sequential certificates agreed on the active groups.
         self.batched_lambdas = 0
+        # Epoch blocks dispatched as ONE fused Pallas launch instead of an
+        # O(G) lax.scan (solver_backend="pallas" only).
+        self.fused_epoch_launches = 0
         self._xt_pre: Optional[jax.Array] = None
         self._lam_max: Optional[float] = None
         if mesh is not None and self.config.rule != "gap":
@@ -293,8 +369,11 @@ class SGLSession:
     @property
     def xt_pre(self) -> Optional[jax.Array]:
         """Persistent transposed design for the Pallas correlation kernel
-        (None on the XLA backend, where einsums handle layout natively)."""
-        if self.backend != "pallas":
+        (None when neither the screening rounds nor the inner reduced-gap
+        checks run on Pallas — plain XLA einsums handle layout natively).
+        The Pallas *solver* backend needs it too: ``_inner_rounds`` feeds
+        its between-block gap correlation from the active-row slice."""
+        if self.backend != "pallas" and self.solver_backend != "pallas":
             return None
         if self._xt_pre is None:
             self._xt_pre = kops.prepare_transposed(self.problem.X)
@@ -583,12 +662,26 @@ class SGLSession:
                 idx, take, Xt, Lg, w, gmask = caches.gather(
                     problem, group_active
                 )
+                xt_rows = None
+                if self.solver_backend == "pallas":
+                    # Active-row slice of the persistent transposed design,
+                    # feeding the Pallas reduced-gap correlation between
+                    # epoch blocks (keyed on the same active-set bytes as
+                    # the gather — a row gather, never a transpose).
+                    xt_rows = caches.gather_xt_rows(
+                        problem, group_active, self.xt_pre
+                    )
                 beta, k_done, _ = _inner_rounds(
                     Xt, Lg, w, problem.y, beta, jnp.asarray(feat_active),
                     take, gmask, problem.tau, lam_j,
-                    jnp.asarray(tol, dtype), check, max_blocks
+                    jnp.asarray(tol, dtype), check, max_blocks,
+                    self.solver_backend, xt_rows
                 )
                 epochs_done += check * int(k_done)
+                if self.solver_backend == "pallas":
+                    # Each inner block ran as ONE fused kernel launch
+                    # (k_done of them) instead of O(G) scan steps.
+                    self.fused_epoch_launches += int(k_done)
             else:
                 if Xt_full is None:
                     Xt_full = jnp.transpose(problem.X, (1, 0, 2))
@@ -598,10 +691,19 @@ class SGLSession:
                     resid_nc = problem.y - jnp.einsum(
                         "gnk,gk->n", Xt_full, beta
                     )
-                beta, resid_nc = bcd_epochs(
-                    Xt_full, Lg, problem.w, fmask, beta, resid_nc,
-                    problem.tau, lam_j, f_ce
-                )
+                if self.solver_backend == "pallas":
+                    beta_b, resid_b = kops.bcd_epochs_fused(
+                        Xt_full, Lg, problem.w, fmask[None], beta[None],
+                        resid_nc[None], problem.tau,
+                        jnp.reshape(lam_j, (1,)), f_ce
+                    )
+                    beta, resid_nc = beta_b[0], resid_b[0]
+                    self.fused_epoch_launches += 1
+                else:
+                    beta, resid_nc = bcd_epochs(
+                        Xt_full, Lg, problem.w, fmask, beta, resid_nc,
+                        problem.tau, lam_j, f_ce
+                    )
                 epochs_done += f_ce
 
         return SolveResult(
@@ -614,6 +716,199 @@ class SGLSession:
             gap_history=gap_history,
             active_history=active_history,
         )
+
+    def _solve_batch_bcd(self, lams, beta0, certs, caches: SolveCaches):
+        """Solve B consecutive path points in ONE fused-kernel run
+        (single-device mirror of :meth:`_DistStrategy._solve_batch`).
+
+        All B lambdas warm-start from the same previous-lambda ``beta0``
+        and share one gathered design buffer over the UNION of their
+        certified active-group sets (the batching precondition keeps that
+        union inside one gather bucket); each carries its own
+        coefficients, residual, feature mask, and threshold down the fused
+        kernel's lambda-batch grid axis, so every epoch block is ONE launch
+        and one streaming pass over the design for all B lambdas — groups
+        a given lambda screened ride along with a zero mask, exactly like
+        bucket padding.  Every
+        ``f_ce`` epochs (every epoch when all certificates are warm) each
+        unconverged lambda gets its own FULL certified round — per-lambda
+        dynamic screening inside the batch, expressed through the
+        per-lambda feature masks (the shared buffer never re-gathers
+        mid-run).  Converged lambdas are snapshotted; their rows keep
+        iterating under a frozen mask until the batch drains (wasted but
+        harmless work — same policy as the mesh ``_solve_batch``).
+
+        Round cadence (mirrors the per-lambda driver's round economy):
+        each epoch block is followed only by the cheap reduced-problem gap
+        heuristic on the batch buffer (O(n p_active) per lambda, exactly
+        ``_inner_rounds``' early-exit test).  A FULL certified round runs
+        for a lambda only when its reduced gap crosses ``tol`` (the
+        convergence confirmation, always full-problem exact) or when
+        ``f_ce * inner_rounds`` epochs have passed since its last round
+        (the dynamic-screening cadence — the same worst-case spacing as
+        one per-lambda ``_inner_rounds`` call).  A confirmation that FAILS
+        (reduced gap under ``tol`` but full gap above — the reduced gap
+        under-estimates once screened mass dominates) backs that lambda
+        off for ``f_ce`` epochs so a saturating straggler cannot degrade
+        to one full round per epoch.
+
+        Trade-off vs the per-lambda sequential driver: every batched
+        lambda warm-starts from the *batch-entry* beta instead of its
+        predecessor's solution, so cold batches spend somewhat more epochs
+        (and a lambda near the ``max_epochs`` budget can saturate where
+        the warmer sequential start would just converge — the reported
+        gap stays honest either way).  Batching pays off on the warm
+        plateau stretches where certificates coincide because little is
+        changing lambda-to-lambda.
+
+        Returns per-lambda :class:`SolveResult`\\ s with the same reporting
+        semantics as :meth:`solve` (masks reflect the last screen applied;
+        a converging round's masks are never adopted).
+        """
+        cfg = self.config
+        problem = self.problem
+        dtype = problem.X.dtype
+        tol, f_ce = cfg.tol, cfg.f_ce
+        B = len(lams)
+        self.batched_lambdas += B
+        G, ng = problem.G, problem.ng
+        y = problem.y
+        lam_max_j = jnp.asarray(self.lam_max, dtype)
+        real_grp = np.asarray(jnp.any(problem.feat_mask, axis=-1))
+        base_g = real_grp & np.logical_or.reduce(
+            [np.asarray(c.group_active) for c in certs]
+        )
+        fm_full = np.asarray(problem.feat_mask)
+
+        g_act = [real_grp & np.asarray(certs[b].group_active)
+                 for b in range(B)]
+        f_act = [fm_full & np.asarray(c.feat_active)
+                 & np.asarray(c.group_active)[:, None] for c in certs]
+        gap_b = [float(c.gap) for c in certs]
+        done = np.array([g <= tol for g in gap_b])
+        gap_hist = [[(0, gap_b[b])] for b in range(B)]
+        epochs_b = np.zeros(B, np.int64)
+        beta0_j = jnp.asarray(beta0, dtype)
+        # Lambdas converged on their sequential certificate report the
+        # pre-screen state, exactly like solve(): beta untouched, masks =
+        # the initial active sets (the path recorder intersects the
+        # REPORTED masks with the certificate afterwards).
+        final_beta = [beta0_j if done[b] else None for b in range(B)]
+        final_g = [real_grp.copy() if done[b] else None for b in range(B)]
+        final_f = [fm_full.copy() if done[b] else None for b in range(B)]
+        final_theta = [certs[b].theta for b in range(B)]
+
+        def results():
+            return [
+                SolveResult(
+                    beta=final_beta[b],
+                    theta=final_theta[b],
+                    gap=gap_hist[b][-1][1],
+                    n_epochs=int(epochs_b[b]),
+                    group_active=final_g[b],
+                    feat_active=final_f[b],
+                    gap_history=gap_hist[b],
+                    active_history=[],
+                )
+                for b in range(B)
+            ]
+
+        if done.all():
+            return results()
+
+        idx, take, Xt, Lg, w, gmask = caches.gather(problem, base_g)
+        take_np = np.asarray(take)
+        Lg_eff = Lg * gmask
+        lam_b = jnp.asarray(np.asarray(lams), dtype)
+
+        def gather_masks():
+            return (jnp.asarray(np.stack(f_act)[:, take_np], dtype)
+                    * gmask[None, :, None])
+
+        fm_b = gather_masks()
+        bsub = jnp.stack([
+            jnp.take(beta0_j * jnp.asarray(f_act[b], dtype), take, axis=0)
+            for b in range(B)
+        ]) * fm_b
+        resid = y[None] - jnp.einsum("gnk,bgk->bn", Xt, bsub)
+        # All-warm batches (every certificate gap already near tol) check
+        # after every epoch; otherwise the cheap f_ce-block cadence.
+        warm = all(g <= cfg.warm_gap_factor * tol for g in gap_b)
+        block = 1 if warm else f_ce
+        cadence = f_ce * max(1, cfg.inner_rounds)
+        last_round_b = np.zeros(B)     # sequential certificates count as
+        hold_b = np.zeros(B)           # round 0; holds gate re-confirms
+
+        step = 0
+        while not done.all() and step < cfg.max_epochs:
+            bsub, resid = kops.bcd_epochs_fused(
+                Xt, Lg_eff, w, fm_b, bsub, resid, problem.tau, lam_b, block
+            )
+            self.fused_epoch_launches += 1
+            step += block
+            red = np.asarray(_batch_reduced_gaps(
+                Xt, fm_b, bsub, resid, w, y, problem.tau, lam_b
+            ))
+            changed = False
+            for b in range(B):
+                if done[b]:
+                    continue
+                crossed = red[b] <= tol and step >= hold_b[b]
+                due = (step - last_round_b[b] >= cadence
+                       or step >= cfg.max_epochs)
+                if not (crossed or due):
+                    # Neither due for screening nor plausibly converged:
+                    # keep iterating round-free (the cheap heuristic is
+                    # the only per-block cost, as in _inner_rounds).
+                    continue
+                # Padded take slots alias group 0 but carry zero masks, so
+                # their (zero) rows scatter harmlessly.
+                beta_full = jnp.zeros((G, ng), dtype).at[take].add(
+                    bsub[b] * fm_b[b]
+                )
+                last_round_b[b] = step
+                rres = self._certified_round(
+                    beta_full, lam_b[b], lam_max_j, "gap", caches=caches
+                )
+                gap_hist[b].append((step, float(rres.gap)))
+                final_theta[b] = rres.theta
+                if float(rres.gap) <= tol:
+                    # Converging round's masks are NOT adopted (same
+                    # reporter contract as solve()).
+                    done[b] = True
+                    epochs_b[b] = step
+                    final_beta[b] = beta_full
+                    final_g[b] = g_act[b]
+                    final_f[b] = f_act[b]
+                    continue
+                if crossed:
+                    # Failed confirmation: the reduced gap sits under tol
+                    # while the full gap does not — back off f_ce epochs
+                    # before re-confirming this lambda.
+                    hold_b[b] = step + f_ce
+                n_g0, n_f0 = g_act[b].sum(), f_act[b].sum()
+                g_act[b] &= np.asarray(rres.group_active)
+                f_act[b] &= np.asarray(rres.feat_active)
+                f_act[b] &= g_act[b][:, None]
+                if g_act[b].sum() != n_g0 or f_act[b].sum() != n_f0:
+                    changed = True
+            if changed:
+                # Some lambda screened further: re-mask its coefficients
+                # and refresh the affected residuals (the buffer itself
+                # stays at the shared base active set).
+                fm_b = gather_masks()
+                bsub = bsub * fm_b
+                resid = y[None] - jnp.einsum("gnk,bgk->bn", Xt, bsub)
+
+        for b in range(B):
+            if not done[b]:        # max_epochs stragglers
+                epochs_b[b] = step
+                final_beta[b] = jnp.zeros((G, ng), dtype).at[take].add(
+                    bsub[b] * fm_b[b]
+                )
+                final_g[b] = g_act[b]
+                final_f[b] = f_act[b]
+        return results()
 
     def solve_path(
         self,
@@ -635,9 +930,13 @@ class SGLSession:
         ``sequential=False`` reproduces the legacy naive loop (fresh caches
         and no pre-solve screening per lambda).
 
-        On the distributed strategy, up to ``batch_lambdas`` *consecutive*
-        path points whose sequential certificates agree on the active
-        groups are solved in one batched-lambda FISTA run.
+        Up to ``batch_lambdas`` *consecutive* path points whose sequential
+        certificates agree on the active groups are solved in one
+        batched-lambda run: the ``fista_batch`` kernel on the distributed
+        strategy, and — with ``solver_backend="pallas"`` (f64, GAP rule) —
+        the fused BCD epoch kernel's lambda-batch grid axis on the
+        single-device strategy (:meth:`_solve_batch_bcd`).
+        ``PathResult.batched_lambdas`` audits both.
         """
         if self._dist is not None:
             return self._dist.solve_path(
@@ -661,6 +960,8 @@ class SGLSession:
         compact0 = self.compact_rounds
         full0 = self.full_rounds
         flops0 = self.round_flops
+        fused0 = self.fused_epoch_launches
+        batched0 = self.batched_lambdas
         traces0 = kops.transpose_trace_count()
 
         # One cache for the whole path: the gather (and its jit cache)
@@ -683,55 +984,10 @@ class SGLSession:
         results: list = []
 
         screening_rule = rule in ("gap", "dynamic", "dst3")
-        for t, lam_ in enumerate(lambdas):
-            first_round = None
-            n_seq_active = n_groups
-            if sequential and rule != "static":
-                # Sequential rule: certified round at the NEW lambda from
-                # the PREVIOUS lambda's primal point, before any epoch here.
-                # The static rule is excluded: solve() applies its up-front
-                # static screen to beta before any round, which would
-                # invalidate a certificate evaluated at the un-masked warm
-                # start.
-                first_round = self.screen(float(lam_), beta, rule=rule)
-                if screening_rule:
-                    n_seq_active = int(
-                        np.asarray(first_round.group_active).sum()
-                    )
-                    seq_scr[t] = n_groups - n_seq_active
 
-            if cfg.check_every == "auto":
-                # Warm lambdas finish in a handful of passes, so per-epoch
-                # early-exit checks beat the f_ce-block floor; cold lambdas
-                # keep the cheap block cadence.  Warmness is read off the
-                # sequential certificate (gap already near tol), or
-                # predicted from the path itself: the previous lambda's
-                # epoch count, when positive and within four f_ce-blocks,
-                # marks a warm region (warmness varies smoothly along a
-                # geometric grid).  A zero count (lambda_max, or a user grid
-                # jumping far from the last point) carries no signal and
-                # must not force per-epoch checks on a cold lambda.
-                warm = (first_round is not None
-                        and float(first_round.gap)
-                        <= cfg.warm_gap_factor * cfg.tol)
-                warm |= t > 0 and 0 < epochs[t - 1] <= 4 * cfg.f_ce
-                check_t = 1 if warm else None
-            else:
-                check_t = cfg.check_every
-
-            lam_caches = caches if caches is not None else SolveCaches()
-            res = self.solve(
-                float(lam_),
-                beta0=beta,
-                first_round=first_round,
-                lam_max=lam_max,
-                check_every=check_t,
-                caches=lam_caches,
-            )
-            beta = res.beta
-            if caches is None:
-                n_gathers_total += lam_caches.n_gathers
-
+        def record(t, res, first_round, n_seq_active):
+            """Per-lambda bookkeeping shared by the per-lambda and the
+            batched-lambda drivers (mutates the dense path arrays)."""
             betas[t] = np.asarray(res.beta)
             gaps[t] = float(res.gap)
             epochs[t] = res.n_epochs
@@ -769,6 +1025,124 @@ class SGLSession:
             if keep_results:
                 results.append(res)
 
+        # Batched-lambda path points (the ROADMAP item the distributed
+        # strategy delivered first): consecutive lambdas whose sequential
+        # certificates agree on the active groups share ONE fused-kernel
+        # run through the kernel's lambda-batch grid axis.  Pallas solver
+        # backend only (the lax.scan reference has no batch axis), GAP rule
+        # only (certificates must be safe spheres), and f64 only (the
+        # batched driver adopts certificate masks the way the f64 reporter
+        # does).  Additionally gated per-lambda on the path engine's WARM
+        # predictor below: batching trades the sequential warm start for
+        # launch count, which pays off (and cannot blow the epoch budget)
+        # only where lambdas converge in a handful of passes — batching a
+        # cold stretch costs extra epochs and discarded probe rounds for
+        # nothing.
+        batch_ok = (sequential and rule == "gap"
+                    and self.solver_backend == "pallas"
+                    and batch_lambdas > 1
+                    and np.dtype(dtype).itemsize >= 8)
+
+        t = 0
+        while t < T_:
+            lam_ = lambdas[t]
+            first_round = None
+            n_seq_active = n_groups
+            if sequential and rule != "static":
+                # Sequential rule: certified round at the NEW lambda from
+                # the PREVIOUS lambda's primal point, before any epoch here.
+                # The static rule is excluded: solve() applies its up-front
+                # static screen to beta before any round, which would
+                # invalidate a certificate evaluated at the un-masked warm
+                # start.
+                first_round = self.screen(float(lam_), beta, rule=rule)
+                if screening_rule:
+                    n_seq_active = int(
+                        np.asarray(first_round.group_active).sum()
+                    )
+                    seq_scr[t] = n_groups - n_seq_active
+
+            warm_here = (first_round is not None
+                         and (float(first_round.gap)
+                              <= cfg.warm_gap_factor * cfg.tol
+                              or (t > 0 and 0 < epochs[t - 1]
+                                  <= 4 * cfg.f_ce)))
+            if batch_ok and warm_here and float(first_round.gap) > cfg.tol:
+                # Probe ahead: every GAP sphere from a feasible point is
+                # safe, so the current beta can certify several lambdas.
+                # The batch shares ONE gathered buffer over the UNION of
+                # the certified active sets while each lambda keeps its
+                # own masks, so the sets need not coincide exactly — a
+                # probe joins as long as the union's power-of-two gather
+                # bucket stays within 2x the first lambda's (single-beta
+                # certificates are sharp only one grid step ahead, so
+                # probe sets balloon with lambda distance; a <= 2x buffer
+                # is still a clear win against per-lambda launches on the
+                # tiny warm-tail buckets this gate admits).  A probe that
+                # would grow the bucket further re-certifies later from a
+                # warmer beta (its round is discarded — honest accounting
+                # keeps it in self.rounds; the warm gate above bounds that
+                # waste to regions where probes usually succeed).
+                certs = [first_round]
+                union_g = np.asarray(first_round.group_active).copy()
+                bucket0 = _bucket(max(int(union_g.sum()), 1))
+                while (len(certs) < batch_lambdas
+                       and t + len(certs) < T_):
+                    k = t + len(certs)
+                    ck = self.screen(float(lambdas[k]), beta, rule=rule)
+                    cg = np.asarray(ck.group_active)
+                    if (_bucket(max(int((union_g | cg).sum()), 1))
+                            <= 2 * bucket0):
+                        union_g |= cg
+                        certs.append(ck)
+                        seq_scr[k] = n_groups - int(cg.sum())
+                    else:
+                        break
+                if len(certs) > 1:
+                    run = self._solve_batch_bcd(
+                        lambdas[t:t + len(certs)], beta, certs, caches
+                    )
+                    for j, res in enumerate(run):
+                        record(t + j, res, certs[j],
+                               n_groups - int(seq_scr[t + j]))
+                    beta = run[-1].beta
+                    t += len(certs)
+                    continue
+
+            if cfg.check_every == "auto":
+                # Warm lambdas finish in a handful of passes, so per-epoch
+                # early-exit checks beat the f_ce-block floor; cold lambdas
+                # keep the cheap block cadence.  Warmness is read off the
+                # sequential certificate (gap already near tol), or
+                # predicted from the path itself: the previous lambda's
+                # epoch count, when positive and within four f_ce-blocks,
+                # marks a warm region (warmness varies smoothly along a
+                # geometric grid).  A zero count (lambda_max, or a user grid
+                # jumping far from the last point) carries no signal and
+                # must not force per-epoch checks on a cold lambda.
+                warm = (first_round is not None
+                        and float(first_round.gap)
+                        <= cfg.warm_gap_factor * cfg.tol)
+                warm |= t > 0 and 0 < epochs[t - 1] <= 4 * cfg.f_ce
+                check_t = 1 if warm else None
+            else:
+                check_t = cfg.check_every
+
+            lam_caches = caches if caches is not None else SolveCaches()
+            res = self.solve(
+                float(lam_),
+                beta0=beta,
+                first_round=first_round,
+                lam_max=lam_max,
+                check_every=check_t,
+                caches=lam_caches,
+            )
+            beta = res.beta
+            if caches is None:
+                n_gathers_total += lam_caches.n_gathers
+            record(t, res, first_round, n_seq_active)
+            t += 1
+
         return PathResult(
             lambdas=lambdas,
             betas=betas,
@@ -795,6 +1169,8 @@ class SGLSession:
             n_compact_rounds=self.compact_rounds - compact0,
             n_full_rounds=self.full_rounds - full0,
             round_flops=self.round_flops - flops0,
+            n_fused_epoch_launches=self.fused_epoch_launches - fused0,
+            batched_lambdas=self.batched_lambdas - batched0,
         )
 
 
@@ -1141,6 +1517,7 @@ class _DistStrategy:
         n_groups = int(np.asarray(jnp.any(problem.feat_mask, axis=-1)).sum())
         rounds0 = s.rounds
         flops0 = s.round_flops
+        batched0 = s.batched_lambdas
 
         betas = np.zeros((T_, G, ng), np.dtype(dtype))
         gaps = np.zeros(T_, float)
@@ -1245,4 +1622,7 @@ class _DistStrategy:
                                     # the full (sharded) problem
             n_full_rounds=s.rounds - rounds0,
             round_flops=s.round_flops - flops0,
+            n_fused_epoch_launches=0,   # BCD mega-kernel is single-device;
+                                        # the mesh inner solver is FISTA
+            batched_lambdas=s.batched_lambdas - batched0,
         )

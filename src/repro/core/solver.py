@@ -35,6 +35,22 @@ the reference).  The driver additionally forces a full round every
 ``full_round_every`` rounds and always re-confirms convergence with a full
 round, so every *reported* gap/certificate is full-problem exact.
 
+Fused BCD epochs: the inner epochs themselves dispatch on
+``SolverConfig.solver_backend`` (resolved by :func:`resolve_solver_backend`,
+the same auto/xla/pallas policy as the screening backend) — ``"pallas"``
+replaces the per-group ``lax.scan`` of :func:`bcd_epochs` with the
+:mod:`repro.kernels.bcd_epoch` mega-kernel, which runs whole epoch blocks in
+ONE launch with the residual carried in VMEM and a lambda-batch grid axis
+(consecutive path points with coinciding certified active sets solve
+together; see :meth:`repro.core.session.SGLSession.solve_path`).  The
+``lax.scan`` path stays as the XLA fallback and the bit-parity reference:
+interpret-mode f64 results of the fused kernel are bit-identical to it.
+(The *epoch math* parity is structural; the Pallas reduced-gap correlation
+used between blocks accumulates per n-tile, so the early-exit heuristic
+can differ from the einsum in the last ulp — end-to-end path equality
+therefore additionally requires that no reduced gap lands within ~1e-13
+relative of ``tol``, which the CI smoke config pins deterministically.)
+
 This module holds the jitted machinery (``bcd_epochs``, ``_inner_rounds``,
 ``_screen_round``, ``_gather_static``) plus the round/caches primitives; the
 outer drivers live on :class:`repro.core.session.SGLSession` and the
@@ -82,7 +98,9 @@ __all__ = [
     "solve",
     "bcd_epochs",
     "screen_round",
+    "resolve_backend",
     "resolve_screen_backend",
+    "resolve_solver_backend",
 ]
 
 
@@ -258,17 +276,32 @@ def bcd_epochs(
 # Certified gap + screening round (resumable-round API)
 # ----------------------------------------------------------------------------
 
-def resolve_screen_backend(backend: str) -> str:
-    """Resolve the screening correlation/dual-norm backend.
+def resolve_backend(backend: str, *, what: str = "backend") -> str:
+    """Shared backend resolution for every Pallas/XLA dispatch knob.
 
-    ``"auto"`` picks the Pallas kernels on TPU and plain XLA einsums
-    elsewhere (where Pallas would run interpreted).
+    ``"auto"`` picks the Pallas kernels on TPU and plain XLA elsewhere
+    (where Pallas would run interpreted); ``"xla"``/``"pallas"`` force.
+    ``what`` only labels the error message (``screen backend`` /
+    ``solver backend``).
     """
     if backend == "auto":
         return "pallas" if kernel_util.on_tpu() else "xla"
     if backend not in ("xla", "pallas"):
-        raise ValueError(f"unknown screen backend: {backend!r}")
+        raise ValueError(f"unknown {what}: {backend!r}")
     return backend
+
+
+def resolve_screen_backend(backend: str) -> str:
+    """Resolve the screening correlation/dual-norm backend."""
+    return resolve_backend(backend, what="screen backend")
+
+
+def resolve_solver_backend(backend: str) -> str:
+    """Resolve the BCD-epoch solver backend (``SolverConfig.solver_backend``):
+    ``"pallas"`` runs the inner epochs through the fused
+    :mod:`repro.kernels.bcd_epoch` mega-kernel, ``"xla"`` keeps the
+    ``lax.scan`` reference (the bit-parity fallback)."""
+    return resolve_backend(backend, what="solver backend")
 
 
 @functools.partial(jax.jit, static_argnames=("rule", "backend"))
@@ -484,9 +517,11 @@ def _bucket(n: int, minimum: int = 8) -> int:
     return b
 
 
-@functools.partial(jax.jit, static_argnames=("block_epochs", "max_blocks"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_epochs", "max_blocks", "backend"))
 def _inner_rounds(Xt, Lg, w, y, beta, feat_active, take, gmask, tau, lam_,
-                  tol, block_epochs, max_blocks):
+                  tol, block_epochs, max_blocks, backend="xla",
+                  xt_rows=None):
     """Up to ``max_blocks`` blocks of ``block_epochs`` BCD epochs in ONE
     jitted call.
 
@@ -500,11 +535,22 @@ def _inner_rounds(Xt, Lg, w, y, beta, feat_active, take, gmask, tau, lam_,
     EXPERIMENTS.md §Perf).  The path engine runs with ``block_epochs=1`` so
     a warm-started lambda stops after exactly the passes it needs.
 
+    ``backend="pallas"`` runs each epoch block through the fused
+    :mod:`repro.kernels.bcd_epoch` mega-kernel (one launch per block,
+    residual carried in VMEM) instead of the ``lax.scan`` over groups, and
+    routes the between-block reduced-gap correlation through the Pallas
+    corr kernel over ``xt_rows`` (the active-row slice of the persistent
+    transposed design from
+    :func:`repro.kernels.ops.gather_transposed_rows`) — previously the gap
+    check always paid the XLA einsum even on TPU, and with
+    ``block_epochs=1`` it runs after every single pass.
+
     ``take`` may contain padded slots aliasing group 0; the scatter uses a
     masked *delta* with .add so duplicate indices contribute zero and the
     real group-0 row is preserved.
     """
     dtype = beta.dtype
+    Gb, ng = Xt.shape[0], Xt.shape[2]
     fmask = (jnp.take(feat_active, take, axis=0).astype(dtype)
              * gmask[:, None])
     bsub0 = jnp.take(beta, take, axis=0) * fmask
@@ -512,7 +558,11 @@ def _inner_rounds(Xt, Lg, w, y, beta, feat_active, take, gmask, tau, lam_,
     y2half = 0.5 * jnp.sum(y * y)
 
     def reduced_gap(bsub, resid):
-        corr = jnp.einsum("gnk,n->gk", Xt, resid) * fmask
+        if backend == "pallas" and xt_rows is not None:
+            corr = kops.screening_corr(xt_rows, resid)[: Gb * ng]
+            corr = corr.reshape(Gb, ng) * fmask
+        else:
+            corr = jnp.einsum("gnk,n->gk", Xt, resid) * fmask
         dn = sgl.sgl_dual_norm(corr, tau, w)
         theta = resid / jnp.maximum(lam_, dn)
         primal = (0.5 * jnp.sum(resid * resid)
@@ -527,9 +577,17 @@ def _inner_rounds(Xt, Lg, w, y, beta, feat_active, take, gmask, tau, lam_,
 
     def body(c):
         bsub, resid, k, gap = c
-        bsub, resid = bcd_epochs(
-            Xt, Lg * gmask, w, fmask, bsub, resid, tau, lam_, block_epochs
-        )
+        if backend == "pallas":
+            bsub_b, resid_b = kops.bcd_epochs_fused(
+                Xt, Lg * gmask, w, fmask[None], bsub[None], resid[None],
+                tau, jnp.reshape(lam_, (1,)), block_epochs
+            )
+            bsub, resid = bsub_b[0], resid_b[0]
+        else:
+            bsub, resid = bcd_epochs(
+                Xt, Lg * gmask, w, fmask, bsub, resid, tau, lam_,
+                block_epochs
+            )
         return bsub, resid, k + 1, reduced_gap(bsub, resid)
 
     bsub, resid, k, gap = jax.lax.while_loop(
@@ -583,6 +641,7 @@ def solve(
     first_round: Optional[tuple] = None,
     caches: Optional[SolveCaches] = None,
     screen_backend: str = "auto",
+    solver_backend: str = "auto",
 ) -> SolveResult:
     """Solve one SGL instance at regularisation ``lam_``.
 
@@ -626,7 +685,7 @@ def solve(
     cfg = SolverConfig(
         tol=tol, max_epochs=max_epochs, f_ce=f_ce, rule=rule,
         compact=compact, inner_rounds=inner_rounds, check_every=check_every,
-        screen_backend=screen_backend,
+        screen_backend=screen_backend, solver_backend=solver_backend,
     )
     session = SGLSession(problem, cfg, caches=caches)
     return session.solve(

@@ -1,6 +1,6 @@
 """Pallas TPU kernels for the paper's compute hot spots.
 
-Three kernels (each `<name>.py` + dispatch in `ops.py` + oracle in `ref.py`):
+Four kernels (each `<name>.py` + dispatch in `ops.py` + oracle in `ref.py`):
 
 * ``sgl_prox``         -- fused two-level proximal operator (soft-threshold +
                          group soft-threshold) over (G, ng) coefficient tiles.
@@ -16,6 +16,15 @@ Three kernels (each `<name>.py` + dispatch in `ops.py` + oracle in `ref.py`):
                          from the session's persistent transposed design
                          (``ops.prepare_transposed``) avoids the per-round
                          (p, n) transposed copy of X.
+* ``bcd_epoch``        -- fused BCD *epoch* mega-kernel: whole blocks of
+                         cyclic BCD passes (gradient step + two-level prox
+                         + residual update per group) in ONE launch, with
+                         the residual and coefficient block VMEM-resident,
+                         the compacted design streamed tile-by-tile, and a
+                         lambda-batch grid axis for coinciding-active-set
+                         path points.  Replaces the per-group ``lax.scan``
+                         dispatch on the solver's hottest loop
+                         (``SolverConfig.solver_backend="pallas"``).
 
 On CPU (this container) they execute with ``interpret=True`` and are validated
 against the ``ref.py`` pure-jnp oracles; on TPU the same code lowers to Mosaic.

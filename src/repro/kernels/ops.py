@@ -11,6 +11,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .bcd_epoch import bcd_epoch_pallas
 from .dual_norm import dual_norm_pallas
 from .screening_scores import screening_corr_pallas, screening_scores_pallas
 from .sgl_prox import sgl_prox_pallas
@@ -197,6 +198,41 @@ def sgl_dual_norm_fused(corr_grouped, tau, w, n_iter: int = 64):
     """Omega^D via the Pallas bisection kernel (drop-in for sgl.sgl_dual_norm)."""
     return jnp.max(sgl_dual_norm_terms_fused(corr_grouped, tau, w,
                                              n_iter=n_iter))
+
+
+@functools.partial(jax.jit, static_argnames=("n_epochs", "block_g"))
+def bcd_epochs_fused(Xt, Lg, w, fmask, beta, resid, tau, lam_b,
+                     n_epochs: int, block_g: int = 8):
+    """Whole blocks of cyclic BCD epochs in ONE fused kernel launch.
+
+    Batched-lambda drop-in for a per-lambda loop over
+    :func:`repro.core.solver.bcd_epochs`: ``Xt (Gb, n, ng)`` / ``Lg`` / ``w``
+    are the shared compacted buffers, while ``fmask (B, Gb, ng)``,
+    ``beta (B, Gb, ng)``, ``resid (B, n)`` and ``lam_b (B,)`` carry one row
+    per lambda (B = 1 for a plain single-lambda solve).  The residual and
+    coefficient block stay VMEM-resident across all ``n_epochs`` passes and
+    the design streams tile-by-tile — see :mod:`repro.kernels.bcd_epoch`
+    for the kernel and its bit-parity contract with the ``lax.scan``
+    reference.
+
+    The group axis is padded to a ``block_g`` multiple with inert rows
+    (``Lg = 0``, zero masks), which leave both outputs bit-unchanged; in
+    interpret mode nothing else is padded so parity tests see the exact
+    reference shapes.
+    """
+    B, Gb, ng = beta.shape
+    if n_epochs <= 0:
+        return beta, resid
+    bg = max(1, min(block_g, Gb))
+    Xp = _pad_to(Xt, 0, bg)
+    Lp = _pad_to(Lg, 0, bg)                      # pad 0.0 -> inert groups
+    wp = _pad_to(w, 0, bg, value=1.0)
+    fp = _pad_to(fmask, 1, bg)
+    bp = _pad_to(beta, 1, bg)
+    beta_out, resid_out = bcd_epoch_pallas(
+        Xp, Lp, wp, fp, lam_b, tau, bp, resid, n_epochs, block_g=bg
+    )
+    return beta_out[:, :Gb], resid_out
 
 
 def sgl_prox_batched(beta, lam_b, L, w, tau: float, block_g: int = 256):

@@ -26,3 +26,48 @@ def screening_scores_ref(Xt, theta, tau):
     corr = Xt @ theta
     st = jnp.maximum(jnp.abs(corr) - tau, 0.0)
     return corr, st * st
+
+
+def bcd_epochs_ref(Xt, Lg, w, fmask, beta, resid, tau, lam_b, n_epochs):
+    """Batched cyclic-BCD oracle: a per-lambda ``lax.scan`` over groups.
+
+    The per-group update is line-for-line
+    :func:`repro.core.solver.bcd_epochs` (the solver's XLA path), applied
+    independently per lambda b — the fused kernel must match this
+    BIT-exactly in f64 interpret mode.  ``Xt (Gb, n, ng)``, ``Lg``/``w``
+    ``(Gb,)``, ``fmask``/``beta`` ``(B, Gb, ng)``, ``resid (B, n)``,
+    ``lam_b (B,)``.
+    """
+    live = (Lg > 0).astype(beta.dtype)
+    safe_L = jnp.where(Lg > 0, Lg, 1.0)
+
+    def one_lambda(bb, rr, fm, lam_):
+        step = lam_ / safe_L
+        thr1 = tau * step
+        thr2 = (1.0 - tau) * w * step
+
+        def group_update(resid, inputs):
+            Xg, bg, L, t1, t2, m, lv = inputs
+            grad_step = (Xg.T @ resid) / L
+            z = (bg + grad_step) * m
+            z = jnp.sign(z) * jnp.maximum(jnp.abs(z) - t1, 0.0)
+            nrm = jnp.linalg.norm(z)
+            z = jnp.maximum(1.0 - t2 / jnp.maximum(nrm, 1e-30), 0.0) * z
+            new_bg = jnp.where(lv > 0, z, bg)
+            resid = resid + Xg @ (bg - new_bg)
+            return resid, new_bg
+
+        def epoch(carry, _):
+            bb, rr = carry
+            rr, bb = jax.lax.scan(
+                group_update, rr, (Xt, bb, safe_L, thr1, thr2, fm, live)
+            )
+            return (bb, rr), None
+
+        (bb, rr), _ = jax.lax.scan(epoch, (bb, rr), None, length=n_epochs)
+        return bb, rr
+
+    outs = [one_lambda(beta[b], resid[b], fmask[b], lam_b[b])
+            for b in range(beta.shape[0])]
+    return (jnp.stack([o[0] for o in outs]),
+            jnp.stack([o[1] for o in outs]))
