@@ -1,0 +1,332 @@
+"""Fig. 2/3 screening-rule sweep: every registered rule strategy, side by
+side, on the paper's configs.
+
+The paper's headline result is a *comparison* — GAP safe (sequential +
+dynamic) against the static safe sphere [El Ghaoui et al. 12], the plain
+dynamic safe sphere [Bonnefoy et al. 14], DST3, no screening, and an
+unsafe sequential heuristic — and this harness runs exactly that matrix
+through the pluggable :mod:`repro.rules` strategy API: the synthetic paper
+config (n=100, p=2000, 200 groups) and a climate-like config, across all
+registered rules x T x tol, through one ``SGLSession.solve_path`` per
+cell.
+
+Outputs (the ``BENCH_pr5.json`` record):
+
+* flat metric rows (``benchmarks.common.emit`` schema) for diff tooling;
+* a ``curves`` section per (config, rule, T, tol): active-fraction-vs-
+  lambda arrays (Fig. 2a/2b), an active-fraction-vs-epoch curve at a fixed
+  lambda (Fig. 2c, from the per-round ``active_history``), epochs/gaps/
+  counters/round-split/wall (Fig. 3);
+* a markdown report rendered by
+  :func:`repro.launch.report.render_sweep_markdown` — re-renderable from
+  the JSON alone via ``python -m repro.launch.reanalyze --sweep``.
+
+Every run also asserts the API-migration acceptance criterion: the legacy
+``rule="gap"`` *string* config is BIT-IDENTICAL (betas, epochs, seq/dyn
+counters, compact/full round split) to the ``GapSafeRule()`` object
+config.
+
+``--smoke`` runs a reduced matrix and additionally asserts what the CI
+watches: every ``is_safe`` rule's path masks are SAFE against a tight-tol
+unscreened reference (nothing screened is nonzero at the optimum), the
+GAP rule dominates the static and dynamic spheres on screened fraction,
+and unsafe rules are flagged (``certificates_safe=False``) with their
+heuristic discards counted — then exits.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import SGLSession, SolverConfig, make_problem
+from repro.data.climate import make_climate_like
+from repro.data.synthetic import make_synthetic
+from repro.launch.report import render_sweep_markdown
+from repro.rules import GapSafeRule, available_rules, get_rule
+
+from .common import emit, header, rows
+
+
+def synthetic_paper_problem(smoke: bool = False):
+    """The synthetic paper config (AR(1) design, equal groups, tau=0.2):
+    n=100, p=2000, 200 groups — the problem of the PR 1-4 trajectory —
+    or a CI-seconds reduction for ``--smoke``.  The --paper/default split
+    lives in main()'s grid knobs (T, tols, max_epochs), not here."""
+    if smoke:
+        kw = dict(n=30, p=120, n_groups=15, seed=9)
+    else:
+        kw = dict(n=100, p=2000, n_groups=200, seed=42)
+    X, y, _, sizes = make_synthetic(gamma1=3, gamma2=3, **kw)
+    return make_problem(X, y, sizes, tau=0.2), "synthetic"
+
+
+def climate_problem(smoke: bool = False):
+    """Reduced climate-like config (NCEP/NCAR-style 7-variable groups)."""
+    if smoke:
+        X, y, _, sizes = make_climate_like(n=48, n_lon=4, n_lat=3, seed=1)
+    else:
+        X, y, _, sizes = make_climate_like(n=128, n_lon=8, n_lat=4, seed=1)
+    return make_problem(X, y, sizes, tau=0.4), "climate"
+
+
+def _unscreened_reference(problem, lambdas, tol=1e-10, max_epochs=60_000):
+    """Tight-tol, rule='none' warm-started reference path — the safety
+    oracle every safe rule's masks are checked against."""
+    import jax.numpy as jnp
+
+    ref = SGLSession(problem, SolverConfig(tol=tol, rule="none",
+                                           max_epochs=max_epochs))
+    betas = []
+    beta = jnp.zeros((problem.G, problem.ng), problem.X.dtype)
+    for lam_ in lambdas:
+        beta = ref.solve(float(lam_), beta0=beta).beta
+        betas.append(np.asarray(beta))
+    return np.stack(betas)
+
+
+def _fig2_curve(problem, result, T):
+    """Fig. 2c raw curve at the chosen lambda index: the per-round
+    ``active_history`` of that lambda's solve as [epoch, gfrac, ffrac],
+    normalised by the problem's REAL group/feature counts (1.0 = nothing
+    screened yet)."""
+    t_star = max(0, min(T - 1, int(round(0.6 * (T - 1)))))
+    res = result.results[t_star] if result.results else None
+    curve = []
+    if res is not None and res.active_history:
+        feat_mask = np.asarray(problem.feat_mask)
+        n_groups = max(1, int(feat_mask.any(axis=-1).sum()))
+        n_feats = max(1, int(feat_mask.sum()))
+        for epoch, g_act, f_act in res.active_history:
+            curve.append([int(epoch),
+                          float(g_act) / n_groups,
+                          float(f_act) / n_feats])
+    return {"lambda_index": t_star, "epoch_curve": curve}
+
+
+def run_cell(problem, cfg_name, rule_name, T, delta, tol, max_epochs,
+             beta_ref=None):
+    """One (config, rule, T, tol) sweep cell -> (curve dict, PathResult)."""
+    rule = get_rule(rule_name)
+    session = SGLSession(problem, SolverConfig(
+        tol=tol, max_epochs=max_epochs, rule=rule,
+    ))
+    t0 = time.perf_counter()
+    res = session.solve_path(T=T, delta=delta, keep_results=True)
+    wall = time.perf_counter() - t0
+
+    case = f"{cfg_name}_{rule_name}_T{T}_tol{tol:g}"
+    conv = int((res.gaps <= tol).sum())
+    emit("sweep_rules", case, "wall_seconds", wall)
+    emit("sweep_rules", case, "total_epochs", int(res.epochs.sum()))
+    emit("sweep_rules", case, "converged_lambdas", conv)
+    emit("sweep_rules", case, "mean_active_feat_frac",
+         float(res.feat_active_frac.mean()))
+    emit("sweep_rules", case, "mean_active_group_frac",
+         float(res.group_active_frac.mean()))
+    emit("sweep_rules", case, "seq_screened", int(res.seq_screened.sum()))
+    emit("sweep_rules", case, "dyn_screened", int(res.dyn_screened.sum()))
+    emit("sweep_rules", case, "compact_rounds", res.n_compact_rounds)
+    emit("sweep_rules", case, "full_rounds", res.n_full_rounds)
+    emit("sweep_rules", case, "round_flops", res.round_flops)
+    emit("sweep_rules", case, "certificates_safe",
+         int(res.certificates_safe))
+
+    curve = {
+        "config": cfg_name,
+        "rule": rule_name,
+        "safe": bool(rule.is_safe),
+        "T": T,
+        "tol": tol,
+        "delta": delta,
+        "lambdas": [float(v) for v in res.lambdas],
+        "active_group_frac": [float(v) for v in res.group_active_frac],
+        "active_feat_frac": [float(v) for v in res.feat_active_frac],
+        "epochs": [int(v) for v in res.epochs],
+        "gaps": [float(v) for v in res.gaps],
+        "seq_screened": [int(v) for v in res.seq_screened],
+        "dyn_screened": [int(v) for v in res.dyn_screened],
+        "converged_lambdas": conv,
+        "wall_seconds": wall,
+        "n_compact_rounds": res.n_compact_rounds,
+        "n_full_rounds": res.n_full_rounds,
+        "round_flops": res.round_flops,
+        "fig2": _fig2_curve(problem, res, T),
+    }
+    if beta_ref is not None:
+        # Safety audit vs the unscreened tight-tol reference: a variable
+        # this rule screened that is nonzero at the optimum is a VIOLATION
+        # (must be 0 for every is_safe rule; >0 flags the unsafe rule's
+        # erroneous discards, the paper's Fig. 3 failure mode).
+        feat_mask = np.asarray(problem.feat_mask)
+        viol = 0
+        for t in range(T):
+            screened = ~res.feat_active[t] & feat_mask
+            viol += int((np.abs(beta_ref[t])[screened] > 1e-7).sum())
+        curve["safety_violations"] = viol
+        emit("sweep_rules", case, "safety_violations", viol)
+    return curve, res
+
+
+def gap_string_object_parity(problem, T, delta, tol, max_epochs) -> None:
+    """Acceptance criterion: legacy ``rule="gap"`` strings are BIT-identical
+    to the ``GapSafeRule()`` object config — betas, epochs, seq/dyn
+    counters, and the compact/full round split."""
+    runs = {}
+    for key, rule in (("string", "gap"), ("object", GapSafeRule())):
+        session = SGLSession(problem, SolverConfig(
+            tol=tol, max_epochs=max_epochs, rule=rule,
+        ))
+        runs[key] = session.solve_path(T=T, delta=delta)
+    a, b = runs["string"], runs["object"]
+    np.testing.assert_array_equal(a.betas, b.betas)
+    assert (a.epochs == b.epochs).all(), "epoch counts diverged"
+    assert np.array_equal(a.seq_screened, b.seq_screened)
+    assert np.array_equal(a.dyn_screened, b.dyn_screened)
+    assert np.array_equal(a.group_active, b.group_active)
+    assert (a.n_compact_rounds, a.n_full_rounds) == \
+        (b.n_compact_rounds, b.n_full_rounds), "round split diverged"
+    assert a.rule_name == b.rule_name == "gap"
+    emit("sweep_rules", f"parity_T{T}_tol{tol:g}", "gap_string_object_ok", 1)
+
+
+def build_payload(curves: dict, config_note: str) -> dict:
+    return {
+        "meta": {
+            "config": config_note,
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "platform": platform.platform(),
+            "x64": bool(jax.config.read("jax_enable_x64")),
+        },
+        "rows": [
+            {"benchmark": b, "case": c, "metric": m, "value": v}
+            for b, c, m, v in rows()
+        ],
+        "curves": curves,
+    }
+
+
+def write_payload(path: str, payload: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(payload['curves'])} curves + "
+          f"{len(payload['rows'])} rows -> {path}")
+
+
+def sweep(problems, T_list, tols, max_epochs, check_safety=False,
+          smoke=False) -> dict:
+    curves = {}
+    for problem, cfg_name in problems:
+        for T in T_list:
+            delta = 2.0 if smoke else 3.0
+            gap_string_object_parity(problem, T, delta, max(tols),
+                                     max_epochs)
+            beta_ref = None
+            if check_safety:
+                # tol-independent (tight-tol unscreened oracle): computed
+                # once per (config, T), shared by every tol cell below.
+                from repro.core.session import lambda_grid
+
+                session0 = SGLSession(problem)
+                lambdas = lambda_grid(session0.lam_max, T=T, delta=delta)
+                beta_ref = _unscreened_reference(problem, lambdas)
+            for tol in tols:
+                for rule_name in available_rules():
+                    key = f"{cfg_name}/{rule_name}/T{T}/tol{tol:g}"
+                    curve, _ = run_cell(
+                        problem, cfg_name, rule_name, T, delta, tol,
+                        max_epochs, beta_ref=beta_ref,
+                    )
+                    curves[key] = curve
+    return curves
+
+
+def assert_smoke_invariants(curves: dict) -> None:
+    """The CI contract: safe rules are SAFE, GAP dominates the static and
+    dynamic spheres on screened fraction, unsafe rules are flagged."""
+    by_rule: dict = {}
+    for c in curves.values():
+        by_rule.setdefault(c["rule"], []).append(c)
+    for rule_name, cells in by_rule.items():
+        for c in cells:
+            if c["safe"]:
+                assert c.get("safety_violations", 0) == 0, (
+                    f"SAFE rule {rule_name!r} screened a nonzero variable: "
+                    f"{c['safety_violations']} violations in {c['config']}"
+                )
+    for cells in zip(by_rule["gap"], by_rule["static"], by_rule["dynamic"]):
+        gap_c, static_c, dyn_c = cells
+        gap_act = sum(gap_c["active_feat_frac"])
+        # Strict-or-equal: the GAP sphere shrinks with the gap, the
+        # baselines don't — at convergence GAP's active set can only be
+        # smaller (paper Fig. 2), modulo float ties.
+        assert gap_act <= sum(static_c["active_feat_frac"]) + 1e-9, \
+            "GAP did not dominate the static sphere on screened fraction"
+        assert gap_act <= sum(dyn_c["active_feat_frac"]) + 1e-9, \
+            "GAP did not dominate the dynamic sphere on screened fraction"
+    assert not by_rule["strong"][0]["safe"]
+    print("SWEEP SMOKE PASS: safety matrix + GAP dominance + unsafe flag")
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized matrix asserting the safety/dominance/"
+                         "flag invariants")
+    ap.add_argument("--paper", action="store_true",
+                    help="full synthetic paper grid (T=40, tol down to "
+                         "1e-8) — CPU-hours")
+    ap.add_argument("--check-safety", action="store_true",
+                    help="audit every rule's masks against a tight-tol "
+                         "unscreened reference (always on in --smoke)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the JSON payload (BENCH_pr5.json schema)")
+    ap.add_argument("--md", metavar="PATH", default=None,
+                    help="write the Fig. 2/3 markdown report")
+    args = ap.parse_args()
+    header()
+
+    if args.smoke:
+        problems = [synthetic_paper_problem(smoke=True),
+                    climate_problem(smoke=True)]
+        curves = sweep(problems, T_list=(8,), tols=(1e-7,),
+                       max_epochs=20_000, check_safety=True, smoke=True)
+        note = "smoke matrix (reduced synthetic + climate-like)"
+    elif args.paper:
+        problems = [synthetic_paper_problem(), climate_problem()]
+        curves = sweep(problems, T_list=(40,), tols=(1e-4, 1e-6, 1e-8),
+                       max_epochs=10_000,
+                       check_safety=args.check_safety)
+        note = ("synthetic paper config n=100 p=2000 G=200 (T=40, "
+                "max_epochs=10000) + climate-like")
+    else:
+        problems = [synthetic_paper_problem(), climate_problem()]
+        curves = sweep(problems, T_list=(20,), tols=(1e-4, 1e-6),
+                       max_epochs=3000, check_safety=args.check_safety)
+        note = ("synthetic paper config n=100 p=2000 G=200 (T=20, "
+                "max_epochs=3000) + climate-like")
+
+    # Artifacts are written BEFORE the smoke assertions run: when a CI
+    # invariant fails, the uploaded curves are exactly what explains it.
+    payload = build_payload(curves, note)
+    if args.json:
+        write_payload(args.json, payload)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(render_sweep_markdown(payload))
+            f.write("\n")
+        print(f"wrote {args.md}")
+    if args.smoke:
+        assert_smoke_invariants(curves)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,18 @@ kwargs became :class:`SolverConfig` fields with the same names (``tol``,
 ``check_every``, ``screen_backend``, ``warm_gap_factor``); the lambda and
 warm-start state stay on ``session.solve(lam, beta0=...)``.
 
+Migration note (rule objects): ``SolverConfig.rule`` now takes a
+:mod:`repro.rules` **strategy object** — ``rule=GapSafeRule()`` below —
+with string names (``"gap"``, ``"static"``, ``"dynamic"``, ``"dst3"``,
+``"none"``, ``"strong"``) kept as registry aliases resolving to the same
+singletons, bit-identically for ``"gap"``.  Unknown names now fail at
+session construction with the registered list.  New rule families
+subclass :class:`repro.rules.ScreeningRule` (one sphere construction) and
+``register_rule`` themselves — the solver, the path engine, and the
+Fig. 2/3 sweep harness (``benchmarks/sweep_rules.py``) pick them up
+unchanged.  Unsafe heuristics (``StrongSequentialRule``) are flagged:
+their rounds carry ``safe=False`` and paths ``certificates_safe=False``.
+
 ``SolverConfig.solver_backend`` (new) picks the inner-epoch engine:
 ``"auto"`` (default) fuses whole BCD epoch blocks into ONE Pallas kernel
 launch on TPU (``kernels/bcd_epoch.py`` — VMEM-resident residual, and a
@@ -39,6 +51,7 @@ import numpy as np
 
 from repro.core import SGLSession, SolverConfig, make_problem
 from repro.data.synthetic import make_synthetic
+from repro.rules import GapSafeRule
 
 
 def main():
@@ -46,7 +59,10 @@ def main():
         n=100, p=1000, n_groups=100, gamma1=5, gamma2=4, seed=0
     )
     problem = make_problem(X, y, sizes, tau=0.2)
-    session = SGLSession(problem, SolverConfig(tol=1e-8, rule="gap"))
+    # rule= takes a repro.rules strategy object; the string "gap" remains
+    # a registry alias resolving to this same singleton (bit-identical).
+    session = SGLSession(problem, SolverConfig(tol=1e-8,
+                                               rule=GapSafeRule()))
 
     lam_max = session.lam_max
     lam = lam_max / 20.0

@@ -48,6 +48,19 @@ from .solver import (
 from .session import SGLSession, SolverConfig
 from .elastic import make_elastic_problem, elastic_objective
 from .path import PathResult, lambda_grid, solve_path
+from ..rules import (
+    GapSafeRule,
+    ScreeningRule,
+    StaticSafeRule,
+    DynamicSafeRule,
+    Dst3Rule,
+    NoScreening,
+    StrongSequentialRule,
+    available_rules,
+    get_rule,
+    register_rule,
+    resolve_rule,
+)
 
 __all__ = [
     "SGLProblem", "make_problem", "problem_from_grouped",
@@ -63,4 +76,7 @@ __all__ = [
     "SolveResult", "SolveCaches", "RoundResult", "PathResult",
     "bcd_epochs", "screen_round", "resolve_screen_backend",
     "make_elastic_problem", "elastic_objective", "flatten", "unflatten",
+    "ScreeningRule", "GapSafeRule", "StaticSafeRule", "DynamicSafeRule",
+    "Dst3Rule", "NoScreening", "StrongSequentialRule",
+    "available_rules", "get_rule", "register_rule", "resolve_rule",
 ]

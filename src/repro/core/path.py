@@ -62,7 +62,7 @@ def solve_path(
     tol: float = 1e-8,
     max_epochs: int = 10_000,
     f_ce: int = 10,
-    rule: str = "gap",
+    rule="gap",
     compact: bool = True,
     inner_rounds: int = 5,
     check_every: Union[int, None, str] = "auto",

@@ -19,6 +19,11 @@ All tests operate on the grouped layout of :mod:`repro.core.sgl` and return a
 :class:`ScreenResult` with boolean *active* masks (True = keep).  Safety means
 a screened-out (False) variable is *provably* zero at the optimum.
 
+This module holds the sphere *constructions* and the Theorem-1 *tests*;
+the strategy objects that plug them into the solver's shared round
+skeleton (center/radius per rule + safety metadata) live in
+:mod:`repro.rules`, and the solver consumes rules through that API.
+
 Bounded dual-norm terms (compacted certified rounds)
 ----------------------------------------------------
 Certificates are permanent, so a screened group's exact correlation

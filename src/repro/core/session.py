@@ -27,6 +27,21 @@ through the shard_map kernels, and consecutive path points whose certified
 active sets coincide are solved in ONE batched-lambda FISTA run
 (``fista_batch`` — arithmetic intensity scales with the batch).
 
+Screening-rule strategies
+-------------------------
+``SolverConfig.rule`` is a pluggable :mod:`repro.rules` strategy: a
+:class:`repro.rules.ScreeningRule` object (or a registered name — the
+legacy-string shim, resolved at session construction so unknown names
+fail fast with the registered list).  The certified round is a shared
+sphere-test skeleton (:func:`repro.core.solver._screen_round`) that asks
+the rule only for its sphere; safety metadata gates everything else —
+``supports_sequential`` decides whether the path engine runs pre-solve
+rounds, ``supports_compact`` gates the compacted rounds, ``pre_screens``
+routes the static rule's one up-front screen, and ``is_safe=False``
+(unsafe heuristics like ``StrongSequentialRule``) flags every round
+(``RoundResult.safe``) and path (``PathResult.certificates_safe``) so
+heuristic discards are never reported as zero-certificates.
+
 Persistent transposed design
 ----------------------------
 On the Pallas backend the certified round's hot correlation ``X^T resid``
@@ -91,6 +106,7 @@ functions survive as thin deprecated wrappers delegating here.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional, Sequence, Union
 
 import numpy as np
@@ -113,6 +129,7 @@ from .solver import (
     resolve_solver_backend,
 )
 from ..kernels import ops as kops
+from ..rules import ScreeningRule, resolve_rule
 
 __all__ = [
     "SolverConfig",
@@ -136,7 +153,14 @@ class SolverConfig(NamedTuple):
     tol: float = 1e-8              # duality-gap stopping threshold
     max_epochs: int = 10_000       # BCD epochs (FISTA steps on a mesh)
     f_ce: int = 10                 # epochs between certified rounds
-    rule: str = "gap"              # gap | static | dynamic | dst3 | none
+    rule: Union[str, ScreeningRule] = "gap"
+                                   # screening strategy: a repro.rules
+                                   #   ScreeningRule object, or a registered
+                                   #   name (gap | static | dynamic | dst3 |
+                                   #   none | strong) resolved through the
+                                   #   registry (legacy-string shim; unknown
+                                   #   names fail fast at session init with
+                                   #   the registered list)
     compact: bool = True           # gather active groups into dense buffers
     inner_rounds: int = 5          # f_ce-blocks per jitted inner call
     check_every: Union[int, None, str] = "auto"  # reduced-gap exit cadence
@@ -225,20 +249,42 @@ class PathResult(NamedTuple):
                                    #   consecutive lambdas whose sequential
                                    #   certificates agreed on the active
                                    #   groups.  0 when no batching engaged.
+    rule_name: str = "gap"         # registered name of the screening rule
+                                   #   that produced this path
+    certificates_safe: bool = True # the group/feat_active masks are safe
+                                   #   zero-certificates (ScreeningRule.
+                                   #   is_safe).  False for unsafe rules
+                                   #   (e.g. "strong"): the masks then only
+                                   #   record what the heuristic discarded
+                                   #   — they certify NOTHING, and Fig. 3
+                                   #   style comparisons must treat them as
+                                   #   potentially erroneous.
 
 
-@jax.jit
-def _batch_reduced_gaps(Xt, fmask_b, bsub, resid, w, y, tau, lam_b):
+@functools.partial(jax.jit, static_argnames=("backend",))
+def _batch_reduced_gaps(Xt, fmask_b, bsub, resid, w, y, tau, lam_b,
+                        backend="xla", xt_rows=None):
     """Per-lambda reduced-problem duality gaps on a shared batch buffer.
 
     The jitted batched twin of ``_inner_rounds``' early-exit heuristic —
-    one einsum + vmapped norms per epoch block instead of per-lambda eager
-    dispatches.  Work scheduling only; never reported (convergence is
-    always confirmed by a full certified round).  The correlation stays an
-    XLA einsum even on the Pallas solver backend: vmapping the corr kernel
-    over the batch axis is a TPU-tuning leftover (see ROADMAP).
+    one correlation + vmapped norms per epoch block instead of per-lambda
+    eager dispatches.  Work scheduling only; never reported (convergence
+    is always confirmed by a full certified round).
+
+    ``backend="pallas"`` routes the correlation through the batch-vmapped
+    corr-only Pallas kernel (:func:`repro.kernels.ops.
+    screening_corr_batched`) over ``xt_rows`` — the active-row slice of
+    the persistent transposed design shared with the compact rounds —
+    instead of the XLA einsum (previously the batched driver always paid
+    the einsum even on TPU; PR 4 leftover).
     """
-    corr = jnp.einsum("gnk,bn->bgk", Xt, resid) * fmask_b
+    if backend == "pallas" and xt_rows is not None:
+        B = resid.shape[0]
+        Gb, ng = Xt.shape[0], Xt.shape[2]
+        corr = kops.screening_corr_batched(xt_rows, resid)[:, : Gb * ng]
+        corr = corr.reshape(B, Gb, ng) * fmask_b
+    else:
+        corr = jnp.einsum("gnk,bn->bgk", Xt, resid) * fmask_b
     dn = jax.vmap(sgl.sgl_dual_norm, in_axes=(0, None, None))(corr, tau, w)
     theta = resid / jnp.maximum(lam_b, dn)[:, None]
     primal = (0.5 * jnp.sum(resid * resid, axis=1)
@@ -311,6 +357,11 @@ class SGLSession:
         self.problem = problem
         self.config = config if config is not None else SolverConfig()
         self.caches = caches if caches is not None else SolveCaches()
+        # Screening strategy: SolverConfig.rule may be a ScreeningRule
+        # object or a legacy string name — resolved through the
+        # repro.rules registry here so an unknown name fails at session
+        # construction (with the registered list), never inside a round.
+        self.rule = resolve_rule(self.config.rule)
         self.backend = resolve_screen_backend(self.config.screen_backend)
         # Inner-epoch backend (single-device BCD strategy): "pallas" runs
         # whole epoch blocks through the fused kernels/bcd_epoch.py launch,
@@ -346,13 +397,13 @@ class SGLSession:
         self.fused_epoch_launches = 0
         self._xt_pre: Optional[jax.Array] = None
         self._lam_max: Optional[float] = None
-        if mesh is not None and self.config.rule != "gap":
+        if mesh is not None and self.rule.name != "gap":
             # The sharded screen kernel computes GAP-sphere certificates
             # only; accepting another rule here would silently hand back
             # gap-rule results under a different name.
             raise ValueError(
                 "the distributed strategy implements rule='gap' only; "
-                f"got rule={self.config.rule!r}"
+                f"got rule={self.rule.name!r}"
             )
         self._dist = _DistStrategy(self, mesh, multi_pod=multi_pod, L=L) \
             if mesh is not None else None
@@ -437,28 +488,32 @@ class SGLSession:
     # -- the three front-end methods ---------------------------------------
 
     def screen(self, lam_: float, beta=None,
-               rule: Optional[str] = None) -> RoundResult:
+               rule: Union[str, ScreeningRule, None] = None) -> RoundResult:
         """One certified gap + Theorem-1 screening round at ``lam_``.
 
         Called at a *new* lambda with the *previous* lambda's ``beta`` this
         is the paper's sequential rule; feed the result to :meth:`solve` as
         ``first_round``.  ``beta`` defaults to zeros (the cold start).
+        ``rule``: per-call override — a :class:`repro.rules.ScreeningRule`
+        or a registered name (unknown names fail fast with the registered
+        list).  Rounds from an unsafe rule come back flagged
+        ``safe=False``: heuristic discards, never zero-certificates.
         """
-        rule = self.config.rule if rule is None else rule
+        rule = self.rule if rule is None else resolve_rule(rule)
         problem = self.problem
         dtype = problem.X.dtype
         if beta is None:
             beta = jnp.zeros((problem.G, problem.ng), dtype)
         if self._dist is not None:
-            if rule != "gap":
+            if rule.name != "gap":
                 raise ValueError(
                     "the distributed strategy implements rule='gap' only; "
-                    f"got rule={rule!r}"
+                    f"got rule={rule.name!r}"
                 )
             return self._dist.screen(lam_, beta)
-        if rule == "static":
+        if rule.pre_screens:
             raise ValueError(
-                "rule='static' has no per-round certificate; use "
+                f"rule={rule.name!r} has no per-round certificate; use "
                 "screening.static_sphere + screening.screen, or solve()"
             )
         return self._certified_round(
@@ -496,15 +551,16 @@ class SGLSession:
                                     first_round=first_round)
         cfg = self.config
         problem = self.problem
-        rule = cfg.rule
+        rule = self.rule
         tol, max_epochs, f_ce = cfg.tol, cfg.max_epochs, cfg.f_ce
-        if first_round is not None and rule == "static":
-            # The static screen re-masks (and zeroes parts of) beta0 before
-            # the loop, so an injected certificate evaluated at the original
-            # beta0 would no longer certify the beta actually being solved.
+        if first_round is not None and rule.pre_screens:
+            # The pre-solve screen re-masks (and zeroes parts of) beta0
+            # before the loop, so an injected certificate evaluated at the
+            # original beta0 would no longer certify the beta actually
+            # being solved.
             raise ValueError(
                 "first_round certifies beta0 as passed; it cannot be "
-                "combined with rule='static'"
+                f"combined with rule={rule.name!r}"
             )
         if first_round is not None and beta0 is None:
             # Without beta0 the solve starts from zeros, which the injected
@@ -516,6 +572,19 @@ class SGLSession:
         if first_round is not None and not isinstance(first_round,
                                                       RoundResult):
             first_round = RoundResult(*first_round)
+        if (first_round is not None and rule.is_safe
+                and not bool(first_round.safe)):
+            # An unsafe rule's round carries heuristic discards; adopting
+            # them here would apply them monotonically and report them
+            # under this session's safe rule as zero-certificates —
+            # exactly what the safe=False flag exists to prevent.  (An
+            # unsafe-rule session injecting its own flagged rounds is
+            # fine: its results are flagged certificates_safe=False.)
+            raise ValueError(
+                "first_round was produced by an unsafe rule (safe=False); "
+                f"refusing to adopt its masks under safe rule "
+                f"{rule.name!r}"
+            )
         caches = self.caches if caches is None else caches
 
         ce = cfg.check_every if check_every is _UNSET else check_every
@@ -548,12 +617,16 @@ class SGLSession:
         group_active = np.array(jnp.any(problem.feat_mask, axis=-1))
         feat_active = np.array(problem.feat_mask)
 
-        # Static rule screens once, up front.
-        if rule == "static":
-            sphere = scr.static_sphere(
+        # Pre-screening rules (static sphere) screen once, up front —
+        # through the same backend-routed Theorem-1 tests as every round,
+        # so the static rule's one correlation also runs on the Pallas
+        # kernel (fed from the persistent transposed design) on TPU.
+        if rule.pre_screens:
+            pre = rule.pre_solve_sphere(
                 problem, lam_j, jnp.asarray(lam_max, dtype)
             )
-            res = scr.screen(problem, sphere)
+            res = scr.screen(problem, scr.Sphere(*pre),
+                             backend=self.backend, xt_pre=self.xt_pre)
             group_active &= np.asarray(res.group_active)
             feat_active &= np.asarray(res.feat_active)
             beta = beta * jnp.asarray(feat_active, dtype)
@@ -590,7 +663,8 @@ class SGLSession:
                 # "compacted" buffer would cost more than the full round it
                 # replaces — those rounds go full directly.
                 n_act = int(group_active.sum())
-                if (rule == "gap" and cfg.compact and cfg.compact_rounds
+                if (rule.supports_compact and cfg.compact
+                        and cfg.compact_rounds
                         and self._rounds_since_full < cfg.full_round_every
                         and 0 < n_act
                         and _bucket(n_act) < n_real_groups):
@@ -632,7 +706,7 @@ class SGLSession:
                 # returned active sets reflect the last screen applied.
                 break
 
-            if rule in ("gap", "dynamic", "dst3"):
+            if rule.is_dynamic:
                 n_g0 = int(group_active.sum())
                 n_f0 = int(feat_active.sum())
                 group_active &= np.asarray(g_act)
@@ -731,7 +805,7 @@ class SGLSession:
         a given lambda screened ride along with a zero mask, exactly like
         bucket padding.  Every
         ``f_ce`` epochs (every epoch when all certificates are warm) each
-        unconverged lambda gets its own FULL certified round — per-lambda
+        unconverged lambda gets its own certified round — per-lambda
         dynamic screening inside the batch, expressed through the
         per-lambda feature masks (the shared buffer never re-gathers
         mid-run).  Converged lambdas are snapshotted; their rows keep
@@ -741,16 +815,24 @@ class SGLSession:
         Round cadence (mirrors the per-lambda driver's round economy):
         each epoch block is followed only by the cheap reduced-problem gap
         heuristic on the batch buffer (O(n p_active) per lambda, exactly
-        ``_inner_rounds``' early-exit test).  A FULL certified round runs
-        for a lambda only when its reduced gap crosses ``tol`` (the
-        convergence confirmation, always full-problem exact) or when
-        ``f_ce * inner_rounds`` epochs have passed since its last round
-        (the dynamic-screening cadence — the same worst-case spacing as
-        one per-lambda ``_inner_rounds`` call).  A confirmation that FAILS
-        (reduced gap under ``tol`` but full gap above — the reduced gap
-        under-estimates once screened mass dominates) backs that lambda
-        off for ``f_ce`` epochs so a saturating straggler cannot degrade
-        to one full round per epoch.
+        ``_inner_rounds``' early-exit test; on the Pallas backend it runs
+        through the batch-vmapped corr kernel over the persistent
+        transposed design's active rows).  A certified round runs for a
+        lambda only when its reduced gap crosses ``tol`` (the convergence
+        confirmation, ALWAYS full-problem) or when ``f_ce * inner_rounds``
+        epochs have passed since its last round (the dynamic-screening
+        cadence — the same worst-case spacing as one per-lambda
+        ``_inner_rounds`` call).  Cadence rounds run COMPACT on the shared
+        union buffer whenever the screened-group bound proves them exact
+        (:meth:`_compact_round` with the batch union as the active set, so
+        the gather key coincides with the batch buffer), with the usual
+        full-round fallback on bound crossings and ``full_round_every``
+        refreshes — previously the batched driver always paid full rounds
+        (PR 4 leftover).  A confirmation that FAILS (reduced gap under
+        ``tol`` but full gap above — the reduced gap under-estimates once
+        screened mass dominates) backs that lambda off for ``f_ce`` epochs
+        so a saturating straggler cannot degrade to one full round per
+        epoch.
 
         Trade-off vs the per-lambda sequential driver: every batched
         lambda warm-starts from the *batch-entry* beta instead of its
@@ -820,6 +902,15 @@ class SGLSession:
         take_np = np.asarray(take)
         Lg_eff = Lg * gmask
         lam_b = jnp.asarray(np.asarray(lams), dtype)
+        n_real_groups = int(real_grp.sum())
+        n_base_act = int(base_g.sum())
+        # Active-row slice of the persistent transposed design: feeds the
+        # batch-vmapped Pallas corr kernel in _batch_reduced_gaps (keyed on
+        # the SAME active-set bytes as the shared gather buffer, so it is
+        # built at most once per batch).
+        xt_rows = None
+        if self.solver_backend == "pallas" and self.xt_pre is not None:
+            xt_rows = caches.gather_xt_rows(problem, base_g, self.xt_pre)
 
         def gather_masks():
             return (jnp.asarray(np.stack(f_act)[:, take_np], dtype)
@@ -847,7 +938,8 @@ class SGLSession:
             self.fused_epoch_launches += 1
             step += block
             red = np.asarray(_batch_reduced_gaps(
-                Xt, fm_b, bsub, resid, w, y, problem.tau, lam_b
+                Xt, fm_b, bsub, resid, w, y, problem.tau, lam_b,
+                backend=self.solver_backend, xt_rows=xt_rows,
             ))
             changed = False
             for b in range(B):
@@ -867,9 +959,37 @@ class SGLSession:
                     bsub[b] * fm_b[b]
                 )
                 last_round_b[b] = step
-                rres = self._certified_round(
-                    beta_full, lam_b[b], lam_max_j, "gap", caches=caches
-                )
+                rres = None
+                if (not crossed and cfg.compact and cfg.compact_rounds
+                        and self.rule.supports_compact
+                        and self._rounds_since_full < cfg.full_round_every
+                        and 0 < n_base_act
+                        and _bucket(n_base_act) < n_real_groups):
+                    # Cadence rounds (dynamic screening inside the batch)
+                    # run compact on the SHARED base buffer: the round's
+                    # group_active is the batch UNION active set, so the
+                    # gather key coincides with the batch buffer (no
+                    # re-gather) and the union-but-screened-for-b groups
+                    # contribute their EXACT terms to the dual max while
+                    # only the off-buffer groups are bounded from the
+                    # reference — still exact when the bound holds.  The
+                    # caller's per-lambda masks intersect monotonically,
+                    # so union-level keep bits cannot resurrect anything
+                    # lambda b already screened.  Convergence is NEVER
+                    # adopted from a compact round: a crossed reduced gap
+                    # (and a compact gap at tol, below) re-confirms with a
+                    # FULL round, keeping every reported gap full-problem
+                    # exact — the same policy as the per-lambda driver.
+                    rres = self._compact_round(
+                        beta_full, lam_b[b], base_g, f_act[b], caches
+                    )
+                    if rres is not None and float(rres.gap) <= tol:
+                        rres = None        # full-round confirmation below
+                if rres is None:
+                    rres = self._certified_round(
+                        beta_full, lam_b[b], lam_max_j, self.rule,
+                        caches=caches
+                    )
                 gap_hist[b].append((step, float(rres.gap)))
                 final_theta[b] = rres.theta
                 if float(rres.gap) <= tol:
@@ -945,7 +1065,7 @@ class SGLSession:
             )
         cfg = self.config
         problem = self.problem
-        rule = cfg.rule
+        rule = self.rule
         lam_max = self.lam_max
         if lambdas is None:
             lambdas = lambda_grid(lam_max, T=T, delta=delta)
@@ -983,7 +1103,7 @@ class SGLSession:
         dyn_scr = np.zeros(T_, np.int64)
         results: list = []
 
-        screening_rule = rule in ("gap", "dynamic", "dst3")
+        screening_rule = rule.is_dynamic
 
         def record(t, res, first_round, n_seq_active):
             """Per-lambda bookkeeping shared by the per-lambda and the
@@ -1038,7 +1158,7 @@ class SGLSession:
         # only where lambdas converge in a handful of passes — batching a
         # cold stretch costs extra epochs and discarded probe rounds for
         # nothing.
-        batch_ok = (sequential and rule == "gap"
+        batch_ok = (sequential and rule.name == "gap"
                     and self.solver_backend == "pallas"
                     and batch_lambdas > 1
                     and np.dtype(dtype).itemsize >= 8)
@@ -1048,13 +1168,15 @@ class SGLSession:
             lam_ = lambdas[t]
             first_round = None
             n_seq_active = n_groups
-            if sequential and rule != "static":
+            if sequential and rule.supports_sequential:
                 # Sequential rule: certified round at the NEW lambda from
                 # the PREVIOUS lambda's primal point, before any epoch here.
-                # The static rule is excluded: solve() applies its up-front
-                # static screen to beta before any round, which would
-                # invalidate a certificate evaluated at the un-masked warm
-                # start.
+                # Rules without sequential support are excluded: the static
+                # rule's up-front screen re-masks beta before any round
+                # (which would invalidate a certificate evaluated at the
+                # un-masked warm start), and the dynamic/DST3 spheres
+                # refine during a solve but transfer nothing across
+                # lambdas.
                 first_round = self.screen(float(lam_), beta, rule=rule)
                 if screening_rule:
                     n_seq_active = int(
@@ -1171,6 +1293,8 @@ class SGLSession:
             round_flops=self.round_flops - flops0,
             n_fused_epoch_launches=self.fused_epoch_launches - fused0,
             batched_lambdas=self.batched_lambdas - batched0,
+            rule_name=rule.name,
+            certificates_safe=rule.is_safe,
         )
 
 

@@ -8,8 +8,11 @@ Faithful reproduction of the paper's solver:
 * duality gap computed every ``f_ce`` passes (paper: f_ce = 10), giving the
   dual feasible point via residual rescaling (Eq. 15) and the GAP safe
   sphere (Thm 2), from which groups/features are screened (Thm 1),
-* alternative spheres (static / dynamic / DST3 / none) for the paper's
-  comparison experiments (Fig. 2c).
+* alternative spheres (static / dynamic / DST3 / none / unsafe strong) for
+  the paper's comparison experiments (Fig. 2/3) — pluggable
+  :mod:`repro.rules` strategy objects sharing the one round skeleton
+  (:func:`_screen_round`), which owns everything rule-independent and asks
+  a rule only for its sphere.
 
 TPU/XLA adaptation (see DESIGN.md §3): screened variables are removed by
 **gathering the surviving groups into a dense buffer padded to power-of-two
@@ -90,6 +93,7 @@ from . import sgl
 from .sgl import SGLProblem
 from ..kernels import _util as kernel_util
 from ..kernels import ops as kops
+from ..rules import RuleState, ScreeningRule, resolve_rule
 
 __all__ = [
     "SolveResult",
@@ -122,6 +126,11 @@ class RoundResult(NamedTuple):
     group_active: jax.Array          # (G,) bool — False = certified zero
     feat_active: jax.Array           # (G, ng) bool — False = certified zero
     compact: bool = False            # round ran on the compacted buffer
+    safe: bool = True                # masks are certificates; False for
+                                     #   rounds produced by an unsafe rule
+                                     #   (repro.rules ScreeningRule.is_safe
+                                     #   False) — heuristic discards, never
+                                     #   reported as zero-certificates
 
 
 class SolveResult(NamedTuple):
@@ -304,20 +313,45 @@ def resolve_solver_backend(backend: str) -> str:
     return resolve_backend(backend, what="solver backend")
 
 
+def _corr_grouped(problem: SGLProblem, v: jax.Array, backend: str,
+                  xt_pre: Optional[jax.Array]) -> jax.Array:
+    """Backend-routed grouped correlation X^T v — the shared skeleton's one
+    correlation primitive.  ``"pallas"`` runs the corr-only Pallas matvec
+    over the persistent transposed design (on-the-fly transposes are
+    audit-counted); ``"xla"`` the plain einsum."""
+    if backend == "pallas":
+        return kops.screening_corr_grouped(problem.X, v, xt_pre=xt_pre)
+    return jnp.einsum("ngk,n->gk", problem.X, v)
+
+
 @functools.partial(jax.jit, static_argnames=("rule", "backend"))
 def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
-                  lam_max: jax.Array, rule: str, backend: str = "xla",
+                  lam_max: jax.Array, rule: ScreeningRule,
+                  backend: str = "xla",
                   xt_pre: Optional[jax.Array] = None):
-    """One fused FULL gap + screening round (single XLA program).
+    """One fused FULL gap + screening round (single XLA program) — the
+    shared sphere-test SKELETON every :class:`repro.rules.ScreeningRule`
+    plugs into.
 
     The eager version of this round cost ~50 small dispatches; fusing it is
     what makes screening overhead negligible per round (see EXPERIMENTS.md
-    §Perf, solver iteration 1).  Returns ``(RoundResult, resid, terms)``
-    where ``resid``/``terms`` (the residual and the per-group dual-norm
-    terms) are the reference state the compacted round
-    (:func:`_screen_round_compact`) bounds screened groups from — the
-    session stores them on :class:`SolveCaches` after every full round.
-    For rules that do not screen dynamically the masks are all-true.
+    §Perf, solver iteration 1).  The skeleton owns everything
+    rule-independent — the residual, the Eq. 15 dual scaling, the duality
+    gap, the Theorem-1 tests, and the Pallas corr/dual-norm kernel routing
+    (fed from the persistent transposed design, so the transpose audit
+    covers every rule) — and asks the rule only for its sphere via
+    ``rule.center_and_radius`` (a hashable static argument: equal rule
+    instances share one compiled program).  A rule that cannot supply
+    ``X^T center`` for free gets it from the SAME backend-routed
+    correlation primitive, so e.g. the dynamic sphere's second correlation
+    also runs on the Pallas kernel on TPU.
+
+    Returns ``(RoundResult, resid, terms)`` where ``resid``/``terms`` (the
+    residual and the per-group dual-norm terms) are the reference state the
+    compacted round (:func:`_screen_round_compact`) bounds screened groups
+    from — the session stores them on :class:`SolveCaches` after every full
+    round.  For rules that do not screen dynamically the masks are
+    all-true; rounds from unsafe rules come back flagged ``safe=False``.
 
     ``backend="pallas"`` computes the hot X^T resid correlation through the
     corr-only Pallas matvec kernel and the SGL dual norm through the Pallas
@@ -327,35 +361,35 @@ def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
     Pallas-backed round materialises a fresh transposed copy of X.
     """
     resid = problem.y - jnp.einsum("ngk,gk->n", problem.X, beta)
+    corr = _corr_grouped(problem, resid, backend, xt_pre)
     if backend == "pallas":
-        corr = kops.screening_corr_grouped(problem.X, resid, xt_pre=xt_pre)
         terms = kops.sgl_dual_norm_terms_fused(corr, problem.tau, problem.w)
     else:
-        corr = jnp.einsum("ngk,n->gk", problem.X, resid)
         terms = sgl.sgl_dual_norm_terms(corr, problem.tau, problem.w)
     dual_norm = jnp.max(terms)
     scale = jnp.maximum(lam_, dual_norm)
     theta = resid / scale
     gap = sgl.duality_gap(problem, beta, theta, lam_)
 
-    if rule == "gap":
-        sphere = scr.Sphere(
-            theta, jnp.sqrt(2.0 * jnp.maximum(gap, 0.0)) / lam_
+    if rule.is_dynamic:
+        state = RuleState(
+            problem=problem, beta=beta, resid=resid, corr=corr, scale=scale,
+            theta=theta, gap=gap, lam=lam_, lam_max=lam_max,
         )
-        res = scr.screen_with_corr(problem, sphere, corr / scale)
-    elif rule == "dynamic":
-        res = scr.screen(problem, scr.dynamic_sphere(problem, theta, lam_))
-    elif rule == "dst3":
-        res = scr.screen(
-            problem, scr.dst3_sphere(problem, theta, lam_, lam_max)
+        center, radius, corr_c = rule.center_and_radius(state)
+        if corr_c is None:
+            corr_c = _corr_grouped(problem, center, backend, xt_pre)
+        res = scr.screen_with_corr(
+            problem, scr.Sphere(center, radius), corr_c
         )
-    else:  # "none" / "static" — no dynamic screening
+    else:  # "none" / "static" — no dynamic screening, gap-only round
         res = scr.ScreenResult(
             jnp.ones((problem.G,), bool),
             jnp.asarray(problem.feat_mask),
             scr.Sphere(theta, jnp.inf),
         )
-    round_res = RoundResult(gap, theta, res.group_active, res.feat_active)
+    round_res = RoundResult(gap, theta, res.group_active, res.feat_active,
+                            safe=rule.is_safe)
     return round_res, resid, terms
 
 
@@ -470,7 +504,7 @@ def screen_round(
     beta: jax.Array,
     lam_: float,
     lam_max: float = 0.0,
-    rule: str = "gap",
+    rule="gap",
     backend: str = "auto",
     xt_pre: Optional[jax.Array] = None,
 ) -> RoundResult:
@@ -482,20 +516,28 @@ def screen_round(
     can be fed to :func:`solve` as ``first_round`` so the solve starts on
     the reduced problem with zero duplicated work.
 
+    ``rule``: a registered rule name or a :class:`repro.rules.ScreeningRule`
+    object; unknown names fail fast here with the registered list (they
+    used to fall silently into the no-screening branch of the round).
     ``rule="dst3"`` needs the true ``lam_max`` (its sphere divides by it).
     ``xt_pre``: persistent transposed design (Pallas backend only) — see
     :meth:`repro.core.session.SGLSession.screen`, which supplies it
     automatically.
     """
-    if rule == "dst3" and not lam_max > 0.0:
-        raise ValueError("rule='dst3' requires lam_max > 0 (pass lambda_max)")
-    if rule == "static":
+    rule = resolve_rule(rule)
+    if rule.pre_screens:
+        # Checked BEFORE needs_lam_max: this refusal is terminal, so a
+        # static-rule caller must not first be told to pass lambda_max.
         # The static screen is applied once inside solve(), not per round;
         # _screen_round would return all-true masks that LOOK like a valid
         # certificate while screening nothing.
         raise ValueError(
-            "rule='static' has no per-round certificate; use "
+            f"rule={rule.name!r} has no per-round certificate; use "
             "screening.static_sphere + screening.screen, or solve()"
+        )
+    if rule.needs_lam_max and not lam_max > 0.0:
+        raise ValueError(
+            f"rule={rule.name!r} requires lam_max > 0 (pass lambda_max)"
         )
     dtype = problem.X.dtype
     res, _resid, _terms = _screen_round(
@@ -633,7 +675,7 @@ def solve(
     tol: float = 1e-8,
     max_epochs: int = 10_000,
     f_ce: int = 10,
-    rule: str = "gap",
+    rule="gap",
     lam_max: Optional[float] = None,
     compact: bool = True,
     inner_rounds: int = 5,
@@ -657,7 +699,9 @@ def solve(
         A session additionally keeps a persistent transposed design for the
         Pallas-backed rounds and carries the gather cache across calls.
 
-    rule in {"gap", "static", "dynamic", "dst3", "none"}.
+    ``rule``: a registered :mod:`repro.rules` name ({"gap", "static",
+    "dynamic", "dst3", "none", "strong"}) or a
+    :class:`repro.rules.ScreeningRule` object.
     ``tol`` is the duality-gap stopping threshold (paper uses 1e-8).
     ``inner_rounds``: how many f_ce-epoch blocks run inside one jitted
     call between certified (full-problem) gap/screening rounds; the inner

@@ -1,10 +1,18 @@
-"""Recompute roofline terms for dry-run cells from their saved HLO.
+"""Recompute derived artifacts from saved raw ones — no recompute needed.
 
-    PYTHONPATH=src python -m repro.launch.reanalyze artifacts/dryrun2
+Two modes, same pattern (raw data is saved next to the derived report, so
+analyzer/renderer improvements re-apply for free):
 
-The dry-run saves each cell's compiled HLO next to its JSON
-(<cell>.json.hlo.gz), so analyzer improvements can be re-applied without
-recompiling 40 cells.
+* dry-run roofline (default): re-analyze each cell's saved HLO
+
+      PYTHONPATH=src python -m repro.launch.reanalyze artifacts/dryrun2
+
+* screening-rule sweep: re-render the Fig. 2/3 markdown report from a
+  saved ``benchmarks/sweep_rules.py`` JSON payload (``BENCH_pr5.json``)
+  without re-running a single solver epoch
+
+      PYTHONPATH=src python -m repro.launch.reanalyze --sweep BENCH_pr5.json
+      PYTHONPATH=src python -m repro.launch.reanalyze --sweep BENCH_pr5.json --md BENCH_pr5.md
 """
 from __future__ import annotations
 
@@ -44,8 +52,50 @@ def reanalyze_cell(json_path: str) -> bool:
     return True
 
 
+def reanalyze_sweep(json_path: str, md_path: str | None = None) -> str:
+    """Re-render the Fig. 2/3 sweep markdown from a saved sweep JSON.
+
+    Writes next to the JSON (``.json`` -> ``.md``) unless ``md_path`` is
+    given; returns the output path.  The renderer lives in
+    :func:`repro.launch.report.render_sweep_markdown`, shared with the
+    sweep harness itself, so both always agree on the layout.
+    """
+    from .report import render_sweep_markdown
+
+    with open(json_path) as f:
+        payload = json.load(f)
+    if "curves" not in payload:
+        raise SystemExit(
+            f"{json_path} has no 'curves' section - not a sweep_rules "
+            "payload (see benchmarks/sweep_rules.py)"
+        )
+    if md_path is None:
+        base, _ = os.path.splitext(json_path)
+        md_path = base + ".md"
+    with open(md_path, "w") as f:
+        f.write(render_sweep_markdown(payload))
+        f.write("\n")
+    print(f"re-rendered {json_path} -> {md_path}")
+    return md_path
+
+
 def main():
-    out_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun2"
+    usage = "usage: reanalyze --sweep <sweep.json> [--md <out.md>]"
+    args = sys.argv[1:]
+    if args and args[0] == "--sweep":
+        md = None
+        rest = args[1:]
+        if "--md" in rest:
+            i = rest.index("--md")
+            if i + 1 >= len(rest):
+                raise SystemExit(usage)
+            md = rest[i + 1]
+            rest = rest[:i] + rest[i + 2:]
+        if len(rest) != 1 or rest[0].startswith("--"):
+            raise SystemExit(usage)
+        reanalyze_sweep(rest[0], md)
+        return
+    out_dir = args[0] if args else "artifacts/dryrun2"
     n = 0
     for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
         if reanalyze_cell(p):

@@ -1,10 +1,17 @@
-"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables, and
+render the screening-rule sweep report (paper Fig. 2/3 layout).
 
     PYTHONPATH=src python -m repro.launch.report artifacts/dryrun
 
 Prints markdown: the §Dry-run status matrix and the §Roofline single-pod
 table (three terms, bottleneck, useful-flops ratio) plus per-cell notes on
 what would move the dominant term.
+
+:func:`render_sweep_markdown` turns a ``benchmarks/sweep_rules.py`` JSON
+payload (``BENCH_pr5.json`` schema) into the markdown report — kept here so
+``repro.launch.reanalyze --sweep`` can re-render a saved sweep after
+renderer improvements without re-running any solver, the same
+recompute-free pattern the dry-run HLO reanalysis uses.
 """
 from __future__ import annotations
 
@@ -128,6 +135,129 @@ def memory_table(cells):
               f"{(m.get('argument_bytes') or 0) / gb:.2f} GiB | "
               f"{(m.get('temp_bytes') or 0) / gb:.2f} GiB | "
               f"{(m.get('peak_bytes') or 0) / gb:.2f} GiB |")
+
+
+# ---------------------------------------------------------------------------
+# Screening-rule sweep report (paper Fig. 2/3 layout)
+# ---------------------------------------------------------------------------
+
+
+def _fig2c_value(curve, epoch):
+    """Step-function read-out of an (epoch, frac) curve at ``epoch``:
+    the last applied screen at or before it (1.0 before any screen)."""
+    val = 1.0
+    for e, frac in curve:
+        if e > epoch:
+            break
+        val = frac
+    return val
+
+
+def render_sweep_markdown(payload: dict) -> str:
+    """Markdown report for a ``sweep_rules`` JSON payload.
+
+    Layout mirrors the paper's figures: Fig. 2a/2b (active-variable
+    fraction along the lambda path, one column per rule), Fig. 2c (active
+    fraction as a function of epochs at a fixed lambda), Fig. 3
+    (computation to tolerance per rule x tol).  Unsafe rules are starred —
+    their screened sets are heuristic discards, not certificates.
+    """
+    meta = payload.get("meta", {})
+    curves = payload.get("curves", {})
+    out = ["# Screening-rule sweep — paper Fig. 2/3 layout", ""]
+    out.append("Generated by `benchmarks/sweep_rules.py`; re-render with "
+               "`python -m repro.launch.reanalyze --sweep <json>`.")
+    out.append("")
+    for k in ("config", "jax_version", "backend", "platform", "x64"):
+        if k in meta:
+            out.append(f"- **{k}**: {meta[k]}")
+    out.append("")
+
+    # Group curves by (config, T, tol); one figure block per group.
+    groups: dict = {}
+    for key, c in curves.items():
+        groups.setdefault((c["config"], c["T"], c["tol"]), {})[c["rule"]] = c
+    for (cfg, T, tol), by_rule in sorted(groups.items()):
+        rules = sorted(by_rule, key=lambda r: (not by_rule[r]["safe"], r))
+        star = {r: ("" if by_rule[r]["safe"] else "*") for r in rules}
+        out.append(f"## {cfg} — T={T}, tol={tol:g}")
+        out.append("")
+
+        any_c = by_rule[rules[0]]
+        lambdas = any_c["lambdas"]
+        lam0 = lambdas[0]
+        idxs = sorted({int(round(i)) for i in
+                       [t * (T - 1) / min(9, T - 1) for t in
+                        range(min(10, T))]}) if T > 1 else [0]
+
+        out.append("### Fig. 2a/2b — active-variable fraction along the "
+                   "lambda path")
+        out.append("")
+        out.append("Feature-level active fraction (1.0 = nothing screened); "
+                   "lower is better screening.")
+        out.append("")
+        out.append("| t | lambda/lambda_max | "
+                   + " | ".join(r + star[r] for r in rules) + " |")
+        out.append("|---|---|" + "---|" * len(rules))
+        for t in idxs:
+            row = [str(t), f"{lambdas[t] / lam0:.3g}"]
+            row += [f"{by_rule[r]['active_feat_frac'][t]:.3f}"
+                    for r in rules]
+            out.append("| " + " | ".join(row) + " |")
+        out.append("")
+
+        fig2c = {r: by_rule[r].get("fig2") for r in rules}
+        if any(fig2c.values()):
+            t_star = next(c["lambda_index"] for c in fig2c.values() if c)
+            max_e = max((c["epoch_curve"][-1][0] if c and c["epoch_curve"]
+                         else 0) for c in fig2c.values())
+            checkpoints, e = [0], 1
+            while e <= max_e:
+                checkpoints.append(e)
+                e *= 2
+            if max_e and checkpoints[-1] != max_e:
+                checkpoints.append(max_e)
+            out.append(f"### Fig. 2c — active feature fraction vs epoch at "
+                       f"lambda index t={t_star} "
+                       f"(lambda/lambda_max={lambdas[t_star] / lam0:.3g})")
+            out.append("")
+            out.append("| epoch | "
+                       + " | ".join(r + star[r] for r in rules) + " |")
+            out.append("|---|" + "---|" * len(rules))
+            for e in checkpoints:
+                row = [str(e)]
+                for r in rules:
+                    c = fig2c[r]
+                    curve = ([(pt[0], pt[2]) for pt in c["epoch_curve"]]
+                             if c else [])
+                    row.append(f"{_fig2c_value(curve, e):.3f}")
+                out.append("| " + " | ".join(row) + " |")
+            out.append("")
+
+        out.append("### Fig. 3 — computation to tolerance")
+        out.append("")
+        out.append("| rule | safe | converged | total epochs | wall s | "
+                   "seq discards | dyn discards | compact/full rounds | "
+                   "round GFLOPs |")
+        out.append("|---|---|---|---|---|---|---|---|---|")
+        for r in rules:
+            c = by_rule[r]
+            out.append(
+                f"| {r}{star[r]} | {'yes' if c['safe'] else 'NO'} | "
+                f"{c['converged_lambdas']}/{T} | {sum(c['epochs'])} | "
+                f"{c['wall_seconds']:.1f} | {sum(c['seq_screened'])} | "
+                f"{sum(c['dyn_screened'])} | "
+                f"{c['n_compact_rounds']}/{c['n_full_rounds']} | "
+                f"{c['round_flops'] / 1e9:.2f} |")
+        out.append("")
+        if any(not by_rule[r]["safe"] for r in rules):
+            out.append("\\* unsafe heuristic — screened sets are NOT "
+                       "certificates (`PathResult.certificates_safe=False`);"
+                       " a wrong discard shows up as a lambda that fails to "
+                       "converge (the reported duality gap is always "
+                       "full-problem exact).")
+            out.append("")
+    return "\n".join(out)
 
 
 def main():

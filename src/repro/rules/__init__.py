@@ -1,0 +1,75 @@
+"""Pluggable screening-rule strategies for the SGL solver family.
+
+The paper's headline result is a *comparison* — GAP safe (sequential +
+dynamic) against static safe spheres, plain dynamic safe spheres, and
+unsafe sequential heuristics (Fig. 2/3) — and the journal follow-up
+(Ndiaye et al. 2017) shows all of them share ONE sphere-test skeleton,
+differing only in how the sphere's center and radius are built.  This
+package is that observation as an API:
+
+* :class:`ScreeningRule` (:mod:`repro.rules.base`) — the strategy
+  protocol: safety/sequential/compact metadata plus
+  ``center_and_radius(state) -> (center, radius, corr_at_center)``;
+* the registered implementations (:mod:`repro.rules.library`):
+  :class:`GapSafeRule` (``"gap"``), :class:`StaticSafeRule`
+  (``"static"``), :class:`DynamicSafeRule` (``"dynamic"``),
+  :class:`Dst3Rule` (``"dst3"``), :class:`NoScreening` (``"none"``), and
+  the explicitly-unsafe :class:`StrongSequentialRule` (``"strong"``);
+* the registry (:mod:`repro.rules.registry`) — ``resolve_rule`` keeps
+  legacy string configs working and fails fast on unknown names with the
+  registered list.
+
+The shared skeleton lives in :func:`repro.core.solver._screen_round`: the
+residual, the Eq. 15 dual scaling, the duality gap, the Theorem-1 tests,
+the Pallas corr/dual-norm kernel routing (with the session's persistent
+transposed design + transpose audit), and the compacted-round machinery
+are all rule-independent — a rule only supplies its sphere and gets the
+rest for free, on every strategy (single-device BCD, batched-lambda,
+distributed FISTA for the rules each supports).
+
+Adding a rule
+-------------
+Subclass :class:`ScreeningRule` as a frozen dataclass (instances are jit
+static arguments — they must stay hashable value objects), set the
+metadata honestly (``is_safe=True`` is a *proof obligation*, see the
+safety contract in :mod:`repro.rules.base`), implement
+``center_and_radius`` from the :class:`RuleState` the skeleton hands you,
+and ``register_rule(MyRule())``.  Every front-end — ``SolverConfig(rule=
+MyRule())`` or ``rule="my-name"`` — and the Fig. 2/3 sweep harness
+(``benchmarks/sweep_rules.py``) pick it up immediately.  Newer rule
+families (e.g. the Dual Feature Reduction rules of Feser & Evangelou
+2024) slot in the same way: one sphere construction, zero solver changes.
+"""
+from .base import RuleState, ScreeningRule
+from .library import (
+    Dst3Rule,
+    DynamicSafeRule,
+    GapSafeRule,
+    NoScreening,
+    StaticSafeRule,
+    StrongSequentialRule,
+)
+from .registry import available_rules, get_rule, register_rule, resolve_rule
+
+__all__ = [
+    "RuleState",
+    "ScreeningRule",
+    "GapSafeRule",
+    "StaticSafeRule",
+    "DynamicSafeRule",
+    "Dst3Rule",
+    "NoScreening",
+    "StrongSequentialRule",
+    "available_rules",
+    "get_rule",
+    "register_rule",
+    "resolve_rule",
+]
+
+# Built-in registrations: the paper's Fig. 2/3 rule family.
+register_rule(GapSafeRule())
+register_rule(StaticSafeRule())
+register_rule(DynamicSafeRule())
+register_rule(Dst3Rule())
+register_rule(NoScreening())
+register_rule(StrongSequentialRule())

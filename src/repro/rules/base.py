@@ -1,0 +1,150 @@
+"""Screening-rule strategy protocol: the one sphere-test skeleton.
+
+Every safe screening rule in the GAP-safe literature (and the follow-up
+"Gap Safe Screening Rules for Sparsity Enforcing Penalties", Ndiaye et al.
+2017) is the SAME two-step test instantiated with a different *safe
+sphere*:
+
+1. construct a ball B(theta_c, r) guaranteed (or, for unsafe heuristics,
+   hoped) to contain the dual optimum theta_hat;
+2. run the Theorem-1 group/feature tests of
+   :func:`repro.core.screening.theorem1_tests` against it.
+
+Step 2 — together with the dual scaling (Eq. 15), the duality-gap
+computation, the Pallas corr/dual-norm kernel routing, the compacted-round
+bound, and the transposed-design audit — lives in the shared round skeleton
+(:func:`repro.core.solver._screen_round`); a :class:`ScreeningRule` only
+supplies step 1 via :meth:`ScreeningRule.center_and_radius`, so every rule
+inherits the whole execution machinery for free.
+
+Rule instances are **frozen, hashable value objects**: the round skeleton
+is jitted with the rule as a static argument, so two equal instances share
+one compiled program.  They deliberately import nothing from
+:mod:`repro.core` at module-import time (the solver imports *us*); a rule
+needing core helpers (e.g. the DST3 sphere construction) imports them
+lazily inside its method, which runs at trace time when the core package
+is fully initialised.
+
+Safety contract
+---------------
+``is_safe=True`` asserts the sphere returned by ``center_and_radius``
+*provably* contains the dual optimum for every state the skeleton can hand
+it (any dual-feasible ``theta``, any primal ``beta``).  Everything
+downstream trusts this bit: certified masks are permanent, the session
+reports them as zero-certificates, and the path recorder intersects them
+into :class:`repro.core.session.PathResult`.  A rule that cannot prove
+containment MUST set ``is_safe=False`` — the session then flags every
+round (:class:`repro.core.solver.RoundResult` ``safe=False``) and the path
+result (``certificates_safe=False``) so heuristic discards are never
+mistaken for certificates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+
+__all__ = ["RuleState", "ScreeningRule"]
+
+
+class RuleState(NamedTuple):
+    """Everything the shared round skeleton has already computed when it
+    asks a rule for its sphere — rules read from here instead of paying
+    their own O(n p) passes.
+
+    All array members are (possibly traced) jax values; ``problem`` is the
+    :class:`repro.core.sgl.SGLProblem` pytree.
+    """
+
+    problem: Any          # SGLProblem (y, X, tau, w, feat_mask, norms...)
+    beta: jax.Array       # (G, ng) current primal point
+    resid: jax.Array      # (n,) y - X beta
+    corr: jax.Array       # (G, ng) X^T resid, grouped
+    scale: jax.Array      # max(lam, Omega^D(corr)) — Eq. 15 dual scaling
+    theta: jax.Array      # (n,) resid / scale, dual feasible
+    gap: jax.Array        # duality gap at (beta, theta)
+    lam: jax.Array        # regularisation level of this round
+    lam_max: jax.Array    # lambda_max (0.0 when the caller does not know it)
+
+
+@dataclasses.dataclass(frozen=True)
+class ScreeningRule:
+    """Base strategy: metadata + the sphere constructor.
+
+    Metadata (plain class attributes, NOT dataclass fields, so frozen
+    subclasses stay hashable value objects):
+
+    ``name``
+        Registry key; also what legacy ``rule="..."`` strings resolve to.
+    ``is_safe``
+        The sphere provably contains the dual optimum (see the module
+        docstring's safety contract).  Unsafe rules' rounds and paths are
+        flagged and never reported as certificates.
+    ``is_dynamic``
+        The rule screens at every certified round during a solve.  False
+        means rounds only certify the gap (all-true masks).
+    ``supports_sequential``
+        A round evaluated at a *new* lambda from the *previous* lambda's
+        primal point is meaningful, so the path engine runs one before any
+        epoch (the paper's sequential rule).  True for GAP (the sphere is
+        valid from any feasible point) and for :class:`NoScreening` (the
+        round is a plain gap check used for the warm-start early exit);
+        False for the dynamic/DST3 spheres, which refine *during*
+        optimisation but transfer nothing across lambdas.
+    ``supports_compact``
+        The compacted certified round
+        (:func:`repro.core.solver._screen_round_compact`) reproduces this
+        rule's sphere exactly on the gathered buffer.  GAP only: the
+        compact round hard-codes the Thm-2 radius.
+    ``pre_screens``
+        The rule screens ONCE, before the first epoch (static sphere);
+        :meth:`pre_solve_sphere` must return the sphere.  Such rules have
+        no per-round certificate, so ``screen``/``screen_round`` refuse
+        them.
+    ``needs_lam_max``
+        The sphere construction divides by the true lambda_max; callers
+        without it must fail fast instead of passing 0.
+    """
+
+    name = "abstract"
+    is_safe = False
+    is_dynamic = False
+    supports_sequential = False
+    supports_compact = False
+    pre_screens = False
+    needs_lam_max = False
+
+    def center_and_radius(
+        self, state: RuleState
+    ) -> Tuple[jax.Array, jax.Array, Optional[jax.Array]]:
+        """Return ``(center, radius, corr_at_center)`` for this round.
+
+        ``corr_at_center`` is ``X^T center`` in grouped layout when the
+        rule can supply it for free (the GAP family reuses the skeleton's
+        residual correlation: ``corr / scale``); ``None`` makes the
+        skeleton compute it through the backend-routed correlation (Pallas
+        kernel over the persistent transposed design on TPU, einsum on
+        XLA) — which is how every rule gets the kernel routing without
+        knowing it exists.
+
+        Only called when ``is_dynamic`` is True.  Runs at trace time
+        inside the jitted round: use ``jax.numpy`` ops on the state.
+        """
+        raise NotImplementedError(f"{type(self).__name__} is not dynamic")
+
+    def pre_solve_sphere(self, problem, lam_, lam_max):
+        """Sphere applied once before the first epoch: ``(center, radius)``.
+
+        Only consulted when ``pre_screens`` is True (static rules) — such
+        rules MUST override this; the base raises so a forgotten override
+        fails at the extension point, not as an opaque unpack error deep
+        inside ``solve()``.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} sets pre_screens=True but does not "
+            "implement pre_solve_sphere()"
+        )
+
+    def __repr__(self) -> str:  # registry/error messages read better
+        return f"{type(self).__name__}(name={self.name!r})"

@@ -1,0 +1,165 @@
+"""The registered screening-rule implementations (paper Section 7.1 + §2).
+
+Each rule is one safe-sphere construction plugged into the shared skeleton
+(see :mod:`repro.rules.base`); the Fig. 2/3 comparison of the paper is
+exactly this family run side by side (``benchmarks/sweep_rules.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from .base import RuleState, ScreeningRule
+
+__all__ = [
+    "GapSafeRule",
+    "StaticSafeRule",
+    "DynamicSafeRule",
+    "Dst3Rule",
+    "NoScreening",
+    "StrongSequentialRule",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class GapSafeRule(ScreeningRule):
+    """GAP safe sphere (this paper, Thm 2): B(theta, sqrt(2 gap)/lambda).
+
+    Safe from ANY dual feasible theta — which is what makes it both
+    sequential (valid at a new lambda from the previous primal point via
+    the Eq. 15 rescaling) and dynamic (the radius shrinks with the gap as
+    the solver converges).  The center is the skeleton's rescaled dual
+    point and the sphere correlation is the residual correlation over the
+    dual scale, so the round pays no extra O(n p) work.
+    """
+
+    name = "gap"
+    is_safe = True
+    is_dynamic = True
+    supports_sequential = True
+    supports_compact = True
+
+    def center_and_radius(self, state: RuleState):
+        radius = jnp.sqrt(2.0 * jnp.maximum(state.gap, 0.0)) / state.lam
+        return state.theta, radius, state.corr / state.scale
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticSafeRule(ScreeningRule):
+    """Static safe sphere [El Ghaoui et al. 2012]:
+    B(y/lambda, ||y/lambda_max - y/lambda||), applied ONCE before the
+    first epoch.  Safe but never refined — the paper's Fig. 2 baseline
+    whose screened set stays frozen while GAP keeps shrinking."""
+
+    name = "static"
+    is_safe = True
+    pre_screens = True
+    needs_lam_max = True
+
+    def pre_solve_sphere(self, problem, lam_, lam_max):
+        # Delegate to the canonical construction in core (lazy import —
+        # see Dst3Rule) so the rule object and direct screening calls can
+        # never compute different spheres for the same name.
+        from repro.core.screening import static_sphere
+
+        sph = static_sphere(problem, lam_, lam_max)
+        return sph.center, sph.radius
+
+
+@dataclasses.dataclass(frozen=True)
+class DynamicSafeRule(ScreeningRule):
+    """Dynamic safe sphere [Bonnefoy et al. 2014]:
+    B(y/lambda, ||theta_k - y/lambda||) refined at every certified round
+    from the current dual feasible point.  Safe, but the radius does not
+    converge to zero (it stops at ||theta_hat - y/lambda||), and the
+    sphere carries nothing across lambdas — no sequential transfer."""
+
+    name = "dynamic"
+    is_safe = True
+    is_dynamic = True
+
+    def center_and_radius(self, state: RuleState):
+        from repro.core.screening import dynamic_sphere
+
+        sph = dynamic_sphere(state.problem, state.theta, state.lam)
+        return sph.center, sph.radius, None
+
+
+@dataclasses.dataclass(frozen=True)
+class Dst3Rule(ScreeningRule):
+    """DST3 sphere [Xiang et al. 2011 / Bonnefoy et al. 2014], extended to
+    the SGL in the paper's App. C (Prop. 11): the dynamic sphere refined
+    by the hyperplane supporting the dual feasible set at y/lambda_max."""
+
+    name = "dst3"
+    is_safe = True
+    is_dynamic = True
+    needs_lam_max = True
+
+    def center_and_radius(self, state: RuleState):
+        # Lazy import: repro.core.solver imports this package at module
+        # import time; the method only runs at trace time, when the core
+        # package is fully initialised.
+        from repro.core.screening import dst3_sphere
+
+        sph = dst3_sphere(state.problem, state.theta, state.lam,
+                          state.lam_max)
+        return sph.center, sph.radius, None
+
+
+@dataclasses.dataclass(frozen=True)
+class NoScreening(ScreeningRule):
+    """No screening at all — the paper's unscreened baseline.
+
+    Vacuously safe (it never discards anything).  ``supports_sequential``
+    is True because the sequential round still carries a valid gap
+    certificate (with all-true masks): the path engine uses it for the
+    warm-start early exit, so a lambda whose warm gap is already under
+    tolerance costs zero epochs even without screening.
+    """
+
+    name = "none"
+    is_safe = True
+    supports_sequential = True
+
+
+@dataclasses.dataclass(frozen=True)
+class StrongSequentialRule(ScreeningRule):
+    """EXPLICITLY UNSAFE sequential heuristic (the paper's corrupted-rule
+    comparison, §2 / Fig. 3).
+
+    Classical sequential rules (sequential SAFE, strong rules) screen at
+    lambda_t from the *previous* lambda's solution **as if that solution
+    were exact** — the assumption the paper shows breaks safety, since in
+    practice only an approximation of theta_hat(lambda_{t-1}) is known.
+    This rule reproduces that failure mode inside the shared sphere
+    skeleton: it takes the GAP sphere's center (the Eq. 15 rescaled dual
+    point) but *corrupts* the Thm-2 radius by ``shrink``.  ``shrink=0.0``
+    is the pure point test (the current feasible point treated as the
+    exact dual optimum — so aggressive it routinely wipes out the true
+    support from any warm start); the default 0.5 is the milder classical
+    flavour that screens noticeably more than GAP and is usually right —
+    until it is not.  With ``shrink=1.0`` it degenerates to the safe GAP
+    rule; anything below forfeits the containment proof.
+
+    ``is_safe=False`` propagates everywhere: every round it produces is
+    flagged (``RoundResult.safe=False``), path results carry
+    ``certificates_safe=False``, and nothing it discards is ever reported
+    as a zero-certificate.  A wrong discard is permanent (masks are
+    monotone), so the full-problem duality gap — always computed on the
+    full problem, never trusted to the rule — stalls above tolerance and
+    the solve saturates ``max_epochs`` with an honest gap: the failure is
+    visible, not silent.
+    """
+
+    shrink: float = 0.5
+
+    name = "strong"
+    is_safe = False
+    is_dynamic = True
+    supports_sequential = True
+
+    def center_and_radius(self, state: RuleState):
+        r_gap = jnp.sqrt(2.0 * jnp.maximum(state.gap, 0.0)) / state.lam
+        return state.theta, self.shrink * r_gap, state.corr / state.scale

@@ -1,0 +1,77 @@
+"""Name -> :class:`ScreeningRule` registry.
+
+The registry is what keeps legacy string configs working
+(``SolverConfig(rule="gap")`` resolves here) and what lets new rule
+families plug in without touching the solver: ``register_rule`` an
+instance and every front-end — ``SGLSession``, ``screen_round``, the
+``benchmarks/sweep_rules.py`` comparison harness — picks it up by name.
+
+Unknown names fail FAST with the registered list (at session/config
+resolution time, never deep inside a jitted round).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Union
+
+from .base import ScreeningRule
+
+__all__ = [
+    "available_rules",
+    "get_rule",
+    "register_rule",
+    "resolve_rule",
+]
+
+_REGISTRY: Dict[str, ScreeningRule] = {}
+
+
+def register_rule(rule: ScreeningRule, *,
+                  overwrite: bool = False) -> ScreeningRule:
+    """Register ``rule`` under ``rule.name``; returns it (decorator-able).
+
+    Re-registering an existing name requires ``overwrite=True`` so a typo
+    in a new rule's ``name`` cannot silently shadow a built-in.
+    """
+    if not isinstance(rule, ScreeningRule):
+        raise TypeError(f"expected a ScreeningRule instance, got {rule!r}")
+    if rule.name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"screening rule {rule.name!r} is already registered "
+            f"({_REGISTRY[rule.name]!r}); pass overwrite=True to replace it"
+        )
+    _REGISTRY[rule.name] = rule
+    return rule
+
+
+def available_rules() -> List[str]:
+    """Sorted names of every registered rule."""
+    return sorted(_REGISTRY)
+
+
+def get_rule(name: str) -> ScreeningRule:
+    """Look up a registered rule by name; unknown names fail fast."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown screening rule {name!r}; registered rules: "
+            f"{available_rules()}"
+        ) from None
+
+
+def resolve_rule(rule: Union[str, ScreeningRule]) -> ScreeningRule:
+    """Resolve a config value — legacy string name or rule object — to a
+    :class:`ScreeningRule` instance.
+
+    This is the compatibility shim for string ``rule=`` configs: strings
+    remain supported as registry keys (``"gap"`` resolves to the
+    :class:`repro.rules.GapSafeRule` singleton, bit-identical behavior),
+    but new rule families should be passed — and registered — as objects.
+    """
+    if isinstance(rule, ScreeningRule):
+        return rule
+    if isinstance(rule, str):
+        return get_rule(rule)
+    raise TypeError(
+        f"rule must be a registered name or a ScreeningRule, got {rule!r}"
+    )

@@ -1,0 +1,323 @@
+"""Screening-rule strategy API: registry round-trips + fail-fast errors,
+string/object bit-parity for the GAP rule, the rule-safety matrix
+(every is_safe rule vs a tight-tol unscreened reference, single-device and
+mesh), unsafe-rule flagging, and the batched driver's compact rounds."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    SGLSession,
+    SolverConfig,
+    lambda_max,
+    make_problem,
+    screen_round,
+)
+from repro.data.synthetic import make_synthetic
+from repro.launch import mesh as meshlib
+from repro.rules import (
+    GapSafeRule,
+    NoScreening,
+    ScreeningRule,
+    StrongSequentialRule,
+    available_rules,
+    get_rule,
+    register_rule,
+    resolve_rule,
+)
+
+
+@pytest.fixture(scope="module")
+def prob():
+    X, y, _, sizes = make_synthetic(n=30, p=120, n_groups=15, gamma1=3,
+                                    gamma2=3, seed=9)
+    return make_problem(X, y, sizes, tau=0.3)
+
+
+@pytest.fixture(scope="module")
+def ref_path(prob):
+    """Tight-tol unscreened warm-started reference down the shared grid."""
+    from repro.core.session import lambda_grid
+
+    session = SGLSession(prob, SolverConfig(tol=1e-10, rule="none",
+                                            max_epochs=60_000))
+    lambdas = lambda_grid(session.lam_max, T=5, delta=1.5)
+    betas = []
+    beta = jnp.zeros((prob.G, prob.ng), prob.X.dtype)
+    for lam_ in lambdas:
+        beta = session.solve(float(lam_), beta0=beta).beta
+        betas.append(np.asarray(beta))
+    return lambdas, np.stack(betas)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_roundtrip():
+    names = available_rules()
+    assert {"gap", "static", "dynamic", "dst3", "none",
+            "strong"} <= set(names)
+    for name in names:
+        rule = get_rule(name)
+        assert rule.name == name
+        assert resolve_rule(name) is rule           # string -> singleton
+        assert resolve_rule(rule) is rule           # object passes through
+    assert isinstance(get_rule("gap"), GapSafeRule)
+    # Equal value objects share identity-free equality (jit cache keys).
+    assert GapSafeRule() == GapSafeRule()
+    assert hash(GapSafeRule()) == hash(GapSafeRule())
+    assert StrongSequentialRule(0.25) != StrongSequentialRule(0.5)
+
+
+def test_unknown_rule_fails_fast_with_registered_list(prob):
+    with pytest.raises(ValueError, match="registered rules"):
+        get_rule("bogus")
+    # ... at session construction (SolverConfig resolution), not deep
+    # inside a round:
+    with pytest.raises(ValueError, match="registered rules"):
+        SGLSession(prob, SolverConfig(rule="bogus"))
+    session = SGLSession(prob)
+    with pytest.raises(ValueError, match="registered rules"):
+        session.screen(1.0, rule="bogus")
+    # ... and on the legacy resumable-round API, which used to fall
+    # silently into the no-screening branch for unknown names:
+    beta = jnp.zeros((prob.G, prob.ng), prob.X.dtype)
+    with pytest.raises(ValueError, match="registered rules"):
+        screen_round(prob, beta, 1.0, rule="bogus")
+    with pytest.raises(TypeError):
+        resolve_rule(3.14)
+
+
+def test_register_rule_guards():
+    with pytest.raises(ValueError, match="already registered"):
+        register_rule(GapSafeRule())
+    with pytest.raises(TypeError):
+        register_rule("gap")
+
+
+def test_custom_rule_registers_and_runs(prob):
+    """A user-defined rule plugs into the skeleton with zero solver
+    changes: register, solve by name, unregister-by-overwrite semantics
+    stay out of the built-ins' way."""
+    import dataclasses
+
+    from repro.rules import registry as reg
+
+    @dataclasses.dataclass(frozen=True)
+    class WideGap(ScreeningRule):
+        # A deliberately looser (still safe) GAP sphere: double radius.
+        name = "wide-gap-test"
+        is_safe = True
+        is_dynamic = True
+        supports_sequential = True
+
+        def center_and_radius(self, state):
+            r = jnp.sqrt(2.0 * jnp.maximum(state.gap, 0.0)) / state.lam
+            return state.theta, 2.0 * r, state.corr / state.scale
+
+    register_rule(WideGap())
+    try:
+        assert "wide-gap-test" in available_rules()
+        lam = 0.25 * float(lambda_max(prob))
+        res = SGLSession(prob, SolverConfig(
+            tol=1e-8, rule="wide-gap-test")).solve(lam)
+        ref = SGLSession(prob, SolverConfig(tol=1e-8)).solve(lam)
+        assert float(res.gap) <= 1e-8
+        np.testing.assert_allclose(np.asarray(res.beta),
+                                   np.asarray(ref.beta), atol=1e-7)
+        # A wider sphere can only keep MORE variables than the GAP sphere.
+        assert res.feat_active.sum() >= ref.feat_active.sum()
+    finally:
+        reg._REGISTRY.pop("wide-gap-test", None)
+
+
+# ---------------------------------------------------------------------------
+# String/object parity (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def test_gap_string_object_bit_parity(prob):
+    """Legacy rule="gap" string configs are BIT-identical to the
+    GapSafeRule() object path: betas, epochs, seq/dyn counters, round
+    split."""
+    runs = {}
+    for key, rule in (("string", "gap"), ("object", GapSafeRule())):
+        session = SGLSession(prob, SolverConfig(tol=1e-8, rule=rule))
+        runs[key] = (session.solve_path(T=6, delta=2.0), session)
+    a, b = runs["string"][0], runs["object"][0]
+    np.testing.assert_array_equal(a.betas, b.betas)
+    assert np.array_equal(a.epochs, b.epochs)
+    assert np.array_equal(a.gaps, b.gaps)
+    assert np.array_equal(a.seq_screened, b.seq_screened)
+    assert np.array_equal(a.dyn_screened, b.dyn_screened)
+    assert np.array_equal(a.group_active, b.group_active)
+    assert (a.n_compact_rounds, a.n_full_rounds, a.round_flops) == \
+        (b.n_compact_rounds, b.n_full_rounds, b.round_flops)
+    assert a.rule_name == b.rule_name == "gap"
+    assert a.certificates_safe and b.certificates_safe
+    # The resolved rule on the string session IS the registered singleton.
+    assert runs["string"][1].rule is get_rule("gap")
+
+
+# ---------------------------------------------------------------------------
+# Rule-safety matrix
+# ---------------------------------------------------------------------------
+
+
+def _assert_path_safe(prob, path, ref_betas, tag):
+    feat_mask = np.asarray(prob.feat_mask)
+    for t in range(len(path.lambdas)):
+        screened = ~path.feat_active[t] & feat_mask
+        leaked = np.abs(ref_betas[t])[screened]
+        assert leaked.size == 0 or leaked.max() < 1e-7, \
+            (tag, t, float(leaked.max()))
+
+
+@pytest.mark.parametrize("rule_name",
+                         ["gap", "static", "dynamic", "dst3", "none"])
+def test_safe_rule_matrix_path(prob, ref_path, rule_name):
+    """Every registered is_safe rule passes the path-safety invariant on
+    solve_path: nothing it screens is nonzero in the tight-tol unscreened
+    reference."""
+    lambdas, ref_betas = ref_path
+    rule = get_rule(rule_name)
+    assert rule.is_safe
+    session = SGLSession(prob, SolverConfig(tol=1e-7, rule=rule,
+                                            max_epochs=30_000))
+    path = session.solve_path(lambdas=lambdas)
+    assert (path.gaps <= 1e-7).all()
+    assert path.certificates_safe
+    assert path.rule_name == rule_name
+    _assert_path_safe(prob, path, ref_betas, rule_name)
+
+
+@pytest.mark.parametrize("rule_name",
+                         ["gap", "static", "dynamic", "dst3", "none"])
+def test_safe_rule_matrix_solve(prob, ref_path, rule_name):
+    """Same invariant on a single cold solve at a mid-path lambda."""
+    lambdas, ref_betas = ref_path
+    t = 3
+    session = SGLSession(prob, SolverConfig(tol=1e-8, rule=rule_name,
+                                            max_epochs=30_000))
+    res = session.solve(float(lambdas[t]))
+    assert float(res.gap) <= 1e-8
+    screened = ~np.asarray(res.feat_active) & np.asarray(prob.feat_mask)
+    leaked = np.abs(ref_betas[t])[screened]
+    assert leaked.size == 0 or leaked.max() < 1e-7
+
+
+def test_safe_rule_matrix_mesh(prob, ref_path):
+    """The mesh strategy's one supported rule (gap) passes the same
+    invariant through the rule-object config."""
+    lambdas, ref_betas = ref_path
+    mesh = meshlib.make_test_mesh()
+    session = SGLSession(prob, SolverConfig(tol=1e-6, rule=GapSafeRule(),
+                                            max_epochs=20_000), mesh=mesh)
+    path = session.solve_path(lambdas=lambdas)
+    assert (path.gaps <= 1e-6).all()
+    assert path.certificates_safe
+    _assert_path_safe(prob, path, ref_betas, "mesh-gap")
+    # Non-gap rule objects are refused just like non-gap strings.
+    with pytest.raises(ValueError, match="rule='gap' only"):
+        SGLSession(prob, SolverConfig(rule=StrongSequentialRule()),
+                   mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Unsafe rules are flagged, never reported as certificates
+# ---------------------------------------------------------------------------
+
+
+def test_unsafe_rule_refuses_certificates(prob):
+    session = SGLSession(prob, SolverConfig(tol=1e-7,
+                                            rule=StrongSequentialRule(),
+                                            max_epochs=20_000))
+    lam = 0.3 * session.lam_max
+    cert = session.screen(lam)
+    assert not bool(cert.safe)            # flagged at the round level
+    gap_cert = session.screen(lam, rule="gap")
+    assert bool(gap_cert.safe)            # per-call safe rule stays safe
+    path = session.solve_path(T=5, delta=1.5)
+    assert path.rule_name == "strong"
+    assert not path.certificates_safe     # flagged at the path level
+    # The unsafe heuristic really screens (otherwise the flag is vacuous).
+    assert (path.seq_screened.sum() + path.dyn_screened.sum()) > 0
+    # Gaps stay honest: whatever converged did so on the FULL problem.
+    conv = path.gaps <= 1e-7
+    assert conv.any()
+
+
+def test_safe_solve_rejects_unsafe_first_round(prob):
+    """A safe-rule solve must refuse to adopt an unsafe rule's round as
+    its injected certificate (its masks would be applied monotonically
+    and reported as zero-certificates)."""
+    session = SGLSession(prob, SolverConfig(tol=1e-8))
+    lam = 0.3 * session.lam_max
+    beta0 = np.zeros((prob.G, prob.ng))
+    cert = session.screen(lam, beta0, rule=StrongSequentialRule())
+    with pytest.raises(ValueError, match="unsafe rule"):
+        session.solve(lam, beta0=beta0, first_round=cert)
+    # An unsafe-rule session injecting its OWN flagged rounds stays legal
+    # (everything it reports is flagged certificates_safe=False).
+    s_unsafe = SGLSession(prob, SolverConfig(tol=1e-7,
+                                             rule=StrongSequentialRule(),
+                                             max_epochs=20_000))
+    res = s_unsafe.solve(lam, beta0=beta0, first_round=cert)
+    assert np.isfinite(float(res.gap))
+
+
+def test_strong_rule_never_screens_less_than_gap(prob):
+    """The corrupted radius can only shrink the sphere, so at the same
+    state the strong rule keeps a subset of what GAP keeps."""
+    from repro.core import screen_round as sr
+
+    res = SGLSession(prob, SolverConfig(tol=1e-8)).solve(
+        0.3 * float(lambda_max(prob)))
+    out_gap = sr(prob, res.beta, 0.25 * float(lambda_max(prob)),
+                 rule="gap")
+    out_strong = sr(prob, res.beta, 0.25 * float(lambda_max(prob)),
+                    rule=StrongSequentialRule(shrink=0.5))
+    g_gap = np.asarray(out_gap.group_active)
+    g_strong = np.asarray(out_strong.group_active)
+    assert not np.any(g_strong & ~g_gap)
+    assert bool(out_gap.safe) and not bool(out_strong.safe)
+
+
+# ---------------------------------------------------------------------------
+# Batched driver: compact cadence rounds + Pallas-routed reduced gaps
+# ---------------------------------------------------------------------------
+
+
+def test_batched_driver_uses_compact_rounds(prob):
+    """PR 4 leftover: the batched-lambda BCD driver's cadence rounds run
+    on the compacted union buffer (satellite: `_solve_batch_bcd` via
+    `_screen_round_compact`), with results matching the per-lambda XLA
+    reference at tolerance and the convergence gaps full-problem exact."""
+    tol = 1e-7
+    dense = dict(T=10, delta=0.5, batch_lambdas=4)
+    ref = SGLSession(prob, SolverConfig(
+        tol=tol, max_epochs=20_000, full_round_every=10 ** 9,
+    )).solve_path(T=10, delta=0.5, batch_lambdas=1)
+    # inner_rounds=1 makes the batch cadence (f_ce * inner_rounds) short
+    # enough that dense warm batches actually reach cadence rounds.
+    knobs = dict(tol=tol, max_epochs=20_000, solver_backend="pallas",
+                 inner_rounds=1)
+    sess = SGLSession(prob, SolverConfig(**knobs))
+    res = sess.solve_path(**dense)
+    assert res.batched_lambdas > 0, "no batch engaged on the dense grid"
+    assert sess.compact_rounds > 0, "batched driver dispatched no " \
+        "compact rounds"
+    assert (res.gaps <= tol).all()
+    # The compact cadence rounds are EXACT: the full-round-only twin
+    # (full_round_every=0 kill switch) walks the identical trajectory.
+    sess_full = SGLSession(prob, SolverConfig(**knobs, full_round_every=0))
+    res_full = sess_full.solve_path(**dense)
+    assert sess_full.compact_rounds == 0
+    np.testing.assert_array_equal(res.betas, res_full.betas)
+    assert np.array_equal(res.epochs, res_full.epochs)
+    # vs the per-lambda XLA reference only tolerance-level equality holds:
+    # batched lambdas warm-start from the batch-entry beta, so the two
+    # converged iterates agree within the gap<=tol basin, not bitwise.
+    np.testing.assert_allclose(res.betas, ref.betas, atol=1e-4)
