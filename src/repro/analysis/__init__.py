@@ -1,0 +1,106 @@
+"""Static analysis gate: jaxpr lints, Pallas launch auditor, certificate
+dataflow lints.
+
+    PYTHONPATH=src python -m repro.analysis --check [--report out.json]
+
+GAP safe screening lives or dies on invariants the type system cannot see:
+certificates must be computed in f64 on the full problem, the hot path must
+never silently materialise a (p, n) transpose or retrace, Pallas tiles must
+fit VMEM and cover their outputs exactly once, and an unsafe rule's
+discards must never flow into a ``safe=True`` result.  This package checks
+all of that *before anything runs*, as a tier-1 test module
+(``tests/test_analysis.py``) and a CI step.
+
+What each pass guarantees
+-------------------------
+``jaxpr`` (:mod:`.jaxpr_lints`)
+    Traces every registered entry point (the solver's jitted rounds and
+    epoch drivers) into a jaxpr on small shape templates derived from
+    ``configs/sgl_paper.py`` and walks every nested eqn:
+
+    * **JX001 dtype demotion** — no ``convert_element_type`` from a f64
+      float to a sub-64-bit float anywhere in a certificate-producing
+      program.  The one sanctioned sub-f64 path is the mesh strategy's f32
+      solves, whose certificate adoption is already runtime-guarded (low-
+      precision rounds are not adopted, see ``session.py``); such specs
+      declare ``min_float_bits=32`` and the exemption is visible in the
+      report.
+    * **JX002/JX003 transpose materialisation** — no ``transpose`` (or
+      design-sized ``gather``) on an operand as large as the design
+      matrix: every (p, n) copy must come from the audited
+      ``kernels.ops.transposed_design`` / ``prepare_transposed``.  This
+      promotes the runtime ``transpose_trace_count`` audit to a static
+      guarantee.
+    * **JX004/JX005 retrace hazards** — each entry point is compiled twice
+      with dtype-identical, freshly-built inputs; any jit-cache growth
+      (weak-type literal splits, unhashable static arguments) is an error
+      and bumps ``kernels.ops.retrace_count()``.
+
+``pallas`` (:mod:`.pallas_audit`)
+    Evaluates every registered kernel's ``BlockSpec`` index maps over the
+    full grid (the same :class:`repro.kernels._util.LaunchSpec` objects
+    the ``pallas_call`` wrappers execute from): no out-of-bounds block
+    reads (PL001), every output block written exactly once over the
+    non-carried grid axes (PL002 gaps / PL003 overlaps), declared carried
+    axes actually invariant (PL005), and the per-grid-step VMEM footprint
+    within budget — 16 MiB by default (PL004).
+
+``cert`` (:mod:`.cert_lint`)
+    AST pass over ``src/repro``: every ``RoundResult``/``PathResult``
+    construction threads ``safe=``/``certificates_safe=`` from rule
+    metadata — never a bare ``True`` literal, never the field default
+    (CS001); no module under ``core/``/``kernels/`` imports the unsafe
+    ``StrongSequentialRule`` (CS002); every rule registered with
+    ``is_safe=True`` appears in the safety-matrix tests (CS003).
+
+Registering new code
+--------------------
+* **New jitted entry point**: ``register_traceable(name, fn)`` at the
+  bottom of its module (:mod:`repro.analysis.registry` is a leaf import),
+  then add a same-named template builder in
+  :mod:`repro.analysis.entrypoints`.  A traceable without a template — or
+  a template without a traceable — is itself a finding (RG001), so the
+  gate forces the pairing.
+* **New Pallas kernel**: build its launch from a ``*_launch_spec()``
+  function (see any module in ``kernels/``) and
+  ``register_kernel_audit(name, builder)`` in ``kernels/ops.py`` with a
+  representative config.
+* **New screening rule**: register it as usual; if ``is_safe=True`` the
+  cert pass requires the safety-matrix tests in ``tests/test_rules.py``
+  to exercise it by name — add it to their parametrize lists.  Results it
+  produces must thread ``safe=rule.is_safe``; a bare ``True`` anywhere in
+  ``src/repro`` outside ``rules/library.py`` fails the gate.
+
+Keeping the gate green is cheap by construction: the lints read the same
+objects the runtime executes (registered jits, executed LaunchSpecs), so
+an honest change only ever needs a registration, never a parallel spec.
+"""
+from __future__ import annotations
+
+__all__ = [
+    "Finding",
+    "kernel_audits",
+    "register_kernel_audit",
+    "register_traceable",
+    "run_checks",
+    "traceables",
+]
+
+from .findings import Finding
+from .registry import (
+    kernel_audits,
+    register_kernel_audit,
+    register_traceable,
+    traceables,
+)
+
+
+def __getattr__(name):
+    # Lazy: .main pulls in jax + the whole solver; the registry/findings
+    # leaves above must stay importable from core/kernels hook sites
+    # without completing that cycle.
+    if name == "run_checks":
+        from .main import run_checks
+
+        return run_checks
+    raise AttributeError(name)

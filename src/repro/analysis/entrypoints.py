@@ -1,0 +1,356 @@
+"""Shape/dtype templates for the jaxpr lints.
+
+Each :class:`EntryPointSpec` pairs one *registered* traceable (see
+:func:`repro.analysis.registry.register_traceable`, called at the bottom
+of ``core/solver.py`` / ``core/session.py`` / ``distributed/
+solver_dist.py``) with a template builder that produces ``(fn, args,
+kwargs)`` ready to trace and execute.  The templates are scaled-down
+``configs/sgl_paper.py`` shapes (same group size ``ng`` and ``tau``, tiny
+``n``/``G``) so tracing is cheap while every structural property the
+lints check — dtypes, transposes, gathers, static-argument hashing — is
+identical to the production shapes.
+
+Several specs can exercise the same traceable under different static
+arguments (rule, backend); :func:`pairing_findings` emits RG001 when a
+registered traceable has no spec at all, or a spec names a traceable
+nobody registered — so a new jitted entry point cannot silently escape
+the gate, and a stale template cannot silently audit nothing.
+
+The one sanctioned sub-f64 program is the mesh strategy's f32 FISTA
+(``dist_fista/f32-mesh`` below, ``min_float_bits=32``): its low-precision
+rounds are never adopted as certificates at runtime (the session re-
+certifies in f64), so float narrowing inside it is by design — the spec
+documents the exemption instead of hiding the program from the lints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, List, Tuple
+
+import numpy as np
+
+from .findings import Finding
+
+__all__ = ["EntryPointSpec", "default_entry_specs", "pairing_findings"]
+
+# Scaled-down sgl-paper template: same ng/tau as configs/sgl_paper.py.
+_N, _G, _NG = 32, 16, 8
+_P = _G * _NG
+_DESIGN_ELEMS = _N * _G * _NG
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPointSpec:
+    """One traceable entry point + the template that drives it.
+
+    ``build()`` returns ``(fn, args, kwargs)``; it is called fresh for
+    every trace/execution so donated buffers are never reused.
+    """
+
+    name: str                           # report label, e.g. screen_round/gap-xla
+    traceable: str                      # registered-traceable name this drives
+    build: Callable[[], Tuple[Callable, tuple, dict]]
+    min_float_bits: int = 64            # JX001 threshold on float narrowing
+    design_elements: int = _DESIGN_ELEMS  # JX002/JX003 size threshold
+    allow_design_transpose: bool = False
+    check_retrace: bool = True
+    note: str = ""
+
+
+@functools.lru_cache(maxsize=None)
+def _template():
+    """Shared template problem (built once; never donated)."""
+    from repro.configs.sgl_paper import CONFIG
+    from repro.core import lambda_max, make_problem
+    from repro.data.synthetic import make_synthetic
+
+    X, y, _beta, sizes = make_synthetic(
+        n=_N, p=_P, n_groups=_G, gamma1=4, gamma2=2, seed=0
+    )
+    problem = make_problem(X, y, sizes, tau=float(CONFIG.tau))
+    lmax = lambda_max(problem)
+    return problem, lmax
+
+
+def _registered(name: str) -> Callable:
+    """The registered jitted object itself — never a re-wrap, so the
+    retrace harness watches the real cache."""
+    import repro.core.session  # noqa: F401  (registers core traceables)
+    import repro.distributed.solver_dist  # noqa: F401  (dist factory)
+    from .registry import traceables
+
+    entry = traceables().get(name)
+    if entry is None:
+        raise KeyError(
+            f"traceable {name!r} is not registered; "
+            f"known: {sorted(traceables())}"
+        )
+    return entry["fn"]
+
+
+def _fresh_state(dtype=None):
+    """Loose per-call arrays, rebuilt for every build() invocation."""
+    import jax.numpy as jnp
+
+    problem, lmax = _template()
+    dtype = dtype or problem.X.dtype
+    beta = jnp.zeros((_G, _NG), dtype)
+    lam = jnp.asarray(0.6, dtype) * jnp.asarray(lmax, dtype)
+    return problem, jnp.asarray(lmax, dtype), beta, lam
+
+
+# --------------------------------------------------------------------------
+# Builders
+# --------------------------------------------------------------------------
+
+def _build_screen_round(rule_name: str, backend: str):
+    def build():
+        from repro.kernels import ops as kops
+        from repro.rules import resolve_rule
+
+        problem, lmax, beta, lam = _fresh_state()
+        fn = _registered("screen_round")
+        kwargs: Dict[str, Any] = {
+            "rule": resolve_rule(rule_name), "backend": backend,
+        }
+        if backend == "pallas":
+            kwargs["xt_pre"] = kops.prepare_transposed(problem.X)
+        return fn, (problem, beta, lam, lmax), kwargs
+
+    return build
+
+
+def _compact_state(backend: str):
+    """Reference state for the compact round: one full round + gather."""
+    import jax.numpy as jnp
+
+    from repro.core import solver as core_solver
+    from repro.kernels import ops as kops
+    from repro.rules import resolve_rule
+
+    problem, lmax, beta, lam = _fresh_state()
+    rule = resolve_rule("gap")
+    rr, resid_ref, ref_terms = core_solver._screen_round(
+        problem, beta, lam, lmax, rule=rule, backend="xla"
+    )
+    group_active = np.asarray(rr.group_active)
+    # keep at least one group in the buffer even if everything screens
+    if not group_active.any():
+        group_active = group_active.copy()
+        group_active[0] = True
+    caches = core_solver.SolveCaches()
+    _idx, take, Xt, _Lg, _w, gmask = caches.gather(problem, group_active)
+    xt_rows = None
+    if backend == "pallas":
+        xt_pre = kops.prepare_transposed(problem.X)
+        xt_rows = caches.gather_xt_rows(problem, group_active, xt_pre)
+    feat_active = jnp.asarray(np.asarray(rr.feat_active))
+    return (problem, Xt, take, gmask, beta, feat_active,
+            jnp.asarray(group_active), ref_terms, resid_ref, lam, xt_rows)
+
+
+def _build_screen_round_compact(backend: str):
+    def build():
+        (problem, Xt, take, gmask, beta, feat_active, group_active,
+         ref_terms, resid_ref, lam, xt_rows) = _compact_state(backend)
+        fn = _registered("screen_round_compact")
+        return fn, (problem, Xt, take, gmask, beta, feat_active,
+                    group_active, ref_terms, resid_ref, lam), {
+                        "backend": backend, "xt_rows": xt_rows}
+
+    return build
+
+
+def _build_inner_rounds(backend: str):
+    def build():
+        import jax.numpy as jnp
+
+        from repro.core import solver as core_solver
+        from repro.kernels import ops as kops
+
+        problem, _lmax, beta, lam = _fresh_state()
+        group_active = np.ones(_G, bool)
+        caches = core_solver.SolveCaches()
+        _idx, take, Xt, Lg, w, gmask = caches.gather(problem, group_active)
+        xt_rows = None
+        if backend == "pallas":
+            xt_pre = kops.prepare_transposed(problem.X)
+            xt_rows = caches.gather_xt_rows(problem, group_active, xt_pre)
+        fn = _registered("inner_rounds")
+        tol = jnp.asarray(1e-8, beta.dtype)
+        return fn, (Xt, Lg, w, problem.y, beta, problem.feat_mask, take,
+                    gmask, problem.tau, lam, tol), {
+                        "block_epochs": 2, "max_blocks": 2,
+                        "backend": backend, "xt_rows": xt_rows}
+
+    return build
+
+
+def _build_bcd_epochs():
+    def build():
+        import jax.numpy as jnp
+
+        from repro.core import solver as core_solver
+
+        problem, _lmax, _beta, lam = _fresh_state()
+        dtype = problem.X.dtype
+        group_active = np.ones(_G, bool)
+        caches = core_solver.SolveCaches()
+        _idx, _take, Xt, Lg, w, gmask = caches.gather(problem, group_active)
+        fmask = problem.feat_mask.astype(dtype)
+        # beta/resid are donated (donate_argnums) — fresh every build()
+        beta = jnp.zeros((_G, _NG), dtype)
+        resid = jnp.array(problem.y, copy=True)
+        fn = _registered("bcd_epochs")
+        return fn, (Xt, Lg * gmask, w, fmask, beta, resid, problem.tau,
+                    lam), {"n_epochs": 2}
+
+    return build
+
+
+def _build_batch_reduced_gaps():
+    def build():
+        import jax.numpy as jnp
+
+        from repro.core import solver as core_solver
+
+        problem, lmax, _beta, _lam = _fresh_state()
+        dtype = problem.X.dtype
+        B = 2
+        group_active = np.ones(_G, bool)
+        caches = core_solver.SolveCaches()
+        _idx, _take, Xt, _Lg, w, _gmask = caches.gather(
+            problem, group_active)
+        fmask_b = jnp.broadcast_to(
+            problem.feat_mask.astype(dtype)[None], (B, _G, _NG))
+        bsub = jnp.zeros((B, _G, _NG), dtype)
+        resid = jnp.broadcast_to(problem.y[None], (B, _N))
+        lam_b = jnp.asarray([0.6, 0.3], dtype) * jnp.asarray(lmax, dtype)
+        fn = _registered("batch_reduced_gaps")
+        return fn, (Xt, fmask_b, bsub, resid, w, problem.y, problem.tau,
+                    lam_b), {"backend": "xla"}
+
+    return build
+
+
+def _build_dist_fista(np_dtype):
+    def build():
+        import jax.numpy as jnp
+
+        from repro.launch.mesh import make_test_mesh
+
+        problem, lmax, _beta, lam = _fresh_state()
+        mesh = make_test_mesh()
+        fn = _registered("dist_step_factory")(
+            mesh, tau=float(problem.tau))
+        dtype = jnp.dtype(np_dtype)
+        X = problem.X.astype(dtype)
+        y = problem.y.astype(dtype)
+        beta = jnp.zeros((_G, _NG), dtype)
+        z = jnp.zeros((_G, _NG), dtype)
+        fmask = problem.feat_mask.astype(dtype)
+        w = problem.w.astype(dtype)
+        t = jnp.asarray(1.0, dtype)
+        L = jnp.asarray(float(_N), dtype)
+        return fn.fista, (X, y, beta, z, fmask, w, t,
+                          jnp.asarray(lam, dtype), L), {}
+
+    return build
+
+
+# --------------------------------------------------------------------------
+# The default spec set + registry pairing check
+# --------------------------------------------------------------------------
+
+def default_entry_specs() -> List[EntryPointSpec]:
+    """Every entry point the jaxpr lints trace, with its template."""
+    return [
+        EntryPointSpec(
+            name="screen_round/gap-xla", traceable="screen_round",
+            build=_build_screen_round("gap", "xla"),
+            note="full certified round, GAP safe sphere (Thm 1/2)",
+        ),
+        EntryPointSpec(
+            name="screen_round/gap-pallas", traceable="screen_round",
+            build=_build_screen_round("gap", "pallas"),
+            note="Pallas corr/dual-norm routing over xt_pre",
+        ),
+        EntryPointSpec(
+            name="screen_round/dynamic-xla", traceable="screen_round",
+            build=_build_screen_round("dynamic", "xla"),
+            note="dynamic-rule variant of the shared skeleton",
+        ),
+        EntryPointSpec(
+            name="screen_round_compact/xla",
+            traceable="screen_round_compact",
+            build=_build_screen_round_compact("xla"),
+            note="O(n p_active) certified round, screened-bound fallback",
+        ),
+        EntryPointSpec(
+            name="screen_round_compact/pallas",
+            traceable="screen_round_compact",
+            build=_build_screen_round_compact("pallas"),
+        ),
+        EntryPointSpec(
+            name="inner_rounds/xla", traceable="inner_rounds",
+            build=_build_inner_rounds("xla"),
+            note="blocked BCD epochs + reduced-gap early exit",
+        ),
+        EntryPointSpec(
+            name="inner_rounds/pallas", traceable="inner_rounds",
+            build=_build_inner_rounds("pallas"),
+            note="fused bcd_epoch mega-kernel path",
+        ),
+        EntryPointSpec(
+            name="bcd_epochs", traceable="bcd_epochs",
+            build=_build_bcd_epochs(),
+            note="lax.scan reference epochs (donated beta/resid)",
+        ),
+        EntryPointSpec(
+            name="batch_reduced_gaps", traceable="batch_reduced_gaps",
+            build=_build_batch_reduced_gaps(),
+            note="batched-lambda work heuristic",
+        ),
+        EntryPointSpec(
+            name="dist_fista/f64-mesh", traceable="dist_step_factory",
+            build=_build_dist_fista(np.float64),
+            check_retrace=False,   # shard_map kernel: no jit cache to watch
+            note="mesh FISTA step on a (1,1) test mesh, full precision",
+        ),
+        EntryPointSpec(
+            name="dist_fista/f32-mesh", traceable="dist_step_factory",
+            build=_build_dist_fista(np.float32),
+            min_float_bits=32, check_retrace=False,
+            note="sanctioned sub-f64 path: f32 mesh solves are never "
+                 "adopted as certificates (session re-certifies in f64)",
+        ),
+    ]
+
+
+def pairing_findings(specs=None) -> List[Finding]:
+    """RG001: registered traceables and templates must pair one-to-one
+    (a traceable may back several specs, but never zero)."""
+    import repro.core.session  # noqa: F401
+    import repro.distributed.solver_dist  # noqa: F401
+    from .registry import traceables
+
+    specs = default_entry_specs() if specs is None else specs
+    registered = set(traceables())
+    templated = {s.traceable for s in specs}
+    findings: List[Finding] = []
+    for name in sorted(registered - templated):
+        findings.append(Finding(
+            pass_name="jaxpr", code="RG001",
+            message=(f"registered traceable {name!r} has no template in "
+                     f"analysis.entrypoints — it escapes the jaxpr lints"),
+            location=name,
+        ))
+    for name in sorted(templated - registered):
+        findings.append(Finding(
+            pass_name="jaxpr", code="RG001",
+            message=(f"template references traceable {name!r} but nothing "
+                     f"registered it — stale spec audits nothing"),
+            location=name,
+        ))
+    return findings

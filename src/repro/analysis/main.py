@@ -1,0 +1,77 @@
+"""Orchestrates the three analysis passes into one findings payload.
+
+Pass order is cheap-to-expensive: the pure-AST cert lints, then the
+static Pallas launch auditor, then the jaxpr lints (which import jax,
+trace every registered entry point, and execute each retrace template
+twice).  ``run_checks`` never raises on a finding — a broken invariant is
+data in the payload; only the CLI turns errors into a non-zero exit.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+from .findings import Finding, to_payload
+
+__all__ = ["run_checks"]
+
+ALL_PASSES = ("cert", "pallas", "jaxpr")
+
+
+def run_checks(passes: Optional[Sequence[str]] = None,
+               *, check_retrace: bool = True) -> Dict[str, Any]:
+    """Run the selected passes (default: all) and assemble the payload.
+
+    ``check_retrace=False`` skips the execute-twice retrace harness (the
+    only part that actually runs the solver) — used by fast test paths;
+    the CI gate always runs everything.
+    """
+    selected = tuple(passes) if passes is not None else ALL_PASSES
+    unknown = [p for p in selected if p not in ALL_PASSES]
+    if unknown:
+        raise ValueError(f"unknown passes {unknown}; choose from "
+                         f"{list(ALL_PASSES)}")
+
+    findings: List[Finding] = []
+    ctx: Dict[str, Dict[str, Any]] = {}
+
+    if "cert" in selected:
+        from . import cert_lint
+
+        before = len(findings)
+        findings += cert_lint.run()
+        ctx["cert"] = {"findings": len(findings) - before}
+
+    if "pallas" in selected:
+        from . import pallas_audit
+        from .registry import kernel_audits
+
+        import repro.kernels.ops  # noqa: F401  (registers the builders)
+
+        before = len(findings)
+        findings += pallas_audit.run()
+        ctx["pallas"] = {
+            "findings": len(findings) - before,
+            "kernels": sorted(kernel_audits()),
+            "vmem_budget_bytes": pallas_audit.DEFAULT_VMEM_BUDGET,
+        }
+
+    if "jaxpr" in selected:
+        from . import jaxpr_lints
+        from .entrypoints import default_entry_specs, pairing_findings
+
+        specs = default_entry_specs()
+        if not check_retrace:
+            import dataclasses
+
+            specs = [dataclasses.replace(s, check_retrace=False)
+                     for s in specs]
+        before = len(findings)
+        findings += pairing_findings(specs)
+        findings += jaxpr_lints.run(specs)
+        ctx["jaxpr"] = {
+            "findings": len(findings) - before,
+            "entry_points": [s.name for s in specs],
+            "retrace_checked": [s.name for s in specs if s.check_retrace],
+        }
+
+    return to_payload(findings, passes=ctx)

@@ -1,0 +1,206 @@
+"""Pallas launch auditor: static BlockSpec/grid evaluation + VMEM budget.
+
+Consumes the :class:`repro.kernels._util.LaunchSpec` objects the kernel
+wrappers execute from (registered in ``kernels/ops.py``), so the audited
+geometry IS the executed geometry.  For each spec the index maps are
+evaluated over the full grid with plain python ints (Pallas index maps
+must be pure shape arithmetic, so this is exact):
+
+* **PL001** out-of-bounds block index on any operand at any grid point —
+  at runtime an OOB read returns garbage-padded tiles (or traps).
+* **PL002** an output block never written over the non-carried grid axes
+  (a gap: stale/undefined memory shipped as a result).
+* **PL003** two non-carried grid points writing the same output block (an
+  overlap: silent last-writer-wins).
+* **PL005** carried-axis declarations that do not match reality: a
+  declared-carried axis the index map actually varies with, or an
+  undeclared axis it is invariant to (an accumulation pattern the
+  analyzer was not told about — every revisit re-fetches the block).
+* **PL004** per-grid-step VMEM footprint (sum of all operand block sizes
+  × dtype width) over the backend budget — 16 MiB, the per-core VMEM of
+  current TPUs.  An over-budget tile today just OOMs at runtime on the
+  compiled path; this is the pre-check for the ROADMAP's compiled-TPU
+  autotuner direction.
+
+Grids larger than ``max_points`` are bounds-checked on an axis-corner
+subsample and skip the exactly-once coverage proof (reported as an info
+finding — no silent cap).
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Tuple
+
+from .findings import Finding
+
+__all__ = ["DEFAULT_VMEM_BUDGET", "audit_launch_spec", "run"]
+
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024   # bytes; ~VMEM per TPU core
+
+
+def _grid_points(grid: Tuple[int, ...], max_points: int):
+    """Full grid enumeration, or axis-corner subsample past ``max_points``.
+
+    Returns ``(points, full)``.
+    """
+    total = 1
+    for g in grid:
+        total *= g
+    if total <= max_points:
+        return list(itertools.product(*(range(g) for g in grid))), True
+    corners = [sorted({0, g // 2, g - 1}) for g in grid]
+    return list(itertools.product(*corners)), False
+
+
+def audit_launch_spec(spec, *, vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                      max_points: int = 200_000,
+                      name: str = "") -> List[Finding]:
+    name = name or spec.name
+    findings: List[Finding] = []
+
+    vmem = spec.vmem_bytes
+    if vmem > vmem_budget:
+        findings.append(Finding(
+            pass_name="pallas", code="PL004",
+            message=(f"VMEM-resident footprint {vmem / 2**20:.2f} MiB per "
+                     f"grid step exceeds the "
+                     f"{vmem_budget / 2**20:.0f} MiB budget"),
+            location=name,
+            details={"vmem_bytes": vmem, "budget_bytes": vmem_budget,
+                     "grid": list(spec.grid)},
+        ))
+
+    points, full = _grid_points(spec.grid, max_points)
+    if not full:
+        findings.append(Finding(
+            pass_name="pallas", code="PL006", severity="info",
+            message=(f"grid {spec.grid} too large to enumerate "
+                     f"(> {max_points} points); bounds checked on axis "
+                     f"corners only, coverage proof skipped"),
+            location=name,
+        ))
+
+    carried = spec.carried or tuple(() for _ in spec.outputs)
+    operands = ([("in", i, a, None) for i, a in enumerate(spec.inputs)]
+                + [("out", i, a, carried[i] if i < len(carried) else ())
+                   for i, a in enumerate(spec.outputs)])
+
+    # per-output bookkeeping for coverage/overlap/invariance
+    seen: List[Dict[tuple, tuple]] = [dict() for _ in spec.outputs]
+    inv_violated = [False] * len(spec.outputs)
+    varies = [set() for _ in spec.outputs]  # grid axes the map varies with
+    prev_by_rest: List[Dict[tuple, Dict[int, tuple]]] = [
+        dict() for _ in spec.outputs
+    ]
+
+    for pt in points:
+        for kind, i, arr, car in operands:
+            idx = tuple(arr.index_map(*pt))
+            nb = arr.nblocks
+            if len(idx) != len(nb) or any(
+                    not (0 <= idx[d] < nb[d]) for d in range(len(nb))):
+                findings.append(Finding(
+                    pass_name="pallas", code="PL001",
+                    message=(f"{kind}[{i}] block index {idx} out of bounds "
+                             f"for {nb} blocks at grid point {pt}"),
+                    location=name,
+                    details={"grid_point": list(pt), "block_index": list(idx),
+                             "nblocks": list(nb)},
+                ))
+                continue
+            if kind != "out":
+                continue
+            # which grid axes does this output's map vary with?
+            for ax in range(len(pt)):
+                key_rest = tuple(v for d, v in enumerate(pt) if d != ax)
+                slot = prev_by_rest[i].setdefault(key_rest, {})
+                if ax in slot and slot[ax] != idx:
+                    varies[i].add(ax)
+                slot[ax] = idx
+            free_key = tuple(v for d, v in enumerate(pt) if d not in car)
+            if free_key in seen[i]:
+                if seen[i][free_key] != idx:
+                    inv_violated[i] = True
+            else:
+                seen[i][free_key] = idx
+
+    for i, arr in enumerate(spec.outputs):
+        car = carried[i] if i < len(carried) else ()
+        if inv_violated[i]:
+            findings.append(Finding(
+                pass_name="pallas", code="PL005",
+                message=(f"out[{i}] index map varies along a grid axis "
+                         f"declared carried {tuple(car)}"),
+                location=name,
+                details={"declared_carried": list(car),
+                         "varies_with": sorted(varies[i])},
+            ))
+            continue
+        undeclared = [ax for ax in range(len(spec.grid))
+                      if ax not in car and ax not in varies[i]
+                      and spec.grid[ax] > 1]
+        if undeclared:
+            findings.append(Finding(
+                pass_name="pallas", code="PL005",
+                message=(f"out[{i}] index map is invariant to grid "
+                         f"axes {undeclared} but they are not declared "
+                         f"carried — undeclared accumulation/carry"),
+                location=name,
+                details={"declared_carried": list(car),
+                         "undeclared_invariant": undeclared},
+            ))
+        if not full:
+            continue
+        # exactly-once coverage over the non-carried projection
+        written = {}
+        for free_key, idx in seen[i].items():
+            if idx in written:
+                findings.append(Finding(
+                    pass_name="pallas", code="PL003",
+                    message=(f"out[{i}] block {idx} written by distinct "
+                             f"non-carried grid points {written[idx]} and "
+                             f"{free_key}"),
+                    location=name,
+                    details={"block_index": list(idx)},
+                ))
+            else:
+                written[idx] = free_key
+        nb = arr.nblocks
+        missing = [idx for idx in itertools.product(
+            *(range(b) for b in nb)) if idx not in written]
+        if missing:
+            findings.append(Finding(
+                pass_name="pallas", code="PL002",
+                message=(f"out[{i}] has {len(missing)} never-written "
+                         f"blocks (first: {missing[0]}) — coverage gap"),
+                location=name,
+                details={"missing": [list(m) for m in missing[:8]],
+                         "n_missing": len(missing)},
+            ))
+    return findings
+
+
+def run(audits=None, *, vmem_budget: int = DEFAULT_VMEM_BUDGET
+        ) -> List[Finding]:
+    """Audit every registered kernel launch spec (or the given mapping)."""
+    if audits is None:
+        import repro.kernels.ops  # noqa: F401  (registers the builders)
+        from .registry import kernel_audits
+
+        audits = kernel_audits()
+    findings: List[Finding] = []
+    for name, builder in sorted(audits.items()):
+        try:
+            spec = builder()
+        except Exception as e:
+            findings.append(Finding(
+                pass_name="pallas", code="PL000",
+                message=(f"launch-spec builder failed: "
+                         f"{type(e).__name__}: {e}"),
+                location=name,
+            ))
+            continue
+        findings.extend(
+            audit_launch_spec(spec, vmem_budget=vmem_budget, name=name)
+        )
+    return findings

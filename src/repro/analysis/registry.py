@@ -1,0 +1,66 @@
+"""Leaf registries wiring the codebase into the static analyzer.
+
+This module imports NOTHING from :mod:`repro` (and nothing heavy at all),
+so the hook sites can register themselves at import time without cycles:
+
+* :func:`register_traceable` — called at the bottom of
+  ``repro/core/solver.py`` / ``repro/core/session.py`` to expose their
+  jitted entry points (the objects whose jaxprs the lints walk and whose
+  jit caches the retrace harness watches).  The analyzer pairs each
+  registered name with a shape/dtype template in
+  :mod:`repro.analysis.entrypoints`; a registered traceable without a
+  template (or vice versa) is itself a finding, so a new entry point
+  cannot silently escape the gate.
+* :func:`register_kernel_audit` — called at the bottom of
+  ``repro/kernels/ops.py`` with zero-argument builders returning the
+  :class:`repro.kernels._util.LaunchSpec` for representative configs; the
+  Pallas auditor (:mod:`repro.analysis.pallas_audit`) evaluates every
+  registered spec.
+
+Registration is idempotent by name (last wins) so re-imports under test
+runners never trip a duplicate guard.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+__all__ = [
+    "kernel_audits",
+    "register_kernel_audit",
+    "register_traceable",
+    "traceables",
+]
+
+_TRACEABLES: Dict[str, Dict[str, Any]] = {}
+_KERNEL_AUDITS: Dict[str, Callable[[], Any]] = {}
+
+
+def register_traceable(name: str, fn: Callable, **meta: Any) -> Callable:
+    """Expose a jitted entry point to the jaxpr lints under ``name``.
+
+    ``fn`` must be the *jitted* object actually dispatched at runtime (not
+    a re-wrap), so the retrace harness measures the real cache.  ``meta``
+    is free-form context surfaced in findings (e.g. ``module=``).
+    """
+    _TRACEABLES[name] = {"fn": fn, **meta}
+    return fn
+
+
+def traceables() -> Dict[str, Dict[str, Any]]:
+    return dict(_TRACEABLES)
+
+
+def register_kernel_audit(name: str,
+                          builder: Callable[[], Any]) -> Callable[[], Any]:
+    """Register a zero-argument LaunchSpec builder for the Pallas auditor.
+
+    The builder should return the launch geometry for a *representative*
+    config (shapes a real solve would use); over-budget or ill-covered
+    geometry fails the gate before it can OOM or corrupt at runtime.
+    """
+    _KERNEL_AUDITS[name] = builder
+    return builder
+
+
+def kernel_audits() -> Dict[str, Callable[[], Any]]:
+    return dict(_KERNEL_AUDITS)

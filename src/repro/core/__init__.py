@@ -1,5 +1,11 @@
 """Core library: the paper's contribution (GAP safe screening for SGL)."""
-from .epsilon_norm import (
+from .precision import ensure_x64
+
+# Certificates are only certificates in f64 — enforce the posture before
+# any submodule can build an array (see repro.core.precision).
+ensure_x64()
+
+from .epsilon_norm import (  # noqa: E402
     epsilon_decomposition,
     epsilon_norm,
     epsilon_norm_dual,
@@ -48,6 +54,10 @@ from .solver import (
 from .session import SGLSession, SolverConfig
 from .elastic import make_elastic_problem, elastic_objective
 from .path import PathResult, lambda_grid, solve_path
+# NOTE: the unsafe StrongSequentialRule is deliberately NOT re-exported
+# here — the solver layer only ever sees the ScreeningRule protocol
+# (enforced by the CS002 lint in repro.analysis.cert_lint); import it
+# from repro.rules where its heuristic nature is documented.
 from ..rules import (
     GapSafeRule,
     ScreeningRule,
@@ -55,7 +65,6 @@ from ..rules import (
     DynamicSafeRule,
     Dst3Rule,
     NoScreening,
-    StrongSequentialRule,
     available_rules,
     get_rule,
     register_rule,
@@ -63,6 +72,7 @@ from ..rules import (
 )
 
 __all__ = [
+    "ensure_x64",
     "SGLProblem", "make_problem", "problem_from_grouped",
     "SGLSession", "SolverConfig",
     "solve", "solve_path", "lambda_grid",
@@ -77,6 +87,6 @@ __all__ = [
     "bcd_epochs", "screen_round", "resolve_screen_backend",
     "make_elastic_problem", "elastic_objective", "flatten", "unflatten",
     "ScreeningRule", "GapSafeRule", "StaticSafeRule", "DynamicSafeRule",
-    "Dst3Rule", "NoScreening", "StrongSequentialRule",
+    "Dst3Rule", "NoScreening",
     "available_rules", "get_rule", "register_rule", "resolve_rule",
 ]

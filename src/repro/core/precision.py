@@ -1,0 +1,58 @@
+"""Explicit f64 posture for every certificate-producing computation.
+
+The GAP safe guarantee (paper Thm 1/2) is only as good as the arithmetic
+the certificate is evaluated in: the duality gap, the Eq. 15 dual
+scaling, and the sphere radii must be computed in full f64 precision on
+the full problem.  JAX defaults to f32 unless ``jax_enable_x64`` is set,
+and a silently-f32 "certificate" is the worst kind of bug — numerically
+plausible, formally worthless.
+
+:func:`ensure_x64` is called when :mod:`repro.core` is first imported
+(before any array can be built by solver code), so every front end — the
+test suite, the benchmark drivers, ``python -m repro.analysis`` — gets
+the same posture without each having to remember an environment
+variable.  The jaxpr lints (JX001, :mod:`repro.analysis.jaxpr_lints`)
+then verify statically that no traced program demotes a float below f64.
+
+The ONE sanctioned sub-f64 path is the mesh strategy's low-precision
+FISTA solves (``SGLSession`` over a mesh with a non-f64 dtype): those
+rounds are never adopted as certificates — the session re-certifies in
+f64 before reporting — and the analysis gate documents the exemption via
+the ``dist_fista/f32-mesh`` entry spec (``min_float_bits=32``).  Enabling
+x64 does not forbid f32 arrays; it only stops f64 requests from being
+silently truncated.
+
+Set ``REPRO_ALLOW_F32=1`` to skip enforcement entirely (e.g. profiling
+runs on accelerators without f64 support); certificates produced under
+that escape hatch are NOT trustworthy and the variable exists so the
+choice is loud and greppable.
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["ensure_x64"]
+
+
+def ensure_x64() -> bool:
+    """Enable (and verify) ``jax_enable_x64``; returns True when enforced.
+
+    Raises ``RuntimeError`` if x64 cannot be enabled — e.g. another
+    library froze the config after arrays were created — instead of
+    letting certificate arithmetic silently truncate to f32.
+    """
+    if os.environ.get("REPRO_ALLOW_F32") == "1":
+        return False
+    import jax
+
+    if not jax.config.read("jax_enable_x64"):
+        jax.config.update("jax_enable_x64", True)
+    if not jax.config.read("jax_enable_x64"):   # pragma: no cover
+        raise RuntimeError(
+            "repro.core requires jax_enable_x64 for certificate "
+            "arithmetic, but it could not be enabled. Set "
+            "JAX_ENABLE_X64=1 before importing jax, or export "
+            "REPRO_ALLOW_F32=1 to explicitly accept untrustworthy "
+            "f32 certificates."
+        )
+    return True

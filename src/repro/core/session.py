@@ -141,15 +141,7 @@ __all__ = [
 _UNSET = object()
 
 
-class SolverConfig(NamedTuple):
-    """Frozen bundle of every solver knob (formerly 13 loose kwargs).
-
-    Field names match the legacy ``solve``/``solve_path`` keyword arguments
-    one-to-one; anything not listed here (``lam_``, ``beta0``,
-    ``first_round``, ``lambdas``, ``sequential``) is per-call state and
-    lives on the session methods instead.
-    """
-
+class _SolverConfigFields(NamedTuple):
     tol: float = 1e-8              # duality-gap stopping threshold
     max_epochs: int = 10_000       # BCD epochs (FISTA steps on a mesh)
     f_ce: int = 10                 # epochs between certified rounds
@@ -182,6 +174,37 @@ class SolverConfig(NamedTuple):
                                    #   reference.  Single-device strategy
                                    #   only (the mesh strategy's FISTA
                                    #   kernels have their own dispatch).
+
+
+class SolverConfig(_SolverConfigFields):
+    """Frozen bundle of every solver knob (formerly 13 loose kwargs).
+
+    Field names match the legacy ``solve``/``solve_path`` keyword arguments
+    one-to-one; anything not listed here (``lam_``, ``beta0``,
+    ``first_round``, ``lambdas``, ``sequential``) is per-call state and
+    lives on the session methods instead.
+
+    Backend knobs are validated at *construction*: an unknown
+    ``screen_backend``/``solver_backend`` raises here with the valid
+    choices, instead of surfacing as a jit-time ``ValueError`` deep inside
+    the first certified round (typos used to cost a full problem build +
+    trace before failing).
+    """
+
+    __slots__ = ()
+
+    _BACKENDS = ("auto", "xla", "pallas")
+
+    def __new__(cls, *args, **kwargs):
+        self = super().__new__(cls, *args, **kwargs)
+        for knob in ("screen_backend", "solver_backend"):
+            val = getattr(self, knob)
+            if val not in cls._BACKENDS:
+                raise ValueError(
+                    f"unknown {knob.replace('_', ' ')}: {val!r} "
+                    f"(choose one of {'|'.join(cls._BACKENDS)})"
+                )
+        return self
 
 
 def lambda_grid(lam_max: float, T: int = 100, delta: float = 3.0) -> np.ndarray:
@@ -483,7 +506,10 @@ class SGLSession:
         self.rounds += 1
         self.compact_rounds += 1
         self._rounds_since_full += 1
-        return RoundResult(gap, theta, g_keep, f_keep, True)
+        # Compact rounds only run under the (safe) gap rule — see
+        # supports_compact — but thread the metadata rather than claim it.
+        return RoundResult(gap, theta, g_keep, f_keep, compact=True,
+                           safe=self.rule.is_safe)
 
     # -- the three front-end methods ---------------------------------------
 
@@ -1356,7 +1382,8 @@ class _DistStrategy:
         fmask, gmask, gap, _sc = self._round(lam_, beta, fm0)
         # theta stays sharded on the mesh; certificates travel as masks.
         return RoundResult(gap, None, np.asarray(gmask) > 0,
-                           np.asarray(fmask) > 0)
+                           np.asarray(fmask) > 0,
+                           safe=self.session.rule.is_safe)
 
     # -- single-lambda solve ------------------------------------------------
 
@@ -1701,6 +1728,7 @@ class _DistStrategy:
                     first = RoundResult(
                         cert[2], None, np.asarray(cert[1]) > 0,
                         np.asarray(cert[0]) > 0,
+                        safe=s.rule.is_safe,
                     )
                     n_seq_active = int(np.asarray(first.group_active).sum())
                 res = self.solve(float(lambdas[t]), beta0=beta,
@@ -1749,4 +1777,16 @@ class _DistStrategy:
             n_fused_epoch_launches=0,   # BCD mega-kernel is single-device;
                                         # the mesh inner solver is FISTA
             batched_lambdas=s.batched_lambdas - batched0,
+            rule_name=s.rule.name,
+            certificates_safe=s.rule.is_safe,
         )
+
+
+# ----------------------------------------------------------------------------
+# Static-analysis hook (see repro.analysis.entrypoints for the template)
+# ----------------------------------------------------------------------------
+
+from ..analysis.registry import register_traceable  # noqa: E402
+
+register_traceable("batch_reduced_gaps", _batch_reduced_gaps,
+                   module=__name__, kind="jit")

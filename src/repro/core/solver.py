@@ -735,3 +735,21 @@ def solve(
     return session.solve(
         lam_, beta0=beta0, first_round=first_round, lam_max=lam_max
     )
+
+
+# ----------------------------------------------------------------------------
+# Static-analysis hooks: expose the jitted entry points to the jaxpr lints
+# (repro.analysis.registry is a leaf import — no cycle).  Each name pairs
+# with a shape template in repro.analysis.entrypoints.
+# ----------------------------------------------------------------------------
+
+from ..analysis.registry import register_traceable  # noqa: E402
+
+register_traceable("screen_round", _screen_round,
+                   module=__name__, kind="jit")
+register_traceable("screen_round_compact", _screen_round_compact,
+                   module=__name__, kind="jit")
+register_traceable("inner_rounds", _inner_rounds,
+                   module=__name__, kind="jit")
+register_traceable("bcd_epochs", bcd_epochs,
+                   module=__name__, kind="jit")

@@ -279,3 +279,15 @@ def solve_distributed(
     res = session.solve(lam_)
     feat_mask = jnp.asarray(res.feat_active, problem.X.dtype)
     return res.beta, float(res.gap), res.gap_history, feat_mask
+
+
+# ----------------------------------------------------------------------------
+# Static-analysis hook: the mesh kernels are built per-mesh, so the factory
+# itself is registered; the analysis template instantiates it on the (1, 1)
+# test mesh (repro.analysis.entrypoints, dist_fista/* specs).
+# ----------------------------------------------------------------------------
+
+from ..analysis.registry import register_traceable  # noqa: E402
+
+register_traceable("dist_step_factory", make_dist_step,
+                   module=__name__, kind="factory")

@@ -1,13 +1,25 @@
-"""Shared backend predicates for the Pallas kernels.
+"""Shared backend predicates + launch-spec metadata for the Pallas kernels.
 
 Leaf module (imports nothing from this package) so both the kernel entry
 points and their dispatch wrappers in ops.py — and the solver — can use one
 spelling of the "are we on TPU" test.  When Pallas gains another compiled
 backend, this is the only place to update.
+
+:class:`LaunchSpec` / :class:`ArraySpec` are the *auditable* description of
+a ``pallas_call`` launch: every kernel module builds its grid and
+``BlockSpec``s from a ``*_launch_spec()`` function returning one of these,
+and the SAME object feeds both the actual launch (via :func:`block_specs` /
+:func:`out_shapes`) and the static analyzer
+(:mod:`repro.analysis.pallas_audit`), so the audited geometry can never
+drift from the executed one.
 """
 from __future__ import annotations
 
+from typing import Any, Callable, NamedTuple, Tuple
+
 import jax
+import numpy as np
+from jax.experimental import pallas as pl
 
 
 def on_tpu() -> bool:
@@ -17,3 +29,59 @@ def on_tpu() -> bool:
 def default_interpret() -> bool:
     """Pallas interpret-mode default: compile on TPU, interpret elsewhere."""
     return not on_tpu()
+
+
+class ArraySpec(NamedTuple):
+    """One pallas_call operand: full shape, block shape, index map, dtype.
+
+    ``index_map`` takes the grid coordinates (python ints work — Pallas
+    index maps must be pure shape arithmetic) and returns the *block*
+    indices, exactly as passed to ``pl.BlockSpec``.
+    """
+
+    shape: Tuple[int, ...]
+    block: Tuple[int, ...]
+    index_map: Callable[..., Tuple[int, ...]]
+    dtype: Any = "float64"
+
+    @property
+    def block_bytes(self) -> int:
+        return int(np.prod(self.block)) * np.dtype(self.dtype).itemsize
+
+    @property
+    def nblocks(self) -> Tuple[int, ...]:
+        return tuple(-(-s // b) for s, b in zip(self.shape, self.block))
+
+
+class LaunchSpec(NamedTuple):
+    """Auditable description of one ``pallas_call`` launch.
+
+    ``carried``: per-output tuple of grid axes the output's index map is
+    declared invariant to — the VMEM-resident accumulation/carry pattern
+    (e.g. the corr tile accumulating over the K axis, the BCD state carried
+    across epoch/group-tile steps).  The auditor *verifies* the invariance
+    and exempts exactly these axes from the exactly-once coverage check;
+    an undeclared invariant axis (or a declared one that is not invariant)
+    is a finding.
+    """
+
+    name: str
+    grid: Tuple[int, ...]
+    inputs: Tuple[ArraySpec, ...]
+    outputs: Tuple[ArraySpec, ...]
+    carried: Tuple[Tuple[int, ...], ...] = ()
+    note: str = ""
+
+    @property
+    def vmem_bytes(self) -> int:
+        """VMEM-resident footprint of one grid step (all operand blocks)."""
+        return sum(a.block_bytes for a in self.inputs + self.outputs)
+
+
+def block_specs(arrays) -> list:
+    """``pl.BlockSpec`` list for the launch, straight from the ArraySpecs."""
+    return [pl.BlockSpec(a.block, a.index_map) for a in arrays]
+
+
+def out_shapes(arrays) -> list:
+    return [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in arrays]

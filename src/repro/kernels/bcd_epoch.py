@@ -64,7 +64,55 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ._util import default_interpret
+from ._util import ArraySpec, LaunchSpec, block_specs, default_interpret, out_shapes
+
+
+def bcd_epoch_launch_spec(
+    B: int,
+    Gb: int,
+    n: int,
+    ng: int,
+    n_epochs: int,
+    *,
+    block_g: int = 8,
+    dtype="float64",
+) -> LaunchSpec:
+    """Auditable launch geometry of :func:`bcd_epoch_pallas`.
+
+    Both outputs are VMEM-resident across the epoch (axis 1) and group-tile
+    (axis 2) grid axes — the carried-state pattern the module docstring
+    describes — hence ``carried=((1, 2), (1, 2))``.
+    """
+    return LaunchSpec(
+        name="bcd_epoch",
+        grid=(B, n_epochs, Gb // block_g),
+        inputs=(
+            ArraySpec((Gb, n, ng), (block_g, n, ng),
+                      lambda b, e, g: (g, 0, 0), dtype),        # design tile
+            ArraySpec((Gb, 1), (block_g, 1),
+                      lambda b, e, g: (g, 0), dtype),           # Lg
+            ArraySpec((Gb, 1), (block_g, 1),
+                      lambda b, e, g: (g, 0), dtype),           # w
+            ArraySpec((B, Gb, ng), (1, block_g, ng),
+                      lambda b, e, g: (b, g, 0), dtype),        # feat mask
+            ArraySpec((B, 1), (1, 1),
+                      lambda b, e, g: (b, 0), dtype),           # lam
+            ArraySpec((1, 1), (1, 1),
+                      lambda b, e, g: (0, 0), dtype),           # tau
+            ArraySpec((B, Gb, ng), (1, Gb, ng),
+                      lambda b, e, g: (b, 0, 0), dtype),        # beta0
+            ArraySpec((B, n), (1, n),
+                      lambda b, e, g: (b, 0), dtype),           # resid0
+        ),
+        outputs=(
+            ArraySpec((B, Gb, ng), (1, Gb, ng),
+                      lambda b, e, g: (b, 0, 0), dtype),        # beta
+            ArraySpec((B, n), (1, n),
+                      lambda b, e, g: (b, 0), dtype),           # resid
+        ),
+        carried=((1, 2), (1, 2)),
+        note="fused BCD epoch mega-kernel; VMEM-carried beta/resid",
+    )
 
 
 def _bcd_epoch_kernel(
@@ -146,28 +194,14 @@ def bcd_epoch_pallas(
     n = Xt.shape[1]
     assert Xt.shape == (Gb, n, ng), (Xt.shape, beta.shape)
     assert Gb % block_g == 0, (Gb, block_g)
-    grid = (B, n_epochs, Gb // block_g)
+    spec = bcd_epoch_launch_spec(B, Gb, n, ng, n_epochs, block_g=block_g,
+                                 dtype=beta.dtype)
     return pl.pallas_call(
         functools.partial(_bcd_epoch_kernel, block_g=block_g),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_g, n, ng), lambda b, e, g: (g, 0, 0)),
-            pl.BlockSpec((block_g, 1), lambda b, e, g: (g, 0)),
-            pl.BlockSpec((block_g, 1), lambda b, e, g: (g, 0)),
-            pl.BlockSpec((1, block_g, ng), lambda b, e, g: (b, g, 0)),
-            pl.BlockSpec((1, 1), lambda b, e, g: (b, 0)),
-            pl.BlockSpec((1, 1), lambda b, e, g: (0, 0)),
-            pl.BlockSpec((1, Gb, ng), lambda b, e, g: (b, 0, 0)),
-            pl.BlockSpec((1, n), lambda b, e, g: (b, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((1, Gb, ng), lambda b, e, g: (b, 0, 0)),
-            pl.BlockSpec((1, n), lambda b, e, g: (b, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((B, Gb, ng), beta.dtype),
-            jax.ShapeDtypeStruct((B, n), resid.dtype),
-        ],
+        grid=spec.grid,
+        in_specs=block_specs(spec.inputs),
+        out_specs=block_specs(spec.outputs),
+        out_shape=out_shapes(spec.outputs),
         interpret=interpret,
     )(
         Xt,

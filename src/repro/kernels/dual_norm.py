@@ -18,7 +18,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ._util import default_interpret
+from ._util import ArraySpec, LaunchSpec, block_specs, default_interpret, out_shapes
+
+
+def dual_norm_launch_spec(G: int, ng: int, *, block_g: int = 256,
+                          dtype="float64") -> LaunchSpec:
+    """Auditable launch geometry of :func:`dual_norm_pallas`: 1-D grid over
+    group tiles, every operand tiled the same way, no carried state."""
+    col = ArraySpec((G, 1), (block_g, 1), lambda i: (i, 0), dtype)
+    return LaunchSpec(
+        name="dual_norm",
+        grid=(G // block_g,),
+        inputs=(
+            ArraySpec((G, ng), (block_g, ng), lambda i: (i, 0), dtype),
+            col,   # alpha
+            col,   # R
+        ),
+        outputs=(col,),
+        carried=((),),
+        note="per-group epsilon-norm bisection",
+    )
 
 
 def _dual_norm_kernel(x_ref, alpha_ref, R_ref, out_ref, *, n_iter: int):
@@ -64,17 +83,13 @@ def dual_norm_pallas(
         interpret = default_interpret()
     G, ng = x.shape
     assert G % block_g == 0, (G, block_g)
-    grid = (G // block_g,)
+    spec = dual_norm_launch_spec(G, ng, block_g=block_g, dtype=x.dtype)
     out = pl.pallas_call(
         functools.partial(_dual_norm_kernel, n_iter=n_iter),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_g, ng), lambda i: (i, 0)),
-            pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((G, 1), x.dtype),
+        grid=spec.grid,
+        in_specs=block_specs(spec.inputs),
+        out_specs=block_specs(spec.outputs)[0],
+        out_shape=out_shapes(spec.outputs)[0],
         interpret=interpret,
     )(x, alpha[:, None], R[:, None])
     return out[:, 0]

@@ -34,7 +34,49 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ._util import default_interpret
+from ._util import ArraySpec, LaunchSpec, block_specs, default_interpret, out_shapes
+
+
+def _corr_io_specs(p: int, n: int, block_p: int, block_n: int, dtype):
+    """Shared (Xt, theta) input + (p, 1) accumulator output geometry of the
+    blocked correlation matvec.  The output tile accumulates over the K
+    (sample) grid axis — carried axis 1."""
+    inputs = (
+        ArraySpec((p, n), (block_p, block_n), lambda i, k: (i, k), dtype),
+        ArraySpec((n, 1), (block_n, 1), lambda i, k: (k, 0), dtype),
+    )
+    out = ArraySpec((p, 1), (block_p, 1), lambda i, k: (i, 0), dtype)
+    return inputs, out
+
+
+def screening_scores_launch_spec(p: int, n: int, *, block_p: int = 256,
+                                 block_n: int = 128,
+                                 dtype="float64") -> LaunchSpec:
+    """Auditable launch geometry of :func:`screening_scores_pallas`."""
+    inputs, out = _corr_io_specs(p, n, block_p, block_n, dtype)
+    return LaunchSpec(
+        name="screening_scores",
+        grid=(p // block_p, n // block_n),
+        inputs=inputs,
+        outputs=(out, out),
+        carried=((1,), (1,)),
+        note="fused corr + S_tau(corr)^2; corr accumulates over K",
+    )
+
+
+def screening_corr_launch_spec(p: int, n: int, *, block_p: int = 256,
+                               block_n: int = 128,
+                               dtype="float64") -> LaunchSpec:
+    """Auditable launch geometry of :func:`screening_corr_pallas`."""
+    inputs, out = _corr_io_specs(p, n, block_p, block_n, dtype)
+    return LaunchSpec(
+        name="screening_corr",
+        grid=(p // block_p, n // block_n),
+        inputs=inputs,
+        outputs=(out,),
+        carried=((1,),),
+        note="corr-only variant for the certified gap round",
+    )
 
 
 def _screening_kernel(xt_ref, theta_ref, corr_ref, st2_ref, *, tau: float, nk: int):
@@ -67,22 +109,14 @@ def screening_scores_pallas(
     p, n = Xt.shape
     assert p % block_p == 0 and n % block_n == 0, (p, n, block_p, block_n)
     nk = n // block_n
-    grid = (p // block_p, nk)
+    spec = screening_scores_launch_spec(p, n, block_p=block_p,
+                                        block_n=block_n, dtype=Xt.dtype)
     corr, st2 = pl.pallas_call(
         functools.partial(_screening_kernel, tau=float(tau), nk=nk),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_p, block_n), lambda i, k: (i, k)),
-            pl.BlockSpec((block_n, 1), lambda i, k: (k, 0)),
-        ],
-        out_specs=[
-            pl.BlockSpec((block_p, 1), lambda i, k: (i, 0)),
-            pl.BlockSpec((block_p, 1), lambda i, k: (i, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((p, 1), Xt.dtype),
-            jax.ShapeDtypeStruct((p, 1), Xt.dtype),
-        ],
+        grid=spec.grid,
+        in_specs=block_specs(spec.inputs),
+        out_specs=block_specs(spec.outputs),
+        out_shape=out_shapes(spec.outputs),
         interpret=interpret,
     )(Xt, theta[:, None])
     return corr[:, 0], st2[:, 0]
@@ -117,16 +151,14 @@ def screening_corr_pallas(
     p, n = Xt.shape
     assert p % block_p == 0 and n % block_n == 0, (p, n, block_p, block_n)
     nk = n // block_n
-    grid = (p // block_p, nk)
+    spec = screening_corr_launch_spec(p, n, block_p=block_p,
+                                      block_n=block_n, dtype=Xt.dtype)
     corr = pl.pallas_call(
         functools.partial(_corr_kernel, nk=nk),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_p, block_n), lambda i, k: (i, k)),
-            pl.BlockSpec((block_n, 1), lambda i, k: (k, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_p, 1), lambda i, k: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((p, 1), Xt.dtype),
+        grid=spec.grid,
+        in_specs=block_specs(spec.inputs),
+        out_specs=block_specs(spec.outputs)[0],
+        out_shape=out_shapes(spec.outputs)[0],
         interpret=interpret,
     )(Xt, theta[:, None])
     return corr[:, 0]

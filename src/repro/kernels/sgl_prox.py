@@ -17,7 +17,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from ._util import default_interpret
+from ._util import ArraySpec, LaunchSpec, block_specs, default_interpret, out_shapes
+
+
+def sgl_prox_launch_spec(G: int, ng: int, *, block_g: int = 256,
+                         dtype="float64") -> LaunchSpec:
+    """Auditable launch geometry of :func:`sgl_prox_pallas`."""
+    tile = ArraySpec((G, ng), (block_g, ng), lambda i: (i, 0), dtype)
+    col = ArraySpec((G, 1), (block_g, 1), lambda i: (i, 0), dtype)
+    return LaunchSpec(
+        name="sgl_prox",
+        grid=(G // block_g,),
+        inputs=(tile, col, col),
+        outputs=(tile,),
+        carried=((),),
+        note="fused two-level SGL prox",
+    )
 
 
 def _sgl_prox_kernel(beta_ref, step_ref, w_ref, out_ref, *, tau: float, lam: float):
@@ -49,16 +64,12 @@ def sgl_prox_pallas(
         interpret = default_interpret()
     G, ng = beta.shape
     assert G % block_g == 0, (G, block_g)
-    grid = (G // block_g,)
+    spec = sgl_prox_launch_spec(G, ng, block_g=block_g, dtype=beta.dtype)
     return pl.pallas_call(
         functools.partial(_sgl_prox_kernel, tau=float(tau), lam=float(lam)),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((block_g, ng), lambda i: (i, 0)),
-            pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
-            pl.BlockSpec((block_g, 1), lambda i: (i, 0)),
-        ],
-        out_specs=pl.BlockSpec((block_g, ng), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((G, ng), beta.dtype),
+        grid=spec.grid,
+        in_specs=block_specs(spec.inputs),
+        out_specs=block_specs(spec.outputs)[0],
+        out_shape=out_shapes(spec.outputs)[0],
         interpret=interpret,
     )(beta, step[:, None], w[:, None])

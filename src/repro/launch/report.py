@@ -12,6 +12,11 @@ payload (``BENCH_pr5.json`` schema) into the markdown report — kept here so
 ``repro.launch.reanalyze --sweep`` can re-render a saved sweep after
 renderer improvements without re-running any solver, the same
 recompute-free pattern the dry-run HLO reanalysis uses.
+
+:func:`render_analysis_markdown` does the same for the static-analysis
+gate's JSON payload (``repro.analysis/v1`` schema, see
+``python -m repro.analysis --check --report``): the saved findings JSON is
+the source of truth and the markdown is always re-renderable from it.
 """
 from __future__ import annotations
 
@@ -257,6 +262,59 @@ def render_sweep_markdown(payload: dict) -> str:
                        "converge (the reported duality gap is always "
                        "full-problem exact).")
             out.append("")
+    return "\n".join(out)
+
+
+def render_analysis_markdown(payload: dict) -> str:
+    """Markdown report for a ``repro.analysis/v1`` findings payload.
+
+    One section per pass (what was checked, finding count), then a table
+    of every finding sorted error-first.  The JSON is the machine artifact
+    (CI uploads both); this rendering is re-runnable from the saved JSON
+    without re-tracing anything.
+    """
+    summary = payload.get("summary", {})
+    passes = payload.get("passes", {})
+    findings = payload.get("findings", [])
+    verdict = "PASS" if payload.get("ok") else "FAIL"
+    out = [f"# Static-analysis gate — {verdict}", ""]
+    out.append(f"{summary.get('errors', 0)} errors, "
+               f"{summary.get('warnings', 0)} warnings, "
+               f"{summary.get('infos', 0)} info findings "
+               f"({len(passes)} passes).")
+    out.append("")
+    for name, ctx in sorted(passes.items()):
+        out.append(f"## pass `{name}` — {ctx.get('findings', 0)} findings")
+        out.append("")
+        if "entry_points" in ctx:
+            out.append(f"- traced entry points: "
+                       f"{', '.join(ctx['entry_points'])}")
+            out.append(f"- retrace-checked: "
+                       f"{', '.join(ctx.get('retrace_checked', [])) or '—'}")
+        if "kernels" in ctx:
+            out.append(f"- audited kernel launches: "
+                       f"{', '.join(ctx['kernels'])}")
+            budget = ctx.get("vmem_budget_bytes")
+            if budget:
+                out.append(f"- VMEM budget: {budget / 2**20:.0f} MiB per "
+                           f"grid step")
+        out.append("")
+    if findings:
+        rank = {"error": 0, "warning": 1, "info": 2}
+        out.append("## Findings")
+        out.append("")
+        out.append("| severity | pass | code | location | message |")
+        out.append("|---|---|---|---|---|")
+        for f in sorted(findings,
+                        key=lambda f: (rank.get(f["severity"], 3),
+                                       f["pass_name"], f["code"])):
+            msg = f["message"].replace("|", "\\|").replace("\n", " ")
+            out.append(f"| {f['severity']} | {f['pass_name']} | "
+                       f"{f['code']} | `{f['location']}` | {msg} |")
+        out.append("")
+    else:
+        out.append("No findings: every checked invariant holds.")
+        out.append("")
     return "\n".join(out)
 
 

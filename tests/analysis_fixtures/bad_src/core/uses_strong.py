@@ -1,0 +1,10 @@
+"""Seeded CS002 violation: a solver-layer module naming the unsafe rule.
+
+Fixture for tests/test_analysis.py — parsed, never imported.
+"""
+from repro.rules import StrongSequentialRule
+
+
+def pick_rule():
+    # CS002: core/ special-casing the unsafe heuristic
+    return StrongSequentialRule(shrink=0.5)

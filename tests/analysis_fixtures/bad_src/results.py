@@ -1,0 +1,42 @@
+"""Seeded CS001 violations: every way a safety claim can be forged.
+
+This file is a FIXTURE for tests/test_analysis.py — it is never imported,
+only parsed.  Each construction below must be flagged by
+repro.analysis.cert_lint.lint_result_constructions; the clean ones must
+not.
+"""
+
+
+def forged_keyword(gap, theta, g, f):
+    # CS001: hard-coded literal claim
+    return RoundResult(gap, theta, g, f, safe=True)          # noqa: F821
+
+
+def forged_positional(gap, theta, g, f):
+    # CS001: literal True smuggled through the positional safe slot
+    return RoundResult(gap, theta, g, f, False, True)        # noqa: F821
+
+
+def omitted_key(gap, theta, g, f):
+    # CS001: omission silently claims safety via the field default
+    return RoundResult(gap, theta, g, f)                     # noqa: F821
+
+
+def omitted_path_key(lambdas, betas):
+    # CS001: PathResult without certificates_safe=
+    return PathResult(lambdas=lambdas, betas=betas)          # noqa: F821
+
+
+def clean_threaded(gap, theta, g, f, rule):
+    # fine: threaded from rule metadata
+    return RoundResult(gap, theta, g, f, safe=rule.is_safe)  # noqa: F821
+
+
+def clean_rewrap(r):
+    # fine: the bit travels through the star
+    return RoundResult(*r)                                   # noqa: F821
+
+
+def clean_kwargs_forward(lambdas, **kw):
+    # fine: the bit travels through **kw
+    return PathResult(lambdas=lambdas, **kw)                 # noqa: F821

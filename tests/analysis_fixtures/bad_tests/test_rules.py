@@ -1,0 +1,10 @@
+"""Seeded CS003 violation: a safety matrix that forgot a safe rule.
+
+Fixture for tests/test_analysis.py — parsed, never imported or collected
+(the analysis_fixtures directory is excluded from pytest discovery).
+"""
+
+
+def test_safety_matrix_incomplete():
+    for rule in ["gap", "static"]:   # "dynamic" missing on purpose
+        assert rule

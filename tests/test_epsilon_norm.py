@@ -81,3 +81,68 @@ def test_interpolates_l2_linf(rng):
     n0 = float(epsilon_norm(jnp.asarray(x), 1e-9))
     np.testing.assert_allclose(n1, np.linalg.norm(x), rtol=1e-4)
     np.testing.assert_allclose(n0, np.abs(x).max(), rtol=1e-4)
+
+
+class TestEdgeCases:
+    """Limits and degenerate inputs, cross-checked against the
+    kernels/ref.py oracle (deterministic twins of the hypothesis
+    properties in test_properties.py, so the edge cases stay covered in
+    environments without hypothesis)."""
+
+    def test_alpha_zero_is_l2_over_R(self, rng):
+        x = jnp.asarray(rng.standard_normal(12))
+        want = float(jnp.linalg.norm(x)) / 0.7
+        np.testing.assert_allclose(float(lam(x, 0.0, 0.7)), want, rtol=1e-10)
+        np.testing.assert_allclose(float(lam_bisect(x, 0.0, 0.7)), want,
+                                   rtol=1e-10)
+        # continuity: tiny alpha approaches the branch value
+        np.testing.assert_allclose(float(lam(x, 1e-9, 0.7)), want, rtol=1e-6)
+
+    def test_R_zero_is_linf_over_alpha(self, rng):
+        x = jnp.asarray(rng.standard_normal(12))
+        want = float(jnp.max(jnp.abs(x))) / 0.8
+        np.testing.assert_allclose(float(lam(x, 0.8, 0.0)), want, rtol=1e-10)
+        np.testing.assert_allclose(float(lam_bisect(x, 0.8, 0.0)), want,
+                                   rtol=1e-10)
+        np.testing.assert_allclose(float(lam(x, 0.8, 1e-9)), want, rtol=1e-6)
+
+    def test_epsilon_norm_interpolates_l2_linf(self, rng):
+        x = jnp.asarray(rng.standard_normal(9) * 3.0)
+        l2 = float(jnp.linalg.norm(x))
+        linf = float(jnp.max(jnp.abs(x)))
+        np.testing.assert_allclose(float(epsilon_norm(x, 1e-12)), linf,
+                                   rtol=1e-6)
+        np.testing.assert_allclose(float(epsilon_norm(x, 1 - 1e-12)), l2,
+                                   rtol=1e-6)
+        for eps in (0.1, 0.4, 0.9):
+            nu = float(epsilon_norm(x, eps))
+            assert linf - 1e-10 <= nu <= l2 + 1e-10
+
+    def test_single_element_group_closed_form(self):
+        from repro.kernels.ref import dual_norm_ref
+
+        # d = 1: S_{nu alpha}(|x|) = nu R  =>  nu = |x| / (alpha + R)
+        for xval, alpha, R in [(3.0, 0.6, 0.4), (-7.5, 0.25, 1.5),
+                               (0.1, 0.99, 0.01)]:
+            x = jnp.asarray([xval])
+            want = abs(xval) / (alpha + R)
+            np.testing.assert_allclose(float(lam(x, alpha, R)), want,
+                                       rtol=1e-10)
+            np.testing.assert_allclose(float(lam_bisect(x, alpha, R)), want,
+                                       rtol=1e-9)
+            np.testing.assert_allclose(float(dual_norm_ref(x, alpha, R)),
+                                       want, rtol=1e-10)
+
+    def test_zero_vector_every_branch(self):
+        z = jnp.zeros(5)
+        for alpha, R in [(0.5, 0.5), (0.0, 0.7), (0.8, 0.0), (0.0, 0.0)]:
+            assert float(lam(z, alpha, R)) == 0.0
+            assert float(lam_bisect(z, alpha, R)) == 0.0
+
+    def test_bisect_matches_exact_on_batch(self, rng):
+        x = jnp.asarray(rng.standard_normal((32, 8)) * 5.0)
+        alpha = jnp.asarray(rng.uniform(0.05, 0.95, 32))
+        R = jnp.asarray(rng.uniform(0.05, 1.5, 32))
+        np.testing.assert_allclose(np.asarray(lam_bisect(x, alpha, R)),
+                                   np.asarray(lam(x, alpha, R)),
+                                   rtol=1e-9, atol=1e-12)

@@ -90,3 +90,98 @@ def test_property_gap_rule_never_changes_solution(tau, lam_frac):
     bg = solve(problem, lam, tol=1e-10, rule="gap").beta
     bn = solve(problem, lam, tol=1e-10, rule="none").beta
     np.testing.assert_allclose(np.asarray(bg), np.asarray(bn), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Epsilon-norm edge cases (limits, degenerate inputs) vs the kernel oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(
+    x=hnp.arrays(
+        np.float64,
+        st.integers(1, 24),
+        elements=st.floats(-30, 30, allow_nan=False),
+    ),
+)
+def test_property_epsilon_norm_alpha_limits(x):
+    """Closed-form limits of Lambda(x, alpha, R) (paper Alg. 1 special
+    cases): alpha -> 0 gives ||x||/R, R -> 0 gives ||x||_inf/alpha —
+    exactly (the special-case branches) and continuously (tiny but nonzero
+    alpha/R must approach them, not jump)."""
+    from repro.core import lam as lam_exact
+    from repro.core import lam_bisect
+
+    xj = jnp.asarray(x)
+    l2, linf = np.linalg.norm(x), np.abs(x).max(initial=0.0)
+    for fn in (lam_exact, lam_bisect):
+        np.testing.assert_allclose(float(fn(xj, 0.0, 0.7)), l2 / 0.7,
+                                   rtol=1e-8, atol=1e-12)
+        np.testing.assert_allclose(float(fn(xj, 0.8, 0.0)), linf / 0.8,
+                                   rtol=1e-8, atol=1e-12)
+    if linf > 0:
+        near0 = float(lam_exact(xj, 1e-9, 0.7))
+        np.testing.assert_allclose(near0, l2 / 0.7, rtol=1e-6)
+        nearR = float(lam_exact(xj, 0.8, 1e-9))
+        np.testing.assert_allclose(nearR, linf / 0.8, rtol=1e-6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    x=hnp.arrays(
+        np.float64,
+        st.integers(1, 24),
+        elements=st.floats(-30, 30, allow_nan=False),
+    ),
+    eps=st.floats(1e-6, 1.0 - 1e-6),
+)
+def test_property_epsilon_norm_between_l2_and_linf(x, eps):
+    """||x||_inf <= ||x||_eps <= ||x||_2 with the eps -> 0 / eps -> 1
+    endpoints achieved (Burdakov; paper §5): the eps-norm interpolates the
+    two classic norms the sparse-group penalty is built from."""
+    nu = float(epsilon_norm(jnp.asarray(x), eps))
+    l2, linf = np.linalg.norm(x), np.abs(x).max(initial=0.0)
+    assert linf - 1e-10 <= nu <= l2 + max(1e-10, 1e-8 * l2)
+    nu0 = float(epsilon_norm(jnp.asarray(x), 1e-12))
+    nu1 = float(epsilon_norm(jnp.asarray(x), 1.0 - 1e-12))
+    np.testing.assert_allclose(nu0, linf, rtol=1e-6, atol=1e-9)
+    np.testing.assert_allclose(nu1, l2, rtol=1e-6, atol=1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    xval=st.floats(-100, 100, allow_nan=False),
+    alpha=st.floats(0.01, 1.0),
+    R=st.floats(0.01, 2.0),
+)
+def test_property_single_element_group_closed_form(xval, alpha, R):
+    """d = 1: the defining equation collapses to |x| - nu alpha = nu R,
+    i.e. nu = |x| / (alpha + R) — exact for Algorithm 1, the bisection
+    kernel formulation, and the kernels/ref.py oracle."""
+    from repro.core import lam as lam_exact
+    from repro.core import lam_bisect
+    from repro.kernels.ref import dual_norm_ref
+
+    x = jnp.asarray([xval])
+    want = abs(xval) / (alpha + R)
+    for fn in (lam_exact, lam_bisect, dual_norm_ref):
+        np.testing.assert_allclose(float(fn(x, alpha, R)), want,
+                                   rtol=1e-9, atol=1e-12)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    d=st.integers(1, 16),
+    alpha=st.floats(0.0, 1.0),
+    R=st.floats(0.0, 2.0),
+)
+def test_property_zero_vector_maps_to_zero(d, alpha, R):
+    """||0||_eps = 0 for every (alpha, R) including the degenerate
+    alpha = R = 0 corner (the continuous extension both implementations
+    promise in their docstrings)."""
+    from repro.core import lam as lam_exact
+    from repro.core import lam_bisect
+
+    z = jnp.zeros(d)
+    assert float(lam_exact(z, alpha, R)) == 0.0
+    assert float(lam_bisect(z, alpha, R)) == 0.0

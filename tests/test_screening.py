@@ -133,15 +133,14 @@ def test_pallas_screen_fallback_transpose_is_audited(small_problem):
     from repro.core import Sphere
     sphere = Sphere(theta, jnp.asarray(0.1))
 
-    t0 = kops.transpose_trace_count()
-    res_nopre = screen(small_problem, sphere, backend="pallas")
-    assert kops.transpose_trace_count() == t0 + 1
+    with kops.audit_scope() as audit:
+        res_nopre = screen(small_problem, sphere, backend="pallas")
+        assert audit.transpose_traces == 1
 
-    xt = kops.prepare_transposed(small_problem.X)  # persistent: not counted
-    t1 = kops.transpose_trace_count()
-    assert t1 == t0 + 1
-    res_pre = screen(small_problem, sphere, backend="pallas", xt_pre=xt)
-    assert kops.transpose_trace_count() == t1
+        xt = kops.prepare_transposed(small_problem.X)  # persistent: uncounted
+        assert audit.transpose_traces == 1
+        res_pre = screen(small_problem, sphere, backend="pallas", xt_pre=xt)
+    assert audit.transpose_traces == 1
     # same screens either way
     assert np.array_equal(np.asarray(res_nopre.group_active),
                           np.asarray(res_pre.group_active))

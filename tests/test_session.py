@@ -89,12 +89,12 @@ def test_pallas_session_zero_transpose_copies(prob):
     s_pal = SGLSession(prob, SolverConfig(tol=1e-7,
                                           screen_backend="pallas"))
     s_xla = SGLSession(prob, SolverConfig(tol=1e-7, screen_backend="xla"))
-    traces0 = kops.transpose_trace_count()
-    p_pal = s_pal.solve_path(T=5, delta=1.5)
+    with kops.audit_scope() as audit:
+        p_pal = s_pal.solve_path(T=5, delta=1.5)
     # The real audit: no jitted round traced an on-the-fly transpose — the
     # persistent design reached the kernel (a broken xt_pre wiring would
     # build a transposing trace on the first round and trip this).
-    assert kops.transpose_trace_count() == traces0
+    assert audit.transpose_traces == 0
     p_xla = s_xla.solve_path(T=5, delta=1.5)
     np.testing.assert_allclose(p_pal.betas, p_xla.betas, atol=1e-10)
     assert np.array_equal(p_pal.epochs, p_xla.epochs)
@@ -297,3 +297,15 @@ def test_problem_from_grouped_safe_bounds(dist_prob):
                                np.asarray(exact.Xnorm_col), rtol=1e-10)
     assert np.array_equal(np.asarray(cheap.feat_mask),
                           np.asarray(exact.feat_mask))
+
+
+def test_unknown_backend_raises_at_config_construction():
+    """Backend typos fail at SolverConfig() with the valid choices — not
+    as a jit-time error deep inside the first certified round."""
+    with pytest.raises(ValueError, match="screen backend.*cuda"):
+        SolverConfig(screen_backend="cuda")
+    with pytest.raises(ValueError, match="solver backend.*gpu"):
+        SolverConfig(solver_backend="gpu")
+    # the valid values (and _replace) still construct fine
+    cfg = SolverConfig(screen_backend="pallas", solver_backend="xla")
+    assert cfg._replace(tol=1e-6).screen_backend == "pallas"
