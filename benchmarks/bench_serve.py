@@ -1,0 +1,267 @@
+"""Synthetic multi-tenant load generator for the serving layer.
+
+Plays a two-wave, >= 8-tenant workload against :class:`repro.serve.
+SGLServer` and against a no-coalescing / no-cache / no-store baseline
+(same server machinery with every optimisation disabled), measuring
+requests/sec and p50/p99 request latency:
+
+* wave 1 — four tenants submit the identical problem+grid (coalesce
+  into ONE solve) and three more submit a second problem (their own
+  coalesced solve);
+* wave 2 — a repeat tenant (exact-store hit), a perturbed-``y`` tenant
+  on a tail sub-grid (warm-started from the stored path, shared
+  transposed design), and a refined-grid tenant on the first problem
+  (session-cache hit + warm start).
+
+Both modes get one untimed warmup pass first so the process-global XLA
+jit caches are equally warm when the timed passes run — the comparison
+measures the serving layer (queue collapse, cached sessions, the store),
+not who happened to compile first.
+
+Correctness is asserted inline, not trusted: coalesced betas must be
+bit-identical to a solo ``session.solve_path`` run, the coalesced solves
+must actually engage the batched-lambda machinery, the repeat tenant
+must hit the caches, and every warm-started response is checked for
+unsafe certificate reuse against a tight-tolerance unscreened reference
+(any group a warm path screened must be zero there).  ``--smoke`` runs
+the same workload at CI scale; ``--json`` records the perf trajectory
+(``BENCH_pr7.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, header, write_json
+
+from repro.core import sgl
+from repro.core.session import SGLSession, SolverConfig, lambda_grid
+from repro.data.synthetic import make_synthetic
+from repro.serve import PathRequest, ServeConfig, SGLServer
+
+
+def _problem(seed: int, n: int, p: int, groups: int, tau: float):
+    X, y, _beta, sizes = make_synthetic(
+        n=n, p=p, n_groups=groups, gamma1=3, gamma2=3, seed=seed
+    )
+    return sgl.make_problem(X, y, sizes, tau=tau), X, y, sizes
+
+
+def _build_workload(n, p, groups, T, tau, solver):
+    """The >= 8-tenant request list (returns requests + reference info)."""
+    prob1, X1, y1, sizes = _problem(11, n, p, groups, tau)
+    prob2, _X2, _y2, _s2 = _problem(13, n, p, groups, tau)
+    grid1 = lambda_grid(float(sgl.lambda_max(prob1)), T=T, delta=0.5)
+    grid2 = lambda_grid(float(sgl.lambda_max(prob2)), T=T, delta=0.5)
+    # Perturbed-y re-solve on the warm tail of the grid (the serving
+    # pattern stored paths accelerate: the path starts mid-grid, far
+    # from the trivial lambda_max cold start).
+    rng = np.random.default_rng(7)
+    y_pert = y1 + 0.02 * rng.standard_normal(y1.shape)
+    prob1p = sgl.make_problem(X1, y_pert, sizes, tau=tau)
+    tail = grid1[T // 2:]
+    # Refined-grid re-solve: a denser tail for the same problem.
+    refined = lambda_grid(float(sgl.lambda_max(prob1)), T=2 * T,
+                          delta=0.5)[T:]
+
+    wave1 = [
+        PathRequest("tenant-a1", prob1, grid1),
+        PathRequest("tenant-a2", prob1, grid1),
+        PathRequest("tenant-a3", prob1, grid1),
+        PathRequest("tenant-a4", prob1, grid1),
+        PathRequest("tenant-b1", prob2, grid2),
+        PathRequest("tenant-b2", prob2, grid2),
+        PathRequest("tenant-b3", prob2, grid2),
+    ]
+    wave2 = [
+        PathRequest("tenant-a5", prob1, grid1),          # exact repeat
+        PathRequest("tenant-p1", prob1p, tail),          # perturbed y
+        PathRequest("tenant-r1", prob1, refined),        # refined grid
+    ]
+    return wave1, wave2, dict(prob1=prob1, grid1=grid1, prob1p=prob1p,
+                              tail=tail, refined=refined)
+
+
+def _play(server: SGLServer, waves) -> tuple[list, float]:
+    """Submit the waves pipelined — wave ``k+1`` goes in as soon as the
+    FIRST response of wave ``k`` lands, so later arrivals overlap with
+    in-flight service (the load shape a queue actually sees, and what
+    makes queue depth visible in the latency percentiles).  Returns
+    (responses, total_seconds) with per-request latency stamped via
+    done-callbacks on each future."""
+    latencies = {}
+    all_futs = []
+    trigger = None
+    t0 = time.perf_counter()
+    for wave in waves:
+        if trigger is not None:
+            trigger.result(timeout=3600)
+        futs = []
+        for req in wave:
+            t_sub = time.perf_counter()
+            fut = server.submit(req)
+            fut.add_done_callback(
+                lambda f, t=t_sub: latencies.setdefault(
+                    id(f), time.perf_counter() - t))
+            futs.append(fut)
+        all_futs.extend(futs)
+        trigger = futs[0]
+    responses = [(fut.result(timeout=3600), latencies[id(fut)])
+                 for fut in all_futs]
+    return responses, time.perf_counter() - t0
+
+
+def _emit_latencies(case: str, responses, total_s: float) -> None:
+    lat = np.array([t for _resp, t in responses])
+    emit("serve", case, "requests", len(lat))
+    emit("serve", case, "total_seconds", total_s)
+    emit("serve", case, "requests_per_sec", len(lat) / total_s)
+    emit("serve", case, "latency_p50_s", float(np.percentile(lat, 50)))
+    emit("serve", case, "latency_p99_s", float(np.percentile(lat, 99)))
+
+
+def _unsafe_cert_reuse(resp, problem, grid, base_cfg: SolverConfig) -> int:
+    """Screened-but-nonzero count vs a tight-tol unscreened reference —
+    any hit means a stale certificate leaked through a warm start."""
+    ref = SGLSession(problem, SolverConfig(
+        tol=1e-9, max_epochs=10 * base_cfg.max_epochs, rule="none",
+    )).solve_path(np.asarray(grid))
+    viol = 0
+    for t in range(len(grid)):
+        screened = ~np.asarray(resp.result.group_active[t])
+        nz = np.linalg.norm(np.asarray(ref.betas[t]), axis=-1) > 1e-8
+        viol += int((screened & nz).sum())
+    return viol
+
+
+def _serve_cfg(solver: SolverConfig) -> ServeConfig:
+    return ServeConfig(default_solver=solver, coalesce_window_s=0.05,
+                       batch_lambdas=4)
+
+
+def _baseline_cfg(solver: SolverConfig) -> ServeConfig:
+    # Same server machinery with every optimisation disabled: no
+    # coalescing window, every request a fresh session, nothing stored.
+    return ServeConfig(default_solver=solver, coalesce=False,
+                       warm_start=False, serve_from_store=False,
+                       session_capacity=0, store_capacity=0,
+                       batch_lambdas=4, coalesce_window_s=0.0)
+
+
+def run(n=64, p=512, groups=64, T=10, tau=0.3, tol=1e-7,
+        max_epochs=20_000) -> None:
+    solver = SolverConfig(tol=tol, max_epochs=max_epochs,
+                          full_round_every=10 ** 9,
+                          solver_backend="pallas")
+    wave1, wave2, refs = _build_workload(n, p, groups, T, tau, solver)
+
+    # ---- untimed warmup: compile every program either mode uses (XLA
+    # jit caches are process-global; server state is not shared) ----
+    for cfg in (_serve_cfg(solver), _baseline_cfg(solver)):
+        warm_srv = SGLServer(cfg).start()
+        _play(warm_srv, [wave1, wave2])
+        warm_srv.stop()
+
+    # ---- serve mode: coalescing + session cache + certificate store ----
+    server = SGLServer(_serve_cfg(solver)).start()
+    responses, total_serve = _play(server, [wave1, wave2])
+    server.stop()
+    _emit_latencies("serve", responses, total_serve)
+    stats = server.stats()
+    by_tenant = {r.tenant: r for r, _t in responses}
+
+    # ---- correctness audits (assert, then emit) ----
+    # 1. coalescing engaged across >= 2 tenants, through the
+    #    batched-lambda machinery (dense warm grid + Pallas backend).
+    coal = [r for r, _t in responses if r.coalesced_n >= 2]
+    coal_tenants = {r.tenant for r in coal}
+    assert len(coal_tenants) >= 2, "coalescing never engaged"
+    batched = max(r.result.batched_lambdas for r in coal)
+    assert batched > 0, "coalesced solves never batched lambdas"
+    # 2. solo-vs-coalesced bit parity (fresh solo session, same config).
+    solo = SGLSession(refs["prob1"], solver).solve_path(
+        refs["grid1"], batch_lambdas=4)
+    np.testing.assert_array_equal(
+        by_tenant["tenant-a1"].result.betas, solo.betas,
+        err_msg="coalesced betas differ from solo solve_path")
+    # 3. repeat tenant hits the store; refined-grid tenant hits the
+    #    session cache.
+    assert by_tenant["tenant-a5"].store_hit, "exact repeat missed store"
+    np.testing.assert_array_equal(
+        by_tenant["tenant-a5"].result.betas, solo.betas)
+    assert stats["cache"]["hits"] > 0, "session cache never hit"
+    assert stats["cache"]["retraces"] == 0, "cached session retraced"
+    # 4. warm starts engaged, and no stale certificate was reported safe.
+    warm = [r for r, _t in responses if r.warm_started]
+    assert warm, "no warm-started response in the workload"
+    unsafe = 0
+    unsafe += _unsafe_cert_reuse(by_tenant["tenant-p1"], refs["prob1p"],
+                                 refs["tail"], solver)
+    unsafe += _unsafe_cert_reuse(by_tenant["tenant-r1"], refs["prob1"],
+                                 refs["refined"], solver)
+    assert unsafe == 0, f"unsafe certificate reuse: {unsafe} groups"
+    assert all(r.result.certificates_safe for r, _t in responses)
+
+    emit("serve", "audit", "coalesced_requests",
+         stats["coalesced_requests"])
+    emit("serve", "audit", "coalesced_tenants", len(coal_tenants))
+    emit("serve", "audit", "batched_lambdas", batched)
+    emit("serve", "audit", "path_solves", stats["path_solves"])
+    emit("serve", "audit", "store_served", stats["store_served"])
+    emit("serve", "audit", "warm_started", stats["warm_started"])
+    emit("serve", "audit", "cache_hits", stats["cache"]["hits"])
+    emit("serve", "audit", "cache_hit_rate",
+         stats["cache"]["hits"]
+         / max(stats["cache"]["hits"] + stats["cache"]["misses"], 1))
+    emit("serve", "audit", "design_cache_hits",
+         stats["cache"]["design_hits"])
+    emit("serve", "audit", "retraces", stats["cache"]["retraces"])
+    emit("serve", "audit", "unsafe_cert_reuse", unsafe)
+
+    # ---- baseline: same machinery, every optimisation off ----
+    baseline = SGLServer(_baseline_cfg(solver)).start()
+    responses_b, total_base = _play(baseline, [wave1, wave2])
+    baseline.stop()
+    _emit_latencies("baseline", responses_b, total_base)
+
+    rps_serve = len(responses) / total_serve
+    rps_base = len(responses_b) / total_base
+    p50_serve = float(np.percentile([t for _r, t in responses], 50))
+    p50_base = float(np.percentile([t for _r, t in responses_b], 50))
+    emit("serve", "speedup", "requests_per_sec_ratio",
+         rps_serve / rps_base)
+    emit("serve", "speedup", "latency_p50_ratio", p50_base / p50_serve)
+    assert rps_serve > rps_base, (
+        f"serving did not beat the baseline on requests/sec "
+        f"({rps_serve:.3f} vs {rps_base:.3f})")
+    assert p50_serve < p50_base, (
+        f"serving did not beat the baseline on p50 latency "
+        f"({p50_serve:.3f}s vs {p50_base:.3f}s)")
+    print("SERVE BENCH PASS")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--smoke", action="store_true",
+                        help="CI scale: small shapes, same assertions")
+    parser.add_argument("--json", metavar="PATH",
+                        help="write the emitted rows as JSON (the "
+                             "BENCH_pr7.json perf-trajectory record)")
+    args = parser.parse_args()
+    header()
+    # T=10 at delta=0.5 is the densest-grid recipe that keeps the warm
+    # predictor satisfied on these shapes, so the coalesced solves
+    # exercise the batched-lambda machinery (same recipe as bench_path).
+    if args.smoke:
+        run(n=64, p=512, groups=64, T=10)
+    else:
+        run(n=64, p=512, groups=64, T=14)
+    if args.json:
+        write_json(args.json, extra={"bench": "serve",
+                                     "smoke": bool(args.smoke)})
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,14 @@
-"""Batched LM serving: prefill a batch of prompts, then decode with a KV
-cache — the serve_step the decode_* dry-run shapes lower at scale.
+"""Batched LM serving smoke: prefill a batch of prompts, then greedily
+decode token-by-token against the KV cache.
 
     PYTHONPATH=src python examples/serve_lm.py --arch qwen3-8b --tokens 32
 
-Uses the reduced config on CPU; the same ``prefill`` / ``decode_step``
-pair is what ``launch/dryrun.py`` compiles for the 256/512-chip meshes
-(decode_32k: one token against a 32k cache, batch 128).
+Uses the reduced config on CPU.  The ``prefill`` / ``decode_step`` pair
+exercised here is the same one ``launch/dryrun.py`` lowers for the
+256/512-chip meshes (the ``decode_32k`` shape: one token against a 32k
+cache at batch 128).  For serving the *sparse-group lasso path solver*
+— request coalescing, session caching, warm-start certificate store —
+see ``repro.serve`` and ``examples/serve_sgl.py``.
 """
 import argparse
 import time

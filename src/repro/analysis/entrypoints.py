@@ -78,6 +78,7 @@ def _registered(name: str) -> Callable:
     retrace harness watches the real cache."""
     import repro.core.session  # noqa: F401  (registers core traceables)
     import repro.distributed.solver_dist  # noqa: F401  (dist factory)
+    import repro.serve.store  # noqa: F401  (registers serve_warm_eval)
     from .registry import traceables
 
     entry = traceables().get(name)
@@ -234,6 +235,36 @@ def _build_batch_reduced_gaps():
     return build
 
 
+def _build_serve_warm_eval():
+    def build():
+        import jax.numpy as jnp
+
+        problem, _lmax, beta, lam = _fresh_state()
+        # A warm (nonzero) hint point, as the serving layer feeds it.
+        beta = beta.at[0, 0].set(jnp.asarray(0.1, beta.dtype))
+        fn = _registered("serve_warm_eval")
+        return fn, (problem, beta, lam), {}
+
+    return build
+
+
+def _build_screen_round_warm():
+    def build():
+        import jax.numpy as jnp
+
+        from repro.rules import resolve_rule
+
+        problem, lmax, beta, lam = _fresh_state()
+        # The serving layer's re-certification round: a stored primal
+        # hint (nonzero beta) freshly screened at the new lambda.
+        beta = beta.at[0, 0].set(jnp.asarray(0.1, beta.dtype))
+        fn = _registered("screen_round")
+        return fn, (problem, beta, lam, lmax), {
+            "rule": resolve_rule("gap"), "backend": "xla"}
+
+    return build
+
+
 def _build_dist_fista(np_dtype):
     def build():
         import jax.numpy as jnp
@@ -313,6 +344,18 @@ def default_entry_specs() -> List[EntryPointSpec]:
             note="batched-lambda work heuristic",
         ),
         EntryPointSpec(
+            name="serve_warm_eval", traceable="serve_warm_eval",
+            build=_build_serve_warm_eval(),
+            note="serving-layer warm-start admission: duality gap of a "
+                 "stored primal hint on the new problem (repro.serve)",
+        ),
+        EntryPointSpec(
+            name="screen_round/serve-warm", traceable="screen_round",
+            build=_build_screen_round_warm(),
+            note="cache-keyed serving round: fresh GAP re-certification "
+                 "of a warm-start hint (stored certs are never reused)",
+        ),
+        EntryPointSpec(
             name="dist_fista/f64-mesh", traceable="dist_step_factory",
             build=_build_dist_fista(np.float64),
             check_retrace=False,   # shard_map kernel: no jit cache to watch
@@ -333,6 +376,7 @@ def pairing_findings(specs=None) -> List[Finding]:
     (a traceable may back several specs, but never zero)."""
     import repro.core.session  # noqa: F401
     import repro.distributed.solver_dist  # noqa: F401
+    import repro.serve.store  # noqa: F401
     from .registry import traceables
 
     specs = default_entry_specs() if specs is None else specs

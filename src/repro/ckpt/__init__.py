@@ -1,3 +1,11 @@
-from .checkpoint import CheckpointManager, restore, save
+from .checkpoint import (
+    CheckpointManager,
+    gc_keep_k,
+    latest,
+    latest_step,
+    restore,
+    save,
+)
 
-__all__ = ["CheckpointManager", "save", "restore"]
+__all__ = ["CheckpointManager", "save", "restore", "latest", "latest_step",
+           "gc_keep_k"]

@@ -40,7 +40,12 @@ def _flatten_with_paths(tree):
     return out
 
 
-def save(directory: str, step: int, tree: Any) -> str:
+def save(directory: str, step: int, tree: Any,
+         extra_manifest: Optional[dict] = None) -> str:
+    """Atomic checkpoint write; ``extra_manifest`` merges caller metadata
+    (JSON-serialisable) into the manifest under ``"extra"`` — the serving
+    layer stores its path cursor (lambda index + caches digest) there so
+    resume reads one small JSON instead of re-scanning step dirs."""
     os.makedirs(directory, exist_ok=True)
     tmp = os.path.join(directory, f"tmp.{step}")
     final = os.path.join(directory, f"step_{step:012d}")
@@ -53,13 +58,51 @@ def save(directory: str, step: int, tree: Any) -> str:
         "step": step,
         "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                    for k, v in flat.items()},
+        "extra": dict(extra_manifest) if extra_manifest else {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)     # atomic publish
+    _write_latest_pointer(directory, step, manifest)
     return final
+
+
+def _write_latest_pointer(directory: str, step: int, manifest: dict) -> None:
+    """Atomic ``latest.json`` next to the step dirs: the newest step and
+    its full manifest, so :func:`latest` is one read, no dir scan."""
+    tmp = os.path.join(directory, "latest.json.tmp")
+    with open(tmp, "w") as f:
+        json.dump({"step": step, "manifest": manifest}, f)
+    os.replace(tmp, os.path.join(directory, "latest.json"))
+
+
+def latest(directory: str) -> Optional[tuple]:
+    """``(step, manifest)`` of the newest checkpoint, or ``None``.
+
+    Reads the atomic ``latest.json`` pointer written by :func:`save` —
+    one small JSON instead of an O(k) step-dir scan — and falls back to
+    :func:`latest_step` + the step's own ``manifest.json`` for
+    directories written before the pointer existed (or whose pointer was
+    deleted).  The pointed-at step dir is verified to still exist, so a
+    stale pointer can never resolve to a GC'd checkpoint.
+    """
+    pointer = os.path.join(directory, "latest.json")
+    try:
+        with open(pointer) as f:
+            data = json.load(f)
+        step = int(data["step"])
+        if os.path.isdir(os.path.join(directory, f"step_{step:012d}")):
+            return step, data["manifest"]
+    except (FileNotFoundError, KeyError, ValueError, json.JSONDecodeError):
+        pass
+    step = latest_step(directory)
+    if step is None:
+        return None
+    with open(os.path.join(directory, f"step_{step:012d}",
+                           "manifest.json")) as f:
+        return step, json.load(f)
 
 
 def latest_step(directory: str) -> Optional[int]:

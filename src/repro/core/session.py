@@ -206,6 +206,22 @@ class SolverConfig(_SolverConfigFields):
                 )
         return self
 
+    def cache_token(self) -> tuple:
+        """Hashable identity of every compile-relevant solver knob.
+
+        The serving layer (:mod:`repro.serve`) keys its session/compile
+        cache on this token together with the problem digest: two configs
+        with equal tokens drive identical jitted programs, so a cached
+        session can serve either without retracing.  ``rule`` is resolved
+        through the :mod:`repro.rules` registry and keyed by its ``repr``
+        (rules are frozen dataclasses, so the repr carries every
+        parameter) — a registered name and the equivalent rule object
+        produce the same token.
+        """
+        d = self._asdict()
+        d["rule"] = repr(resolve_rule(d["rule"]))
+        return tuple(sorted(d.items()))
+
 
 def lambda_grid(lam_max: float, T: int = 100, delta: float = 3.0) -> np.ndarray:
     """lambda_t = lambda_max * 10^(-delta t / (T-1)), t = 0..T-1 (paper §7.1)."""
@@ -365,6 +381,13 @@ class SGLSession:
     caches : SolveCaches, optional
         Pre-existing gather caches to adopt (the legacy ``solve`` wrapper
         passes its ``caches=`` argument through here).
+    xt_pre : jax.Array, optional
+        A pre-built persistent transposed design to adopt instead of
+        building one lazily — the serving layer shares ONE
+        :func:`repro.kernels.ops.prepare_transposed` copy across every
+        session over the same design (perturbed-y tenants).  Must have
+        exactly the padded (p_pad, n_pad) layout ``prepare_transposed``
+        produces for this problem's shape; validated at construction.
     """
 
     def __init__(
@@ -376,6 +399,7 @@ class SGLSession:
         multi_pod: bool = False,
         L: Optional[float] = None,
         caches: Optional[SolveCaches] = None,
+        xt_pre: Optional[jax.Array] = None,
     ) -> None:
         self.problem = problem
         self.config = config if config is not None else SolverConfig()
@@ -418,7 +442,17 @@ class SGLSession:
         # Epoch blocks dispatched as ONE fused Pallas launch instead of an
         # O(G) lax.scan (solver_backend="pallas" only).
         self.fused_epoch_launches = 0
-        self._xt_pre: Optional[jax.Array] = None
+        if xt_pre is not None:
+            p = problem.G * problem.ng
+            bp, bn = kops._corr_blocks(p, problem.n)
+            expect = (p + (-p) % bp, problem.n + (-problem.n) % bn)
+            if tuple(xt_pre.shape) != expect:
+                raise ValueError(
+                    f"adopted xt_pre has shape {tuple(xt_pre.shape)}; "
+                    f"prepare_transposed would produce {expect} for this "
+                    f"problem ((n, p) = ({problem.n}, {p}))"
+                )
+        self._xt_pre: Optional[jax.Array] = xt_pre
         self._lam_max: Optional[float] = None
         if mesh is not None and self.rule.name != "gap":
             # The sharded screen kernel computes GAP-sphere certificates
@@ -1065,8 +1099,21 @@ class SGLSession:
         sequential: bool = True,
         keep_results: bool = False,
         batch_lambdas: int = 4,
+        beta0=None,
+        prev_epochs: Optional[int] = None,
     ) -> PathResult:
         """Solve the whole lambda path with sequential + dynamic screening.
+
+        ``beta0``/``prev_epochs`` resume a path mid-grid: ``beta0`` warm-
+        starts the first lambda (default zeros — the cold start at
+        lambda_max), and ``prev_epochs`` is the epoch count of the lambda
+        solved immediately before this grid began, feeding the
+        ``check_every="auto"`` warmness predictor and the batched-lambda
+        gate exactly as ``epochs[t-1]`` would inside one grid.  With both
+        threaded, a path chopped into consecutive sub-grids on one session
+        is bit-identical to the one-shot run (``batch_lambdas=1``; batch
+        probes never cross a sub-grid boundary, so batching may regroup).
+        The serving layer's resumable paths are built on this.
 
         Engine behavior (see the module docstring of
         :mod:`repro.core.path` for the algorithmic background): a certified
@@ -1088,6 +1135,7 @@ class SGLSession:
             return self._dist.solve_path(
                 lambdas=lambdas, T=T, delta=delta, sequential=sequential,
                 keep_results=keep_results, batch_lambdas=batch_lambdas,
+                beta0=beta0,
             )
         cfg = self.config
         problem = self.problem
@@ -1117,7 +1165,8 @@ class SGLSession:
         caches = self.caches if sequential else None
         n_gathers_total = 0
 
-        beta = jnp.zeros((G, ng), dtype)
+        beta = (jnp.zeros((G, ng), dtype) if beta0 is None
+                else jnp.asarray(beta0, dtype))
         betas = np.zeros((T_, G, ng), np.dtype(dtype))   # no up-cast
         gaps = np.zeros(T_, float)
         epochs = np.zeros(T_, np.int64)
@@ -1192,6 +1241,11 @@ class SGLSession:
         t = 0
         while t < T_:
             lam_ = lambdas[t]
+            # Previous-lambda epoch count for the warmness predictor; at
+            # the head of a resumed sub-grid it comes from the caller
+            # (prev_epochs), so chunked paths predict exactly like the
+            # one-shot run.
+            ep_prev = int(epochs[t - 1]) if t > 0 else int(prev_epochs or 0)
             first_round = None
             n_seq_active = n_groups
             if sequential and rule.supports_sequential:
@@ -1213,8 +1267,7 @@ class SGLSession:
             warm_here = (first_round is not None
                          and (float(first_round.gap)
                               <= cfg.warm_gap_factor * cfg.tol
-                              or (t > 0 and 0 < epochs[t - 1]
-                                  <= 4 * cfg.f_ce)))
+                              or 0 < ep_prev <= 4 * cfg.f_ce))
             if batch_ok and warm_here and float(first_round.gap) > cfg.tol:
                 # Probe ahead: every GAP sphere from a feasible point is
                 # safe, so the current beta can certify several lambdas.
@@ -1271,7 +1324,7 @@ class SGLSession:
                 warm = (first_round is not None
                         and float(first_round.gap)
                         <= cfg.warm_gap_factor * cfg.tol)
-                warm |= t > 0 and 0 < epochs[t - 1] <= 4 * cfg.f_ce
+                warm |= 0 < ep_prev <= 4 * cfg.f_ce
                 check_t = 1 if warm else None
             else:
                 check_t = cfg.check_every
@@ -1652,7 +1705,7 @@ class _DistStrategy:
     # -- path engine --------------------------------------------------------
 
     def solve_path(self, lambdas, T, delta, sequential, keep_results,
-                   batch_lambdas) -> PathResult:
+                   batch_lambdas, beta0=None) -> PathResult:
         s = self.session
         cfg = s.config
         problem = s.problem
@@ -1693,7 +1746,8 @@ class _DistStrategy:
             if keep_results:
                 results.append(res)
 
-        beta = jnp.zeros((G, ng), dtype)
+        beta = (jnp.zeros((G, ng), dtype) if beta0 is None
+                else jnp.asarray(beta0, dtype))
         t = 0
         while t < T_:
             if sequential:

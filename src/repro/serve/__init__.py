@@ -1,0 +1,45 @@
+"""repro.serve — multi-tenant path-solve serving layer.
+
+Public surface:
+
+* :class:`PathRequest` / :class:`PathResponse` — the request model;
+* :class:`SGLServer` / :class:`ServeConfig` — the serve loop (request
+  queue, coalescing, session cache, certificate store, resumable paths);
+* :class:`SessionCache`, :class:`CertificateStore`, :class:`RequestQueue`
+  — the building blocks, usable standalone;
+* :class:`Preempted` — raised into futures when the server drains.
+
+See the README "Serving" section for the coalescing compatibility rules,
+the cache key, and the certificate-reuse safety contract.
+"""
+from .cache import SessionCache
+from .queue import CoalescedGroup, RequestQueue, coalesce
+from .server import Preempted, ServeConfig, SGLServer
+from .store import CertificateStore, WarmHint, warm_eval
+from .types import (
+    PathRequest,
+    PathResponse,
+    array_digest,
+    compat_signature,
+    design_digest,
+    problem_digest,
+)
+
+__all__ = [
+    "SGLServer",
+    "ServeConfig",
+    "Preempted",
+    "PathRequest",
+    "PathResponse",
+    "SessionCache",
+    "CertificateStore",
+    "WarmHint",
+    "warm_eval",
+    "RequestQueue",
+    "CoalescedGroup",
+    "coalesce",
+    "array_digest",
+    "compat_signature",
+    "design_digest",
+    "problem_digest",
+]

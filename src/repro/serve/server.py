@@ -1,0 +1,497 @@
+"""The serve loop: queue -> coalesce -> cached session -> warm solve.
+
+:class:`SGLServer` owns one worker thread and four pieces of state — a
+:class:`repro.serve.queue.RequestQueue`, a
+:class:`repro.serve.cache.SessionCache`, a
+:class:`repro.serve.store.CertificateStore`, and (optionally) a
+checkpoint directory — and turns tenant :class:`PathRequest`\\ s into
+:class:`PathResponse`\\ s:
+
+1. drained requests coalesce by value (identical requests collapse into
+   one solve; ``merge_grids`` additionally unions same-problem grids);
+2. the session cache supplies a jit-warm :class:`SGLSession` (per-request
+   solver caches are reset, so a cached session's trajectory is
+   bit-identical to a fresh one — the coalescing parity guarantee);
+3. the certificate store short-circuits exact repeats and offers primal
+   warm-start hints for perturbed-``y`` / refined-grid re-solves —
+   admitted only when :func:`repro.serve.store.warm_eval` measures the
+   hint's gap beating the cold start's, and NEVER as certificates (every
+   reported discard comes from a fresh GAP round inside the solve);
+4. with checkpointing enabled, paths run in ``ckpt_every``-lambda
+   segments through the atomic :mod:`repro.ckpt` writer; a drain (or
+   SIGTERM via :meth:`install_sigterm_hook`) checkpoints at the next
+   segment boundary and fails in-flight futures with :class:`Preempted`,
+   and a re-submitted request on a restarted server resumes from the
+   stored cursor — bit-identical to an uninterrupted run with the same
+   segmenting (`solve_path`'s ``beta0``/``prev_epochs`` threading).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import hashlib
+import os
+import signal
+import threading
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from .. import ckpt
+from ..core.session import PathResult, SGLSession, SolverConfig
+from ..core.solver import SolveCaches
+from .cache import SessionCache
+from .queue import CoalescedGroup, Pending, RequestQueue, coalesce
+from .store import CertificateStore, warm_eval
+from .types import PathResponse
+
+__all__ = ["ServeConfig", "SGLServer", "Preempted"]
+
+
+class Preempted(RuntimeError):
+    """The server drained (shutdown/SIGTERM) before this request finished.
+
+    ``cursor`` is the lambda index the path had reached (checkpointed
+    when the server runs with a ckpt dir); resubmitting the identical
+    request to a restarted server resumes there.
+    """
+
+    def __init__(self, request_digest: str, cursor: int):
+        super().__init__(
+            f"request {request_digest} preempted at lambda index {cursor}"
+        )
+        self.request_digest = request_digest
+        self.cursor = cursor
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    """Serving knobs (solver knobs live in ``default_solver``)."""
+
+    default_solver: SolverConfig = dataclasses.field(
+        default_factory=SolverConfig)
+    coalesce: bool = True            # False: every request solves alone
+    merge_grids: bool = False        # union-grid merging (tol-level parity)
+    coalesce_window_s: float = 0.02  # drain window after the first request
+    max_batch: int = 32              # requests per drain
+    warm_start: bool = True          # certificate-store primal hints
+    serve_from_store: bool = True    # exact-repeat short-circuit
+    session_capacity: int = 8        # LRU sessions (0 disables caching)
+    store_capacity: int = 32         # LRU stored paths (0 disables)
+    batch_lambdas: int = 4           # forwarded to solve_path
+    ckpt_dir: Optional[str] = None   # enables resumable paths
+    ckpt_every: int = 0              # lambdas per segment (0: no chunking)
+    ckpt_keep: int = 3               # keep-k GC per request dir
+    on_segment: Optional[Callable[[str, int, int], None]] = None
+                                     # (digest, cursor, T) after each
+                                     # segment — observability/test hook
+
+
+class SGLServer:
+    """Multi-tenant path-solve server over one worker thread."""
+
+    def __init__(self, config: Optional[ServeConfig] = None):
+        self.config = config if config is not None else ServeConfig()
+        self.queue = RequestQueue()
+        self.cache = SessionCache(capacity=self.config.session_capacity)
+        self.store = CertificateStore(capacity=self.config.store_capacity)
+        self._drain = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._served: set = set()      # digests completed at least once
+        self._lock = threading.Lock()
+        self.counters = {
+            "requests": 0,
+            "responses": 0,
+            "path_solves": 0,
+            "coalesced_requests": 0,
+            "store_served": 0,
+            "warm_started": 0,
+            "resumed": 0,
+            "preempted": 0,
+        }
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "SGLServer":
+        if self._thread is not None:
+            raise RuntimeError("server already started")
+        self._thread = threading.Thread(target=self._worker,
+                                        name="sgl-serve", daemon=True)
+        self._thread.start()
+        return self
+
+    def submit(self, request: PathRequest):
+        """Enqueue one tenant request; returns a Future[PathResponse]."""
+        self.counters["requests"] += 1
+        return self.queue.submit(request, self.config.default_solver)
+
+    def stop(self, timeout: Optional[float] = None) -> None:
+        """Finish everything queued, then stop the worker."""
+        self.queue.close()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+
+    def drain(self) -> None:
+        """Preemption path: stop accepting work, checkpoint in-flight
+        paths at the next segment boundary, fail their futures with
+        :class:`Preempted`.  Safe to call from a signal handler."""
+        self._drain.set()
+        self.queue.close()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+
+    def install_sigterm_hook(self):
+        """Route SIGTERM (pod preemption) to :meth:`drain`; returns the
+        previous handler so callers/tests can restore it."""
+        prev = signal.getsignal(signal.SIGTERM)
+
+        def handler(signum, frame):
+            self.drain()
+
+        signal.signal(signal.SIGTERM, handler)
+        return prev
+
+    @property
+    def draining(self) -> bool:
+        return self._drain.is_set()
+
+    def stats(self) -> dict:
+        return {
+            **self.counters,
+            "cache": self.cache.stats(),
+            "store": self.store.stats(),
+            "queue_submitted": self.queue.submitted,
+        }
+
+    # -- worker ------------------------------------------------------------
+
+    def _worker(self) -> None:
+        cfg = self.config
+        while True:
+            pending = self.queue.drain(max_batch=cfg.max_batch,
+                                       window_s=cfg.coalesce_window_s)
+            if pending is None:
+                return
+            if self._drain.is_set():
+                self._fail(pending, cursor=0)
+                continue
+            if cfg.coalesce:
+                groups = coalesce(pending, cfg.default_solver,
+                                  merge_grids=cfg.merge_grids)
+            else:
+                groups = [
+                    CoalescedGroup(
+                        members=[p], lambdas=p.request.grid(),
+                        member_index=[np.arange(len(p.request.grid()))],
+                        merged=False,
+                    )
+                    for p in pending
+                ]
+            for group in groups:
+                if self._drain.is_set():
+                    self._fail(group.members, cursor=0)
+                    continue
+                try:
+                    self._serve_group(group)
+                except Preempted as e:
+                    self.counters["preempted"] += len(group.members)
+                    for p in group.members:
+                        p.future.set_exception(
+                            Preempted(p.digest, e.cursor))
+                except Exception as e:  # pragma: no cover - defensive
+                    for p in group.members:
+                        if not p.future.done():
+                            p.future.set_exception(e)
+
+    def _fail(self, members: List[Pending], cursor: int) -> None:
+        self.counters["preempted"] += len(members)
+        for p in members:
+            p.future.set_exception(Preempted(p.digest, cursor))
+
+    # -- serving one coalesced group ----------------------------------------
+
+    def _serve_group(self, group: CoalescedGroup) -> None:
+        cfg = self.config
+        t_start = time.perf_counter()
+        lead = group.members[0]
+        req = lead.request
+        scfg = req.resolved_config(cfg.default_solver)
+        digest = lead.digest
+
+        # Exact-repeat short-circuit: the stored result of an identical
+        # request (problem + grid + config values) is the solve's output
+        # verbatim — served from memory, zero solver work.
+        if cfg.serve_from_store and not group.merged:
+            stored = self.store.exact(digest)
+            if stored is not None:
+                self.counters["store_served"] += len(group.members)
+                self._respond(group, stored, served_from="store",
+                              store_hit=True, t_start=t_start)
+                return
+
+        session, hit = self.cache.get(req.problem, scfg)
+        # Per-request solver caches: a cached session must produce the
+        # exact trajectory a fresh one would (coalesced-vs-solo parity),
+        # so cross-request gather/reference state never leaks in.
+        session.caches = SolveCaches()
+
+        beta0 = None
+        warm_started = False
+        warm_lam = None
+        if cfg.warm_start and req.warm_start and self.store.capacity > 0:
+            hint = self.store.warm_hint(req.problem, scfg, group.lambdas)
+            if hint is not None:
+                dtype = req.problem.X.dtype
+                lam0 = jnp.asarray(float(group.lambdas[0]), dtype)
+                beta_h = jnp.asarray(hint.beta, dtype)
+                gap_h = float(warm_eval(req.problem, beta_h, lam0))
+                gap_c = float(warm_eval(
+                    req.problem, jnp.zeros_like(beta_h), lam0))
+                # Admission is measured: adopt the hint only when its gap
+                # on the NEW problem beats the cold start's.  The hint is
+                # a primal point only — solve_path re-screens it with a
+                # fresh GAP round before any epoch, so stored certificates
+                # are never reused (see repro.serve.store).
+                if np.isfinite(gap_h) and gap_h < gap_c:
+                    beta0 = beta_h
+                    warm_started = True
+                    warm_lam = hint.lam_src
+                    self.counters["warm_started"] += len(group.members)
+
+        # Retrace watch (cache correctness): an exact repeat of a request
+        # this server already solved, served from a session-cache hit,
+        # must not grow any jit cache — measured, and fed to the
+        # kernels.ops audit so tests can assert it via audit_scope().
+        watch = (self.cache.watch_retraces()
+                 if hit and digest in self._served
+                 else contextlib.nullcontext())
+        with watch:
+            result, resumed_from = self._run_path(
+                session, scfg, group.lambdas, beta0, digest
+            )
+        self.counters["path_solves"] += 1
+        if len(group.members) > 1:
+            self.counters["coalesced_requests"] += len(group.members)
+        if resumed_from:
+            self.counters["resumed"] += 1
+        with self._lock:
+            self._served.add(digest)
+
+        self._respond(
+            group, result,
+            served_from="coalesced" if len(group.members) > 1 else "solve",
+            session_cache_hit=hit, warm_started=warm_started,
+            warm_source_lam=warm_lam, resumed_from=resumed_from,
+            t_start=t_start, solve_s=time.perf_counter() - t_start,
+        )
+
+    def _respond(self, group: CoalescedGroup, result: PathResult, *,
+                 served_from: str, t_start: float,
+                 session_cache_hit: bool = False, store_hit: bool = False,
+                 warm_started: bool = False,
+                 warm_source_lam: Optional[float] = None,
+                 resumed_from: Optional[int] = None,
+                 solve_s: float = 0.0) -> None:
+        cfg = self.config
+        for p, idx in zip(group.members, group.member_index):
+            member_res = (result if not group.merged
+                          else _slice_result(result, idx))
+            if served_from != "store" and cfg.serve_from_store:
+                scfg = p.request.resolved_config(cfg.default_solver)
+                self.store.put(p.digest, p.request.problem, scfg,
+                               member_res)
+            self.counters["responses"] += 1
+            p.future.set_result(PathResponse(
+                tenant=p.request.tenant,
+                request_digest=p.digest,
+                result=member_res,
+                served_from=served_from,
+                coalesced_n=len(group.members),
+                session_cache_hit=session_cache_hit,
+                store_hit=store_hit,
+                warm_started=warm_started,
+                warm_source_lam=warm_source_lam,
+                resumed_from=resumed_from,
+                merged_grid=group.merged,
+                queue_s=t_start - p.t_submit,
+                solve_s=solve_s,
+            ))
+
+    # -- the (optionally resumable) path runner ------------------------------
+
+    def _run_path(self, session: SGLSession, scfg: SolverConfig,
+                  lambdas: np.ndarray, beta0, digest: str):
+        """Run one path, in ``ckpt_every``-lambda segments when
+        checkpointing is on; returns ``(PathResult, resumed_from)``."""
+        cfg = self.config
+        T_ = len(lambdas)
+        chunked = cfg.ckpt_dir is not None and cfg.ckpt_every > 0
+        if not chunked:
+            if self.draining:
+                raise Preempted(digest, 0)
+            res = session.solve_path(
+                lambdas, beta0=beta0, batch_lambdas=cfg.batch_lambdas,
+            )
+            return res, None
+
+        rdir = os.path.join(cfg.ckpt_dir, digest)
+        caches_dig = hashlib.blake2b(
+            repr(self.cache.key(session.problem, scfg)).encode(),
+            digest_size=8,
+        ).hexdigest()
+        cursor = 0
+        prev_epochs = 0
+        beta_carry = beta0
+        segments: List[PathResult] = []
+        acc = None              # restored pre-preemption state, if any
+        resumed_from = None
+
+        found = ckpt.latest(rdir)
+        if found is not None:
+            step, manifest = found
+            extra = manifest.get("extra", {})
+            if (extra.get("request") == digest
+                    and extra.get("caches") == caches_dig
+                    and 0 < int(extra.get("cursor", 0)) <= T_):
+                tree_like = {
+                    k: np.zeros(spec["shape"], np.dtype(spec["dtype"]))
+                    for k, spec in manifest["leaves"].items()
+                }
+                acc = ckpt.restore(rdir, tree_like, step=step)
+                cursor = int(extra["cursor"])
+                prev_epochs = int(extra.get("prev_epochs", 0))
+                beta_carry = jnp.asarray(acc["beta_carry"],
+                                         session.problem.X.dtype)
+                resumed_from = cursor
+
+        while cursor < T_:
+            if self.draining:
+                raise Preempted(digest, cursor)
+            # Fresh per-segment solver caches: a resumed run starts its
+            # segment with empty caches, so the continuous run must too —
+            # that is what makes interrupted+resumed bit-identical to
+            # uninterrupted (with the same segmenting).
+            session.caches = SolveCaches()
+            sub = lambdas[cursor:cursor + cfg.ckpt_every]
+            pr = session.solve_path(
+                sub, beta0=beta_carry,
+                prev_epochs=prev_epochs or None,
+                batch_lambdas=cfg.batch_lambdas,
+            )
+            segments.append(pr)
+            cursor += len(sub)
+            prev_epochs = int(pr.epochs[-1])
+            beta_carry = jnp.asarray(pr.betas[-1],
+                                     session.problem.X.dtype)
+            state = _pack_state(acc, segments, beta_carry)
+            ckpt.save(rdir, cursor, state, extra_manifest={
+                "request": digest,
+                "cursor": cursor,
+                "prev_epochs": prev_epochs,
+                "caches": caches_dig,
+                "T": T_,
+            })
+            ckpt.gc_keep_k(rdir, cfg.ckpt_keep)
+            if cfg.on_segment is not None:
+                cfg.on_segment(digest, cursor, T_)
+
+        return _assemble(lambdas, acc, segments), resumed_from
+
+
+# ----------------------------------------------------------------------------
+# Segment bookkeeping: pack/accumulate/stitch PathResult state
+# ----------------------------------------------------------------------------
+
+_ARRAY_FIELDS = ("betas", "gaps", "epochs", "group_active_frac",
+                 "feat_active_frac", "group_active", "feat_active",
+                 "seq_screened", "dyn_screened")
+_SUM_FIELDS = ("n_rounds", "n_transpose_copies", "n_compact_rounds",
+               "n_full_rounds", "round_flops", "n_fused_epoch_launches",
+               "batched_lambdas", "n_gathers")
+
+
+def _pack_state(acc, segments: List[PathResult], beta_carry) -> dict:
+    """Flat checkpoint tree: solved-prefix arrays + counters + carry."""
+    state: dict = {}
+    for f in _ARRAY_FIELDS:
+        parts = ([acc[f]] if acc is not None else []) \
+            + [np.asarray(getattr(s, f)) for s in segments]
+        state[f] = np.concatenate(parts, axis=0)
+    for f in _SUM_FIELDS:
+        prior = float(acc[f]) if acc is not None else 0.0
+        state[f] = np.asarray(
+            prior + sum(float(getattr(s, f)) for s in segments))
+    safe_prior = bool(acc["certificates_safe"]) if acc is not None else True
+    state["certificates_safe"] = np.asarray(
+        safe_prior and all(bool(s.certificates_safe) for s in segments))
+    state["beta_carry"] = np.asarray(beta_carry)
+    return state
+
+
+def _assemble(lambdas: np.ndarray, acc,
+              segments: List[PathResult]) -> PathResult:
+    """Stitch restored state + fresh segments into one PathResult."""
+    state = _pack_state(acc, segments, np.zeros(0))
+    counters = {f: (float(state[f]) if f == "round_flops"
+                    else int(state[f])) for f in _SUM_FIELDS}
+    rule_name = (segments[-1].rule_name if segments
+                 else "gap")
+    return PathResult(
+        lambdas=np.asarray(lambdas, float),
+        betas=state["betas"],
+        gaps=state["gaps"],
+        epochs=state["epochs"],
+        group_active_frac=state["group_active_frac"],
+        feat_active_frac=state["feat_active_frac"],
+        group_active=state["group_active"],
+        feat_active=state["feat_active"],
+        seq_screened=state["seq_screened"],
+        dyn_screened=state["dyn_screened"],
+        n_gathers=counters["n_gathers"],
+        results=[],
+        n_rounds=counters["n_rounds"],
+        n_transpose_copies=counters["n_transpose_copies"],
+        n_compact_rounds=counters["n_compact_rounds"],
+        n_full_rounds=counters["n_full_rounds"],
+        round_flops=counters["round_flops"],
+        n_fused_epoch_launches=counters["n_fused_epoch_launches"],
+        batched_lambdas=counters["batched_lambdas"],
+        rule_name=rule_name,
+        certificates_safe=bool(state["certificates_safe"]),
+    )
+
+
+def _slice_result(result: PathResult, idx: np.ndarray) -> PathResult:
+    """A member's view of a merged-grid solve: its own grid points sliced
+    out of the union path.  Solve counters are those of the shared union
+    run (one solve served several tenants — per-member attribution would
+    be fiction)."""
+    return PathResult(
+        lambdas=np.asarray(result.lambdas)[idx],
+        betas=np.asarray(result.betas)[idx],
+        gaps=np.asarray(result.gaps)[idx],
+        epochs=np.asarray(result.epochs)[idx],
+        group_active_frac=np.asarray(result.group_active_frac)[idx],
+        feat_active_frac=np.asarray(result.feat_active_frac)[idx],
+        group_active=np.asarray(result.group_active)[idx],
+        feat_active=np.asarray(result.feat_active)[idx],
+        seq_screened=np.asarray(result.seq_screened)[idx],
+        dyn_screened=np.asarray(result.dyn_screened)[idx],
+        n_gathers=result.n_gathers,
+        results=[],
+        n_rounds=result.n_rounds,
+        n_transpose_copies=result.n_transpose_copies,
+        n_compact_rounds=result.n_compact_rounds,
+        n_full_rounds=result.n_full_rounds,
+        round_flops=result.round_flops,
+        n_fused_epoch_launches=result.n_fused_epoch_launches,
+        batched_lambdas=result.batched_lambdas,
+        rule_name=result.rule_name,
+        certificates_safe=result.certificates_safe,
+    )

@@ -1,0 +1,206 @@
+"""Warm-start + certificate store: prior paths accelerate re-solves.
+
+The sequential-screening insight that makes serving cheap (paper §7.1,
+and the warm-start-along-a-path regime of the journal follow-up,
+arXiv 1611.05780): a solve of a *nearby* problem — perturbed ``y``, a
+refined lambda grid — is warm almost everywhere, so starting it from a
+stored path's primal points turns most tenant traffic into a handful of
+epochs per lambda.
+
+Safety contract (the part that must never soften): **stored state
+warm-starts, it never certifies.**  A :class:`WarmHint` hands back only a
+primal point ``beta`` (plus provenance metadata); the stored
+group/feature masks and dual points ride along as diagnostics but are
+never returned as active-set masks, never injected as a ``first_round``,
+and never intersected into anything.  Every discard reported for the new
+solve comes from a fresh GAP round evaluated on the NEW problem at the
+NEW lambda — :meth:`SGLSession.solve_path` re-screens from ``beta0``
+before any epoch, so the ``RoundResult.safe`` /
+``PathResult.certificates_safe`` contract holds end-to-end even when the
+hint came from a different ``y``.  (A GAP sphere from *any* feasible
+primal/dual pair is safe — Thm 1/2 — which is exactly why warm-starting
+the primal point is free while reusing masks would not be.)
+
+Admission is measured, not assumed: :func:`warm_eval` (a registered,
+gate-audited traceable) computes the duality gap of a candidate hint on
+the new problem, and the server adopts the hint only when that gap beats
+the cold start's — a hint from a far-away ``y`` is silently dropped.
+
+Exact repeats short-circuit entirely: the store keeps the full
+:class:`PathResult` keyed by request digest, so an identical re-request
+is served from memory without touching the solver.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..core import sgl
+from ..core.session import PathResult, SolverConfig
+from ..core.sgl import SGLProblem
+from .types import array_digest, design_digest
+
+__all__ = ["CertificateStore", "WarmHint", "warm_eval"]
+
+
+@jax.jit
+def warm_eval(problem: SGLProblem, beta, lam_):
+    """Duality gap of a warm-start candidate on the NEW problem.
+
+    One O(n p) pass: residual at ``beta``, dual-scaled feasible point
+    (Eq. 15), gap = primal - dual.  The server compares this against the
+    cold start's gap to decide hint admission — the hint is adopted as a
+    primal point only, so this evaluation is an economics decision, not a
+    safety decision (safety comes from the fresh GAP rounds inside the
+    solve).
+    """
+    resid = problem.y - jnp.einsum("ngk,gk->n", problem.X, beta)
+    corr = jnp.einsum("ngk,n->gk", problem.X, resid)
+    scale = jnp.maximum(
+        lam_, sgl.sgl_dual_norm(corr, problem.tau, problem.w)
+    )
+    theta = resid / scale
+    pr = (0.5 * jnp.sum(resid * resid)
+          + lam_ * sgl.sgl_norm(beta, problem.tau, problem.w))
+    return pr - sgl.dual(problem, theta, lam_)
+
+
+class PathRecord(NamedTuple):
+    """Stored path state for one (design, y, grid) solve.
+
+    ``group_active`` is provenance/diagnostics only — see the module
+    docstring's safety contract; nothing downstream may adopt it as a
+    certificate for a different problem.
+    """
+
+    lambdas: np.ndarray          # (T,) grid, largest first
+    betas: np.ndarray            # (T, G, ng) primal points (the hints)
+    gaps: np.ndarray             # (T,) certified gaps on the SOURCE problem
+    epochs: np.ndarray           # (T,)
+    group_active: np.ndarray     # (T, G) masks of the SOURCE problem
+    certificates_safe: bool
+    y_digest: str
+
+
+class WarmHint(NamedTuple):
+    """A candidate primal warm start (never a certificate)."""
+
+    beta: np.ndarray             # (G, ng) stored primal point
+    lam_src: float               # grid point the hint was solved at
+    same_y: bool                 # hint comes from the identical y
+    record: PathRecord
+
+
+class CertificateStore:
+    """LRU store of solved paths: exact-repeat results + warm-start hints.
+
+    ``capacity`` bounds both maps (entries, not bytes — records hold
+    (T, G, ng) arrays, so size the capacity to the problem scale).
+    ``capacity=0`` disables the store entirely (baseline mode).
+    """
+
+    def __init__(self, capacity: int = 32):
+        self.capacity = int(capacity)
+        self._exact: OrderedDict[str, PathResult] = OrderedDict()
+        self._records: OrderedDict[tuple, PathRecord] = OrderedDict()
+        self.exact_hits = 0
+        self.warm_hits = 0
+        self.puts = 0
+        self.evictions = 0
+
+    # -- writes ------------------------------------------------------------
+
+    def put(self, request_digest: str, problem: SGLProblem,
+            config: SolverConfig, result: PathResult) -> None:
+        if self.capacity <= 0:
+            return
+        self.puts += 1
+        self._exact[request_digest] = result
+        self._exact.move_to_end(request_digest)
+        dkey = design_digest(problem, config)
+        ydig = array_digest(problem.y)
+        rkey = (dkey, ydig, array_digest(np.asarray(result.lambdas)))
+        self._records[rkey] = PathRecord(
+            lambdas=np.asarray(result.lambdas),
+            betas=np.asarray(result.betas),
+            gaps=np.asarray(result.gaps),
+            epochs=np.asarray(result.epochs),
+            group_active=np.asarray(result.group_active),
+            certificates_safe=bool(result.certificates_safe),
+            y_digest=ydig,
+        )
+        self._records.move_to_end(rkey)
+        while len(self._exact) > self.capacity:
+            self._exact.popitem(last=False)
+            self.evictions += 1
+        while len(self._records) > self.capacity:
+            self._records.popitem(last=False)
+            self.evictions += 1
+
+    # -- reads -------------------------------------------------------------
+
+    def exact(self, request_digest: str) -> Optional[PathResult]:
+        """The stored result of an identical earlier request, or None."""
+        res = self._exact.get(request_digest)
+        if res is not None:
+            self._exact.move_to_end(request_digest)
+            self.exact_hits += 1
+        return res
+
+    def warm_hint(self, problem: SGLProblem, config: SolverConfig,
+                  lambdas: np.ndarray) -> Optional[WarmHint]:
+        """Best stored primal point for a solve of ``problem`` starting at
+        ``lambdas[0]`` — same-design records only, same-``y`` preferred,
+        nearest stored lambda (in log space) to the new path's start."""
+        dkey = design_digest(problem, config)
+        ydig = array_digest(problem.y)
+        candidates = [(k, r) for k, r in self._records.items()
+                      if k[0] == dkey]
+        if not candidates:
+            return None
+        same = [(k, r) for k, r in candidates if r.y_digest == ydig]
+        pool = same if same else candidates
+        lam0 = float(np.asarray(lambdas, float)[0])
+        best = None
+        for key, rec in pool:
+            d = np.abs(np.log(np.maximum(rec.lambdas, 1e-300))
+                       - np.log(max(lam0, 1e-300)))
+            i = int(np.argmin(d))
+            if best is None or d[i] < best[0]:
+                best = (d[i], key, rec, i)
+        _, key, rec, i = best
+        self._records.move_to_end(key)
+        self.warm_hits += 1
+        return WarmHint(
+            beta=rec.betas[i],
+            lam_src=float(rec.lambdas[i]),
+            same_y=rec.y_digest == ydig,
+            record=rec,
+        )
+
+    # -- reporting ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        return {
+            "records": len(self._records),
+            "exact_entries": len(self._exact),
+            "capacity": self.capacity,
+            "exact_hits": self.exact_hits,
+            "warm_hits": self.warm_hits,
+            "puts": self.puts,
+            "evictions": self.evictions,
+        }
+
+
+# ----------------------------------------------------------------------------
+# Static-analysis hook (see repro.analysis.entrypoints for the template)
+# ----------------------------------------------------------------------------
+
+from ..analysis.registry import register_traceable  # noqa: E402
+
+register_traceable("serve_warm_eval", warm_eval,
+                   module=__name__, kind="jit")

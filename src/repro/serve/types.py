@@ -1,0 +1,149 @@
+"""Request/response types and value digests for the serving layer.
+
+Everything the serving layer keys on is a *value* digest, not an object
+identity: two tenants submitting numerically identical problems (typical
+in multi-tenant traffic — the same reference design shipped to every
+client) must land on the same cached session, the same stored path, and
+the same coalesced batch even though their arrays are distinct buffers.
+
+Three nested identities, coarse to fine:
+
+* **compat signature** (:func:`compat_signature`) — shape, group layout,
+  dtype, tau, and the :meth:`SolverConfig.cache_token` statics.  Requests
+  with equal signatures drive identical jitted programs; this is the
+  coalescing *compatibility* test and the retrace boundary.
+* **design digest** (:func:`design_digest`) — compat signature plus the
+  bytes of X and w.  Perturbed-``y`` re-solves share it; the certificate
+  store and the shared transposed-design cache key on it.
+* **problem digest** (:func:`problem_digest`) — design digest plus the
+  bytes of y.  Requests with equal problem digests solve the *same*
+  optimisation problem; the session cache keys on it, and adding the
+  lambda grid (:meth:`PathRequest.digest`) identifies a whole request.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from ..core.session import PathResult, SolverConfig
+from ..core.sgl import SGLProblem
+
+__all__ = [
+    "array_digest",
+    "compat_signature",
+    "design_digest",
+    "problem_digest",
+    "PathRequest",
+    "PathResponse",
+]
+
+
+def array_digest(x) -> str:
+    """Stable value digest of an array: blake2b over shape + dtype +
+    C-contiguous bytes (16 hex chars — collision-safe at cache scale)."""
+    a = np.ascontiguousarray(np.asarray(x))
+    h = hashlib.blake2b(digest_size=8)
+    h.update(str(a.shape).encode())
+    h.update(str(a.dtype).encode())
+    h.update(a.tobytes())
+    return h.hexdigest()
+
+
+class CompatSignature(NamedTuple):
+    """Coalescing-compatibility key: same (n, p, group layout, tau, dtype)
+    and the same compile-relevant solver statics."""
+
+    n: int
+    G: int
+    ng: int
+    layout: str          # feat_mask value digest (the group layout)
+    dtype: str
+    tau: float
+    statics: tuple       # SolverConfig.cache_token()
+
+
+def compat_signature(problem: SGLProblem,
+                     config: SolverConfig) -> CompatSignature:
+    return CompatSignature(
+        n=problem.n, G=problem.G, ng=problem.ng,
+        layout=array_digest(problem.feat_mask),
+        dtype=str(problem.X.dtype),
+        tau=float(problem.tau),
+        statics=config.cache_token(),
+    )
+
+
+def design_digest(problem: SGLProblem, config: SolverConfig) -> str:
+    """Identity of the design side of a problem (everything but y)."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(repr(compat_signature(problem, config)).encode())
+    h.update(array_digest(problem.X).encode())
+    h.update(array_digest(problem.w).encode())
+    return h.hexdigest()
+
+
+def problem_digest(problem: SGLProblem, config: SolverConfig) -> str:
+    h = hashlib.blake2b(digest_size=8)
+    h.update(design_digest(problem, config).encode())
+    h.update(array_digest(problem.y).encode())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class PathRequest:
+    """One tenant's lambda-path solve.
+
+    ``lambdas`` is the explicit grid (largest first, as everywhere else);
+    ``config`` defaults to the server's default config.  ``warm_start``
+    opts this request out of certificate-store warm starts (the stored
+    hints are safe either way — the flag exists for A/B measurement).
+    """
+
+    tenant: str
+    problem: SGLProblem
+    lambdas: Sequence[float]
+    config: Optional[SolverConfig] = None
+    warm_start: bool = True
+
+    def resolved_config(self, default: SolverConfig) -> SolverConfig:
+        return self.config if self.config is not None else default
+
+    def grid(self) -> np.ndarray:
+        return np.asarray(self.lambdas, float)
+
+    def digest(self, default_config: SolverConfig) -> str:
+        """Full request identity: problem + grid + config statics (tenant
+        excluded — identical requests from different tenants coalesce)."""
+        cfg = self.resolved_config(default_config)
+        h = hashlib.blake2b(digest_size=8)
+        h.update(problem_digest(self.problem, cfg).encode())
+        h.update(array_digest(self.grid()).encode())
+        return h.hexdigest()
+
+
+@dataclasses.dataclass
+class PathResponse:
+    """A solved path plus serving metadata.
+
+    ``result.certificates_safe`` keeps the PathResult contract end-to-end:
+    it reflects the screening rule that actually ran, never a stored
+    certificate (stored state warm-starts, it never certifies — see
+    :mod:`repro.serve.store`).
+    """
+
+    tenant: str
+    request_digest: str
+    result: PathResult
+    served_from: str         # "solve" | "store" | "coalesced"
+    coalesced_n: int = 1     # requests served by the same path solve
+    session_cache_hit: bool = False
+    store_hit: bool = False
+    warm_started: bool = False
+    warm_source_lam: Optional[float] = None
+    resumed_from: Optional[int] = None   # lambda cursor a resume started at
+    merged_grid: bool = False
+    queue_s: float = 0.0
+    solve_s: float = 0.0

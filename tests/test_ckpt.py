@@ -72,3 +72,34 @@ def test_partial_write_is_not_visible(tmp_path):
     ck.save(str(tmp_path), 2, tree)
     os.makedirs(tmp_path / "step_5.tmp")  # simulated torn write
     assert ck.latest_step(str(tmp_path)) == 2
+
+
+def test_latest_returns_step_and_manifest_with_extra(tmp_path):
+    ck.save(str(tmp_path), 3, _tree(),
+            extra_manifest={"cursor": 3, "request": "abc"})
+    ck.save(str(tmp_path), 7, _tree(),
+            extra_manifest={"cursor": 7, "request": "abc"})
+    step, manifest = ck.latest(str(tmp_path))
+    assert step == 7
+    assert manifest["extra"] == {"cursor": 7, "request": "abc"}
+    assert "w" in manifest["leaves"]
+
+
+def test_latest_none_when_empty(tmp_path):
+    assert ck.latest(str(tmp_path)) is None
+    assert ck.latest(str(tmp_path / "missing")) is None
+
+
+def test_latest_falls_back_without_pointer(tmp_path):
+    """Deleting latest.json (or a stale pointer after GC) must not break
+    resume: latest() falls back to scanning the step directories."""
+    ck.save(str(tmp_path), 4, _tree(), extra_manifest={"cursor": 4})
+    os.remove(tmp_path / "latest.json")
+    step, manifest = ck.latest(str(tmp_path))
+    assert step == 4 and manifest["extra"]["cursor"] == 4
+    # stale pointer: points at a GC'd step dir -> fall back to the scan
+    ck.save(str(tmp_path), 9, _tree(), extra_manifest={"cursor": 9})
+    import shutil
+    shutil.rmtree(tmp_path / "step_000000000009")
+    step, manifest = ck.latest(str(tmp_path))
+    assert step == 4 and manifest["extra"]["cursor"] == 4

@@ -1,0 +1,430 @@
+"""Serving layer: coalescing parity, caches, warm-start safety, resume.
+
+The three contracts worth defending with bits, not tolerances:
+
+* a coalesced request's betas are identical to a solo solve (exactly one
+  solve runs, per-request solver caches are reset);
+* stored state warm-starts but never certifies — even an adversarially
+  poisoned store record cannot make the server report a stale discard;
+* an interrupted + resumed chunked path is identical to an uninterrupted
+  chunked run with the same segmenting.
+"""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import sgl
+from repro.core.session import SGLSession, SolverConfig, lambda_grid
+from repro.data.synthetic import make_synthetic
+from repro.kernels import ops as kops
+from repro.serve import (
+    CertificateStore,
+    PathRequest,
+    Preempted,
+    ServeConfig,
+    SessionCache,
+    SGLServer,
+    coalesce,
+)
+from repro.serve.queue import RequestQueue
+from repro.serve.store import PathRecord
+from repro.serve.types import array_digest, problem_digest
+
+CFG = SolverConfig(tol=1e-7, max_epochs=5_000)
+
+
+def _problem(seed=0, n=32, p=128, groups=16, tau=0.3, y_noise=0.0):
+    X, y, _beta, sizes = make_synthetic(
+        n=n, p=p, n_groups=groups, gamma1=3, gamma2=3, seed=seed)
+    if y_noise:
+        y = y + y_noise * np.random.default_rng(99).standard_normal(y.shape)
+    return sgl.make_problem(X, y, sizes, tau=tau)
+
+
+def _grid(problem, T=5, delta=1.5):
+    return lambda_grid(float(sgl.lambda_max(problem)), T=T, delta=delta)
+
+
+def _drain_queue(q, default, n):
+    out = []
+    while len(out) < n:
+        got = q.drain(max_batch=n, window_s=0.05)
+        assert got is not None
+        out.extend(got)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# value identities: cache_token, digests
+# ---------------------------------------------------------------------------
+
+def test_cache_token_equal_and_hashable():
+    a, b = SolverConfig(tol=1e-6), SolverConfig(tol=1e-6)
+    assert a.cache_token() == b.cache_token()
+    assert hash(a.cache_token()) == hash(b.cache_token())
+    assert {a.cache_token(): 1}[b.cache_token()] == 1
+    assert a.cache_token() != SolverConfig(tol=1e-5).cache_token()
+    # rule objects resolve to a stable repr, so "gap" the string and the
+    # resolved rule object produce the same token
+    assert (SolverConfig(rule="gap").cache_token()
+            == SolverConfig().cache_token())
+
+
+def test_problem_digest_is_value_identity():
+    p1, p2 = _problem(seed=0), _problem(seed=0)
+    assert p1.X is not p2.X  # distinct buffers, equal values
+    assert problem_digest(p1, CFG) == problem_digest(p2, CFG)
+    p3 = _problem(seed=0, y_noise=1e-3)
+    assert problem_digest(p1, CFG) != problem_digest(p3, CFG)
+    assert array_digest(np.arange(4)) != array_digest(np.arange(4.0))
+
+
+# ---------------------------------------------------------------------------
+# queue + coalescing
+# ---------------------------------------------------------------------------
+
+def test_coalesce_identical_requests_collapse():
+    prob = _problem()
+    grid = _grid(prob)
+    q = RequestQueue()
+    for i in range(3):
+        q.submit(PathRequest(f"t{i}", prob, grid), CFG)
+    q.submit(PathRequest("t3", prob, grid[:3]), CFG)  # different grid
+    groups = coalesce(_drain_queue(q, CFG, 4), CFG)
+    assert [len(g.members) for g in groups] == [3, 1]
+    assert not groups[0].merged
+    np.testing.assert_array_equal(groups[0].lambdas, grid)
+    for idx in groups[0].member_index:
+        np.testing.assert_array_equal(idx, np.arange(len(grid)))
+
+
+def test_coalesce_merge_grids_union():
+    prob = _problem()
+    grid = _grid(prob, T=6)
+    g1, g2 = grid[::2], grid[1::2]
+    q = RequestQueue()
+    q.submit(PathRequest("t0", prob, g1), CFG)
+    q.submit(PathRequest("t1", prob, g2), CFG)
+    (group,) = coalesce(_drain_queue(q, CFG, 2), CFG, merge_grids=True)
+    assert group.merged and len(group.members) == 2
+    np.testing.assert_array_equal(group.lambdas, grid)  # descending union
+    np.testing.assert_array_equal(group.lambdas[group.member_index[0]], g1)
+    np.testing.assert_array_equal(group.lambdas[group.member_index[1]], g2)
+
+
+def test_queue_close_rejects_and_drains_none():
+    q = RequestQueue()
+    q.close()
+    with pytest.raises(RuntimeError):
+        q.submit(PathRequest("t", _problem(), [1.0]), CFG)
+    assert q.drain(window_s=0.0) is None
+
+
+# ---------------------------------------------------------------------------
+# the serve loop: parity, store, cache
+# ---------------------------------------------------------------------------
+
+def _server(**kw):
+    kw.setdefault("default_solver", CFG)
+    kw.setdefault("coalesce_window_s", 0.2)
+    return SGLServer(ServeConfig(**kw)).start()
+
+
+def test_coalesced_bit_identical_to_solo():
+    prob = _problem(seed=1)
+    grid = _grid(prob)
+    server = _server()
+    try:
+        futs = [server.submit(PathRequest(f"t{i}", prob, grid))
+                for i in range(3)]
+        resps = [f.result(timeout=600) for f in futs]
+    finally:
+        server.stop()
+    assert all(r.served_from == "coalesced" and r.coalesced_n == 3
+               for r in resps)
+    assert server.counters["path_solves"] == 1
+    solo = SGLSession(prob, CFG).solve_path(grid)
+    for r in resps:
+        np.testing.assert_array_equal(r.result.betas, solo.betas)
+        np.testing.assert_array_equal(r.result.epochs, solo.epochs)
+
+
+def test_store_serves_exact_repeat_bit_identically():
+    prob = _problem(seed=2)
+    grid = _grid(prob)
+    server = _server()
+    try:
+        first = server.submit(PathRequest("t0", prob, grid)).result(600)
+        again = server.submit(PathRequest("t1", prob, grid)).result(600)
+    finally:
+        server.stop()
+    assert not first.store_hit
+    assert again.store_hit and again.served_from == "store"
+    assert server.counters["path_solves"] == 1
+    np.testing.assert_array_equal(again.result.betas, first.result.betas)
+
+
+def test_cached_session_repeat_has_zero_retraces():
+    """The cache's correctness check, asserted through the kernels.ops
+    audit: an exact repeat served from a session-cache hit must not grow
+    any registered jit cache (store disabled to force the re-solve)."""
+    prob = _problem(seed=3)
+    grid = _grid(prob)
+    server = _server(serve_from_store=False)
+    try:
+        server.submit(PathRequest("t0", prob, grid)).result(600)
+        with kops.audit_scope() as audit:
+            again = server.submit(PathRequest("t0", prob, grid)).result(600)
+        assert again.session_cache_hit
+        assert audit.retraces == 0
+        assert server.cache.retraces == 0
+        assert server.cache.hits >= 1
+    finally:
+        server.stop()
+
+
+# ---------------------------------------------------------------------------
+# warm starts: engagement and the certificate-safety contract
+# ---------------------------------------------------------------------------
+
+def _assert_no_stale_screens(resp, problem, grid):
+    """Every group the served path screened must be zero in a tight-tol
+    unscreened reference — a nonzero one would be a stale certificate."""
+    ref = SGLSession(problem, SolverConfig(
+        tol=1e-9, max_epochs=50_000, rule="none")).solve_path(grid)
+    for t in range(len(grid)):
+        screened = ~np.asarray(resp.result.group_active[t])
+        nz = np.linalg.norm(np.asarray(ref.betas[t]), axis=-1) > 1e-8
+        assert int((screened & nz).sum()) == 0
+    assert resp.result.certificates_safe
+
+
+def test_perturbed_y_warm_start_is_safe():
+    prob = _problem(seed=4)
+    grid = _grid(prob, T=6)
+    pert = _problem(seed=4, y_noise=0.02)
+    tail = grid[3:]
+    server = _server()
+    try:
+        server.submit(PathRequest("t0", prob, grid)).result(600)
+        resp = server.submit(PathRequest("t1", pert, tail)).result(600)
+    finally:
+        server.stop()
+    # a mid-path start on a nearby problem must admit the stored hint...
+    assert resp.warm_started and resp.warm_source_lam is not None
+    # ...and every discard must still come from a fresh GAP round
+    _assert_no_stale_screens(resp, pert, tail)
+
+
+def test_poisoned_store_record_cannot_certify():
+    """Adversarial store: records claiming everything screened (and one
+    with a garbage primal point) must not corrupt a served result."""
+    prob = _problem(seed=5)
+    grid = _grid(prob, T=6)
+    pert = _problem(seed=5, y_noise=0.02)
+    tail = grid[3:]
+    server = _server()
+    try:
+        base = server.submit(PathRequest("t0", prob, grid)).result(600)
+        # Poison 1: a valid-looking record whose masks claim every group
+        # is screened everywhere.  Masks are diagnostics — the serve path
+        # must never read them as certificates.
+        for key, rec in list(server.store._records.items()):
+            server.store._records[key] = rec._replace(
+                group_active=np.zeros_like(rec.group_active))
+        # Poison 2: same-design record with a garbage primal point; the
+        # measured admission gate must reject it (its gap cannot beat a
+        # cold start), never crash or adopt it.
+        dkey = next(iter(server.store._records))[0]
+        G, ng = np.asarray(base.result.betas).shape[1:]
+        server.store._records[(dkey, "poisoned-y", "poisoned-grid")] = \
+            PathRecord(
+                lambdas=np.asarray(tail),
+                betas=1e6 * np.ones((len(tail), G, ng)),
+                gaps=np.zeros(len(tail)),
+                epochs=np.zeros(len(tail), int),
+                group_active=np.zeros((len(tail), G), bool),
+                certificates_safe=True,
+                y_digest="poisoned-y",
+            )
+        resp = server.submit(PathRequest("t1", pert, tail)).result(600)
+    finally:
+        server.stop()
+    _assert_no_stale_screens(resp, pert, tail)
+
+
+def test_merge_grids_tol_level_parity():
+    cfg = SolverConfig(tol=1e-8, max_epochs=20_000)
+    prob = _problem(seed=6)
+    grid = _grid(prob, T=6)
+    g1, g2 = grid[::2], grid[1::2]
+    server = _server(default_solver=cfg, merge_grids=True,
+                     coalesce_window_s=0.5)
+    try:
+        f1 = server.submit(PathRequest("t0", prob, g1))
+        f2 = server.submit(PathRequest("t1", prob, g2))
+        r1, r2 = f1.result(600), f2.result(600)
+    finally:
+        server.stop()
+    assert r1.merged_grid and r2.merged_grid
+    assert server.counters["path_solves"] == 1
+    np.testing.assert_array_equal(r1.result.lambdas, g1)
+    np.testing.assert_array_equal(r2.result.lambdas, g2)
+    # The union grid changes the warm-start trajectory, so parity with a
+    # solo run is tolerance-level, not bit-level (the documented trade).
+    for r, g in ((r1, g1), (r2, g2)):
+        solo = SGLSession(prob, cfg).solve_path(g)
+        np.testing.assert_allclose(r.result.betas, solo.betas, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# resumable paths: drain -> Preempted -> resume, bit-identical
+# ---------------------------------------------------------------------------
+
+def _chunk_cfg(tmpdir, **kw):
+    kw.setdefault("default_solver", CFG)
+    kw.setdefault("coalesce_window_s", 0.05)
+    return ServeConfig(ckpt_dir=str(tmpdir), ckpt_every=2, ckpt_keep=2,
+                       **kw)
+
+
+def test_preempt_resume_bit_identical(tmp_path):
+    prob = _problem(seed=7)
+    grid = _grid(prob, T=6)
+    req = PathRequest("t0", prob, grid)
+
+    # uninterrupted chunked run (same segmenting) = the reference
+    ref_server = SGLServer(_chunk_cfg(tmp_path / "ref")).start()
+    try:
+        ref = ref_server.submit(req).result(600)
+    finally:
+        ref_server.stop()
+
+    # interrupted run: drain (the SIGTERM path) after the second segment
+    bomb_dir = tmp_path / "bomb"
+    server = SGLServer(_chunk_cfg(bomb_dir))
+
+    def bomb(digest, cursor, T):
+        if cursor >= 4:
+            server.drain()
+
+    server.config.on_segment = bomb
+    server.start()
+    fut = server.submit(req)
+    with pytest.raises(Preempted) as ei:
+        fut.result(600)
+    server.join()
+    assert ei.value.cursor == 4
+    assert server.counters["preempted"] == 1
+
+    # restart on the same ckpt dir: resumes at the stored cursor and
+    # reproduces the uninterrupted run exactly (betas AND epochs)
+    server2 = SGLServer(_chunk_cfg(bomb_dir)).start()
+    try:
+        resumed = server2.submit(req).result(600)
+    finally:
+        server2.stop()
+    assert resumed.resumed_from == 4
+    assert server2.counters["resumed"] == 1
+    np.testing.assert_array_equal(resumed.result.betas, ref.result.betas)
+    np.testing.assert_array_equal(resumed.result.epochs, ref.result.epochs)
+    # keep-k GC ran in the request's ckpt dir
+    rdir = bomb_dir / resumed.request_digest
+    steps = [d for d in os.listdir(rdir)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    assert len(steps) <= 2
+
+
+def test_sigterm_hook_drains(tmp_path):
+    server = SGLServer(_chunk_cfg(tmp_path)).start()
+    prev = server.install_sigterm_hook()
+    try:
+        signal.raise_signal(signal.SIGTERM)
+        deadline = time.time() + 5
+        while not server.draining and time.time() < deadline:
+            time.sleep(0.01)
+        assert server.draining
+        with pytest.raises(RuntimeError):
+            server.submit(PathRequest("t", _problem(), [1.0]))
+    finally:
+        signal.signal(signal.SIGTERM, prev)
+        server.join()
+
+
+# ---------------------------------------------------------------------------
+# session-level primitives the server builds on
+# ---------------------------------------------------------------------------
+
+def test_solve_path_beta0_prev_epochs_chunked_parity():
+    """With compact rounds off (no cross-segment reference state) and no
+    lambda batching, manually chunked solve_path calls threaded through
+    beta0/prev_epochs reproduce the one-shot run bit-for-bit."""
+    cfg = SolverConfig(tol=1e-7, max_epochs=5_000, full_round_every=0)
+    prob = _problem(seed=8)
+    grid = _grid(prob, T=6)
+    one = SGLSession(prob, cfg).solve_path(grid, batch_lambdas=1)
+
+    sess = SGLSession(prob, cfg)
+    parts, beta0, prev = [], None, None
+    for k in range(0, len(grid), 2):
+        pr = sess.solve_path(grid[k:k + 2], beta0=beta0,
+                             prev_epochs=prev, batch_lambdas=1)
+        parts.append(pr)
+        beta0 = pr.betas[-1]
+        prev = int(pr.epochs[-1])
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(p.betas) for p in parts]), one.betas)
+    np.testing.assert_array_equal(
+        np.concatenate([np.asarray(p.epochs) for p in parts]), one.epochs)
+
+
+def test_session_xt_pre_adoption_and_validation():
+    cfg = SolverConfig(screen_backend="pallas")
+    prob = _problem(seed=9)
+    xt = kops.prepare_transposed(prob.X)
+    s_pre = SGLSession(prob, cfg, xt_pre=xt)
+    s_own = SGLSession(prob, cfg)
+    grid = _grid(prob, T=3)
+    np.testing.assert_array_equal(
+        s_pre.solve_path(grid).betas, s_own.solve_path(grid).betas)
+    with pytest.raises(ValueError, match="xt_pre"):
+        SGLSession(prob, cfg, xt_pre=np.zeros((3, 3)))
+
+
+def test_session_cache_lru_and_design_sharing():
+    cache = SessionCache(capacity=2)
+    cfg = SolverConfig(screen_backend="pallas")  # needs the (p, n) design
+    probs = [_problem(seed=10, y_noise=k * 0.01) for k in range(3)]
+    for p in probs:
+        _, hit = cache.get(p, cfg)
+        assert not hit
+    # same X across the perturbed-y family: the transposed design is
+    # built once and shared
+    assert cache.design_hits == 2
+    assert cache.stats()["sessions"] == 2 and cache.evictions == 1
+    _, hit = cache.get(probs[2], cfg)   # still resident
+    assert hit
+    _, hit = cache.get(probs[0], cfg)   # LRU-evicted above
+    assert not hit
+
+
+def test_session_cache_capacity_zero_disables():
+    cache = SessionCache(capacity=0)
+    prob = _problem(seed=11)
+    s1, hit1 = cache.get(prob, CFG)
+    s2, hit2 = cache.get(prob, CFG)
+    assert not hit1 and not hit2 and s1 is not s2
+    assert cache.stats()["sessions"] == 0
+
+
+def test_store_capacity_zero_disables():
+    store = CertificateStore(capacity=0)
+    prob = _problem(seed=12)
+    grid = _grid(prob, T=3)
+    res = SGLSession(prob, CFG).solve_path(grid)
+    store.put("d", prob, CFG, res)
+    assert store.exact("d") is None
+    assert store.warm_hint(prob, CFG, grid) is None
