@@ -56,7 +56,8 @@ class SessionCache:
     """LRU of jit-warm :class:`SGLSession` objects, value-keyed.
 
     ``capacity=0`` disables caching (every lookup is a miss and nothing
-    is retained) — the serving benchmark's no-cache baseline.
+    is retained — the shared transposed-design sub-cache is bypassed
+    too) — the serving benchmark's fully-cold no-cache baseline.
     """
 
     def __init__(self, capacity: int = 8, design_capacity: int = 8):
@@ -98,7 +99,9 @@ class SessionCache:
         needs_xt = (resolve_screen_backend(config.screen_backend) == "pallas"
                     or resolve_solver_backend(config.solver_backend)
                     == "pallas")
-        if needs_xt and self.design_capacity > 0:
+        # capacity=0 means fully cold: no design reuse either, so the
+        # no-cache baseline really rebuilds everything per request.
+        if needs_xt and self.capacity > 0 and self.design_capacity > 0:
             dkey = array_digest(problem.X)
             xt_pre = self._designs.get(dkey)
             if xt_pre is not None:

@@ -67,6 +67,7 @@ class RequestQueue:
     def __init__(self) -> None:
         self._q: _queue.Queue = _queue.Queue()
         self._closed = threading.Event()
+        self._lock = threading.Lock()   # guards submit-side stats
         self.submitted = 0
 
     def submit(self, request: PathRequest,
@@ -77,7 +78,8 @@ class RequestQueue:
         self._q.put(Pending(request, fut,
                             request.digest(default_config),
                             time.perf_counter()))
-        self.submitted += 1
+        with self._lock:
+            self.submitted += 1
         return fut
 
     def close(self) -> None:

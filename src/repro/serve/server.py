@@ -17,6 +17,8 @@ checkpoint directory — and turns tenant :class:`PathRequest`\\ s into
    admitted only when :func:`repro.serve.store.warm_eval` measures the
    hint's gap beating the cold start's, and NEVER as certificates (every
    reported discard comes from a fresh GAP round inside the solve);
+   merged-grid slices seed warm-start records only, never the
+   exact-repeat map, whose contract is the solo solve's output verbatim;
 4. with checkpointing enabled, paths run in ``ckpt_every``-lambda
    segments through the atomic :mod:`repro.ckpt` writer; a drain (or
    SIGTERM via :meth:`install_sigterm_hook`) checkpoints at the next
@@ -24,6 +26,10 @@ checkpoint directory — and turns tenant :class:`PathRequest`\\ s into
    and a re-submitted request on a restarted server resumes from the
    stored cursor — bit-identical to an uninterrupted run with the same
    segmenting (`solve_path`'s ``beta0``/``prev_epochs`` threading).
+   Resume is guarded by the manifest's request digest, solver-cache
+   digest, AND a digest of the grid actually solved, so a union-grid
+   checkpoint left by a merged group is never adopted by a solo
+   re-submission of its lead request.
 """
 from __future__ import annotations
 
@@ -45,7 +51,7 @@ from ..core.solver import SolveCaches
 from .cache import SessionCache
 from .queue import CoalescedGroup, Pending, RequestQueue, coalesce
 from .store import CertificateStore, warm_eval
-from .types import PathResponse
+from .types import PathRequest, PathResponse, array_digest
 
 __all__ = ["ServeConfig", "SGLServer", "Preempted"]
 
@@ -124,8 +130,10 @@ class SGLServer:
 
     def submit(self, request: PathRequest):
         """Enqueue one tenant request; returns a Future[PathResponse]."""
-        self.counters["requests"] += 1
-        return self.queue.submit(request, self.config.default_solver)
+        fut = self.queue.submit(request, self.config.default_solver)
+        with self._lock:     # tenants submit from arbitrary threads
+            self.counters["requests"] += 1
+        return fut
 
     def stop(self, timeout: Optional[float] = None) -> None:
         """Finish everything queued, then stop the worker."""
@@ -304,8 +312,13 @@ class SGLServer:
                           else _slice_result(result, idx))
             if served_from != "store" and cfg.serve_from_store:
                 scfg = p.request.resolved_config(cfg.default_solver)
+                # A merged-grid slice agrees with the request's solo run
+                # only to solver tolerance, so it may seed warm-start
+                # records but never the exact-repeat map — a later
+                # identical solo request must get the verbatim guarantee
+                # the store promises, not a tolerance-level stand-in.
                 self.store.put(p.digest, p.request.problem, scfg,
-                               member_res)
+                               member_res, exact=not group.merged)
             self.counters["responses"] += 1
             p.future.set_result(PathResponse(
                 tenant=p.request.tenant,
@@ -345,18 +358,27 @@ class SGLServer:
             repr(self.cache.key(session.problem, scfg)).encode(),
             digest_size=8,
         ).hexdigest()
+        # Identity of the grid actually being solved.  The request digest
+        # alone is not enough: a merged group checkpoints under the lead
+        # member's digest but solves the UNION grid, so a later solo
+        # re-submission of the lead request (same digest, different grid)
+        # must not adopt that checkpoint — its prefix arrays belong to
+        # union lambda points.  Verified on resume below.
+        grid_dig = array_digest(lambdas)
         cursor = 0
         prev_epochs = 0
         beta_carry = beta0
         segments: List[PathResult] = []
         acc = None              # restored pre-preemption state, if any
         resumed_from = None
+        rule_restored = None    # rule_name when resuming a complete path
 
         found = ckpt.latest(rdir)
         if found is not None:
             step, manifest = found
             extra = manifest.get("extra", {})
             if (extra.get("request") == digest
+                    and extra.get("grid") == grid_dig
                     and extra.get("caches") == caches_dig
                     and 0 < int(extra.get("cursor", 0)) <= T_):
                 tree_like = {
@@ -369,6 +391,7 @@ class SGLServer:
                 beta_carry = jnp.asarray(acc["beta_carry"],
                                          session.problem.X.dtype)
                 resumed_from = cursor
+                rule_restored = extra.get("rule_name")
 
         while cursor < T_:
             if self.draining:
@@ -392,16 +415,18 @@ class SGLServer:
             state = _pack_state(acc, segments, beta_carry)
             ckpt.save(rdir, cursor, state, extra_manifest={
                 "request": digest,
+                "grid": grid_dig,
                 "cursor": cursor,
                 "prev_epochs": prev_epochs,
                 "caches": caches_dig,
+                "rule_name": pr.rule_name,
                 "T": T_,
             })
             ckpt.gc_keep_k(rdir, cfg.ckpt_keep)
             if cfg.on_segment is not None:
                 cfg.on_segment(digest, cursor, T_)
 
-        return _assemble(lambdas, acc, segments), resumed_from
+        return _assemble(lambdas, acc, segments, rule_restored), resumed_from
 
 
 # ----------------------------------------------------------------------------
@@ -435,12 +460,18 @@ def _pack_state(acc, segments: List[PathResult], beta_carry) -> dict:
 
 
 def _assemble(lambdas: np.ndarray, acc,
-              segments: List[PathResult]) -> PathResult:
-    """Stitch restored state + fresh segments into one PathResult."""
+              segments: List[PathResult],
+              rule_restored: Optional[str] = None) -> PathResult:
+    """Stitch restored state + fresh segments into one PathResult.
+
+    ``rule_restored`` is the rule_name persisted in the checkpoint
+    manifest — the only rule source when resume finds a fully-complete
+    checkpoint (no fresh segments ran)."""
     state = _pack_state(acc, segments, np.zeros(0))
     counters = {f: (float(state[f]) if f == "round_flops"
                     else int(state[f])) for f in _SUM_FIELDS}
     rule_name = (segments[-1].rule_name if segments
+                 else rule_restored if rule_restored is not None
                  else "gap")
     return PathResult(
         lambdas=np.asarray(lambdas, float),

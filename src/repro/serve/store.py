@@ -115,12 +115,19 @@ class CertificateStore:
     # -- writes ------------------------------------------------------------
 
     def put(self, request_digest: str, problem: SGLProblem,
-            config: SolverConfig, result: PathResult) -> None:
+            config: SolverConfig, result: PathResult, *,
+            exact: bool = True) -> None:
+        """Record a solved path.  ``exact=False`` skips the exact-repeat
+        map and keeps only the warm-start record — used for merged-grid
+        slices, which match the request's solo output to solver tolerance
+        rather than bit-exactly and so must never satisfy the verbatim
+        exact-repeat short-circuit."""
         if self.capacity <= 0:
             return
         self.puts += 1
-        self._exact[request_digest] = result
-        self._exact.move_to_end(request_digest)
+        if exact:
+            self._exact[request_digest] = result
+            self._exact.move_to_end(request_digest)
         dkey = design_digest(problem, config)
         ydig = array_digest(problem.y)
         rkey = (dkey, ydig, array_digest(np.asarray(result.lambdas)))

@@ -16,6 +16,7 @@ import time
 import numpy as np
 import pytest
 
+from repro import ckpt
 from repro.core import sgl
 from repro.core.session import SGLSession, SolverConfig, lambda_grid
 from repro.data.synthetic import make_synthetic
@@ -280,6 +281,35 @@ def test_merge_grids_tol_level_parity():
         np.testing.assert_allclose(r.result.betas, solo.betas, atol=1e-4)
 
 
+def test_merged_result_not_stored_as_exact_repeat():
+    """A merged-grid slice is tolerance-level, so it must never satisfy
+    the exact-repeat short-circuit: a later identical solo request gets a
+    fresh solve whose betas are bit-identical to a solo run."""
+    prob = _problem(seed=13)
+    grid = _grid(prob, T=6)
+    g1, g2 = grid[::2], grid[1::2]
+    server = _server(merge_grids=True, warm_start=False,
+                     coalesce_window_s=0.5)
+    try:
+        f1 = server.submit(PathRequest("t0", prob, g1))
+        f2 = server.submit(PathRequest("t1", prob, g2))
+        r1 = f1.result(600)
+        f2.result(600)
+        assert r1.merged_grid
+        solo = server.submit(PathRequest("t2", prob, g1)).result(600)
+    finally:
+        server.stop()
+    assert not solo.store_hit and solo.served_from != "store"
+    assert not solo.merged_grid
+    assert server.counters["path_solves"] == 2
+    ref = SGLSession(prob, CFG).solve_path(g1)
+    np.testing.assert_array_equal(solo.result.betas, ref.betas)
+    # the merged slices still seeded warm-start records (hints are
+    # measured and safe either way), just not the exact map
+    assert server.store.stats()["records"] > 0
+    assert server.store.stats()["exact_entries"] == 1  # the solo result
+
+
 # ---------------------------------------------------------------------------
 # resumable paths: drain -> Preempted -> resume, bit-identical
 # ---------------------------------------------------------------------------
@@ -336,6 +366,84 @@ def test_preempt_resume_bit_identical(tmp_path):
     steps = [d for d in os.listdir(rdir)
              if d.startswith("step_") and not d.endswith(".tmp")]
     assert len(steps) <= 2
+
+
+def test_merged_checkpoint_not_adopted_by_solo_resubmission(tmp_path):
+    """The resume guard verifies the solved-grid digest: a merged group
+    checkpoints the UNION grid under the lead member's request digest, so
+    a preempted union checkpoint (cursor within the solo grid's length)
+    must not be adopted by a later solo re-submission of the lead request
+    — its prefix arrays belong to union lambda points."""
+    prob = _problem(seed=14)
+    grid = _grid(prob, T=6)
+    g1, g2 = grid[::2], grid[1::2]
+
+    server = SGLServer(_chunk_cfg(tmp_path, merge_grids=True,
+                                  coalesce_window_s=0.5))
+
+    def bomb(digest, cursor, T):
+        if cursor >= 2:
+            server.drain()
+
+    server.config.on_segment = bomb
+    server.start()
+    f1 = server.submit(PathRequest("t0", prob, g1))
+    f2 = server.submit(PathRequest("t1", prob, g2))
+    with pytest.raises(Preempted) as ei:
+        f1.result(600)
+    with pytest.raises(Preempted):
+        f2.result(600)
+    server.join()
+    # preempted mid-union at cursor 2 <= len(g1): digest-compatible —
+    # only the grid digest distinguishes this checkpoint from solo state
+    assert ei.value.cursor == 2 and ei.value.cursor <= len(g1)
+    step, manifest = ckpt.latest(str(tmp_path / ei.value.request_digest))
+    assert manifest["extra"]["T"] == len(grid)  # really the union grid
+
+    server2 = SGLServer(_chunk_cfg(tmp_path)).start()
+    try:
+        solo = server2.submit(PathRequest("t0", prob, g1)).result(600)
+    finally:
+        server2.stop()
+    assert solo.resumed_from is None
+    assert server2.counters["resumed"] == 0
+    np.testing.assert_array_equal(solo.result.lambdas, g1)
+    # bit-identical to an uninterrupted chunked solo run (same segmenting)
+    ref_server = SGLServer(_chunk_cfg(tmp_path / "ref")).start()
+    try:
+        ref = ref_server.submit(PathRequest("t0", prob, g1)).result(600)
+    finally:
+        ref_server.stop()
+    np.testing.assert_array_equal(solo.result.betas, ref.result.betas)
+    np.testing.assert_array_equal(solo.result.epochs, ref.result.epochs)
+
+
+def test_resume_complete_checkpoint_preserves_rule_name(tmp_path):
+    """Resuming from a fully-complete checkpoint (stored cursor == T, no
+    fresh segments) must report the rule that actually ran, restored from
+    the manifest — not a 'gap' default."""
+    cfg = SolverConfig(tol=1e-7, max_epochs=5_000, rule="dynamic")
+    prob = _problem(seed=15)
+    grid = _grid(prob, T=4)
+    req = PathRequest("t0", prob, grid)
+
+    server = SGLServer(_chunk_cfg(tmp_path, default_solver=cfg,
+                                  serve_from_store=False)).start()
+    try:
+        first = server.submit(req).result(600)
+    finally:
+        server.stop()
+    assert first.result.rule_name == "dynamic"
+
+    server2 = SGLServer(_chunk_cfg(tmp_path, default_solver=cfg,
+                                   serve_from_store=False)).start()
+    try:
+        resumed = server2.submit(req).result(600)
+    finally:
+        server2.stop()
+    assert resumed.resumed_from == len(grid)
+    assert resumed.result.rule_name == "dynamic"
+    np.testing.assert_array_equal(resumed.result.betas, first.result.betas)
 
 
 def test_sigterm_hook_drains(tmp_path):
