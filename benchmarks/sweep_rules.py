@@ -32,6 +32,14 @@ unscreened reference (nothing screened is nonzero at the optimum), the
 GAP rule dominates the static and dynamic spheres on screened fraction,
 and unsafe rules are flagged (``certificates_safe=False``) with their
 heuristic discards counted — then exits.
+
+``--loss`` (default ``lsq``) selects the data-fidelity term through
+``SolverConfig.loss`` and is recorded as a column on every row/curve.
+``--loss logistic`` binarizes each config's response and restricts the
+rule matrix to the rules whose spheres hold off-lsq (the GAP family plus
+the unsafe heuristics); the smoke invariants then assert the safety
+matrix per rule and GAP dominance over the unscreened baseline — the
+CI's ``sweep_rules --smoke --loss logistic`` step (``BENCH_pr8.json``).
 """
 from __future__ import annotations
 
@@ -47,9 +55,36 @@ from repro.core import SGLSession, SolverConfig, make_problem
 from repro.data.climate import make_climate_like
 from repro.data.synthetic import make_synthetic
 from repro.launch.report import render_sweep_markdown
+from repro.losses import available_losses
 from repro.rules import GapSafeRule, available_rules, get_rule
 
 from .common import emit, header, rows
+
+
+def for_loss(problem, cfg_name, loss):
+    """Adapt a config to a data-fidelity loss: logistic needs a {0,1}
+    response, so binarize at the median (balanced classes by design);
+    the loss is folded into the config label so lsq and logistic cells
+    never collide in the curves/report grouping."""
+    if loss == "lsq":
+        return problem, cfg_name
+    import jax.numpy as jnp
+
+    y01 = np.asarray(problem.y) > np.median(np.asarray(problem.y))
+    problem = problem._replace(y=jnp.asarray(y01, problem.X.dtype))
+    return problem, f"{cfg_name}-{loss}"
+
+
+def rules_for_loss(loss):
+    """The rules whose spheres are provable under this loss (the lsq-only
+    geometries — static/dynamic/DST3 — are excluded off-lsq exactly as
+    ``SolverConfig`` would reject them)."""
+    names = []
+    for name in available_rules():
+        r = get_rule(name)
+        if r.supported_losses is None or loss in r.supported_losses:
+            names.append(name)
+    return names
 
 
 def synthetic_paper_problem(smoke: bool = False):
@@ -74,13 +109,15 @@ def climate_problem(smoke: bool = False):
     return make_problem(X, y, sizes, tau=0.4), "climate"
 
 
-def _unscreened_reference(problem, lambdas, tol=1e-10, max_epochs=60_000):
+def _unscreened_reference(problem, lambdas, tol=1e-10, max_epochs=60_000,
+                          loss="lsq"):
     """Tight-tol, rule='none' warm-started reference path — the safety
     oracle every safe rule's masks are checked against."""
     import jax.numpy as jnp
 
     ref = SGLSession(problem, SolverConfig(tol=tol, rule="none",
-                                           max_epochs=max_epochs))
+                                           max_epochs=max_epochs,
+                                           loss=loss))
     betas = []
     beta = jnp.zeros((problem.G, problem.ng), problem.X.dtype)
     for lam_ in lambdas:
@@ -109,11 +146,11 @@ def _fig2_curve(problem, result, T):
 
 
 def run_cell(problem, cfg_name, rule_name, T, delta, tol, max_epochs,
-             beta_ref=None):
-    """One (config, rule, T, tol) sweep cell -> (curve dict, PathResult)."""
+             beta_ref=None, loss="lsq"):
+    """One (config, loss, rule, T, tol) sweep cell -> (curve, PathResult)."""
     rule = get_rule(rule_name)
     session = SGLSession(problem, SolverConfig(
-        tol=tol, max_epochs=max_epochs, rule=rule,
+        tol=tol, max_epochs=max_epochs, rule=rule, loss=loss,
     ))
     t0 = time.perf_counter()
     res = session.solve_path(T=T, delta=delta, keep_results=True)
@@ -138,6 +175,7 @@ def run_cell(problem, cfg_name, rule_name, T, delta, tol, max_epochs,
 
     curve = {
         "config": cfg_name,
+        "loss": loss,
         "rule": rule_name,
         "safe": bool(rule.is_safe),
         "T": T,
@@ -172,14 +210,15 @@ def run_cell(problem, cfg_name, rule_name, T, delta, tol, max_epochs,
     return curve, res
 
 
-def gap_string_object_parity(problem, T, delta, tol, max_epochs) -> None:
+def gap_string_object_parity(problem, T, delta, tol, max_epochs,
+                             loss="lsq") -> None:
     """Acceptance criterion: legacy ``rule="gap"`` strings are BIT-identical
     to the ``GapSafeRule()`` object config — betas, epochs, seq/dyn
     counters, and the compact/full round split."""
     runs = {}
     for key, rule in (("string", "gap"), ("object", GapSafeRule())):
         session = SGLSession(problem, SolverConfig(
-            tol=tol, max_epochs=max_epochs, rule=rule,
+            tol=tol, max_epochs=max_epochs, rule=rule, loss=loss,
         ))
         runs[key] = session.solve_path(T=T, delta=delta)
     a, b = runs["string"], runs["object"]
@@ -220,36 +259,40 @@ def write_payload(path: str, payload: dict) -> None:
 
 
 def sweep(problems, T_list, tols, max_epochs, check_safety=False,
-          smoke=False) -> dict:
+          smoke=False, loss="lsq") -> dict:
     curves = {}
+    rule_names = rules_for_loss(loss)
     for problem, cfg_name in problems:
+        problem, cfg_name = for_loss(problem, cfg_name, loss)
         for T in T_list:
             delta = 2.0 if smoke else 3.0
             gap_string_object_parity(problem, T, delta, max(tols),
-                                     max_epochs)
+                                     max_epochs, loss=loss)
             beta_ref = None
             if check_safety:
                 # tol-independent (tight-tol unscreened oracle): computed
                 # once per (config, T), shared by every tol cell below.
                 from repro.core.session import lambda_grid
 
-                session0 = SGLSession(problem)
+                session0 = SGLSession(problem, SolverConfig(loss=loss))
                 lambdas = lambda_grid(session0.lam_max, T=T, delta=delta)
-                beta_ref = _unscreened_reference(problem, lambdas)
+                beta_ref = _unscreened_reference(problem, lambdas,
+                                                 loss=loss)
             for tol in tols:
-                for rule_name in available_rules():
+                for rule_name in rule_names:
                     key = f"{cfg_name}/{rule_name}/T{T}/tol{tol:g}"
                     curve, _ = run_cell(
                         problem, cfg_name, rule_name, T, delta, tol,
-                        max_epochs, beta_ref=beta_ref,
+                        max_epochs, beta_ref=beta_ref, loss=loss,
                     )
                     curves[key] = curve
     return curves
 
 
-def assert_smoke_invariants(curves: dict) -> None:
-    """The CI contract: safe rules are SAFE, GAP dominates the static and
-    dynamic spheres on screened fraction, unsafe rules are flagged."""
+def assert_smoke_invariants(curves: dict, loss: str = "lsq") -> None:
+    """The CI contract: safe rules are SAFE, GAP dominates the lsq-only
+    sphere baselines (or, off-lsq, the unscreened baseline — the only
+    safe comparator whose geometry still holds), unsafe rules flagged."""
     by_rule: dict = {}
     for c in curves.values():
         by_rule.setdefault(c["rule"], []).append(c)
@@ -260,18 +303,20 @@ def assert_smoke_invariants(curves: dict) -> None:
                     f"SAFE rule {rule_name!r} screened a nonzero variable: "
                     f"{c['safety_violations']} violations in {c['config']}"
                 )
-    for cells in zip(by_rule["gap"], by_rule["static"], by_rule["dynamic"]):
-        gap_c, static_c, dyn_c = cells
-        gap_act = sum(gap_c["active_feat_frac"])
-        # Strict-or-equal: the GAP sphere shrinks with the gap, the
-        # baselines don't — at convergence GAP's active set can only be
-        # smaller (paper Fig. 2), modulo float ties.
-        assert gap_act <= sum(static_c["active_feat_frac"]) + 1e-9, \
-            "GAP did not dominate the static sphere on screened fraction"
-        assert gap_act <= sum(dyn_c["active_feat_frac"]) + 1e-9, \
-            "GAP did not dominate the dynamic sphere on screened fraction"
+    baselines = ("static", "dynamic") if loss == "lsq" else ("none",)
+    for rule_name in baselines:
+        for gap_c, base_c in zip(by_rule["gap"], by_rule[rule_name]):
+            gap_act = sum(gap_c["active_feat_frac"])
+            # Strict-or-equal: the GAP sphere shrinks with the gap, the
+            # baselines don't — at convergence GAP's active set can only
+            # be smaller (paper Fig. 2), modulo float ties.
+            assert gap_act <= sum(base_c["active_feat_frac"]) + 1e-9, (
+                f"GAP did not dominate the {rule_name!r} baseline on "
+                f"screened fraction (loss={loss})"
+            )
     assert not by_rule["strong"][0]["safe"]
-    print("SWEEP SMOKE PASS: safety matrix + GAP dominance + unsafe flag")
+    print(f"SWEEP SMOKE PASS (loss={loss}): safety matrix + GAP dominance "
+          "+ unsafe flag")
 
 
 def main() -> None:
@@ -287,6 +332,12 @@ def main() -> None:
     ap.add_argument("--check-safety", action="store_true",
                     help="audit every rule's masks against a tight-tol "
                          "unscreened reference (always on in --smoke)")
+    ap.add_argument("--loss", default="lsq",
+                    choices=[n for n in available_losses()
+                             if n != "multitask"],
+                    help="data-fidelity loss (SolverConfig.loss); "
+                         "'logistic' binarizes the responses and restricts "
+                         "the matrix to rules whose spheres hold off-lsq")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the JSON payload (BENCH_pr5.json schema)")
     ap.add_argument("--md", metavar="PATH", default=None,
@@ -298,21 +349,24 @@ def main() -> None:
         problems = [synthetic_paper_problem(smoke=True),
                     climate_problem(smoke=True)]
         curves = sweep(problems, T_list=(8,), tols=(1e-7,),
-                       max_epochs=20_000, check_safety=True, smoke=True)
-        note = "smoke matrix (reduced synthetic + climate-like)"
+                       max_epochs=20_000, check_safety=True, smoke=True,
+                       loss=args.loss)
+        note = (f"smoke matrix (reduced synthetic + climate-like), "
+                f"loss={args.loss}")
     elif args.paper:
         problems = [synthetic_paper_problem(), climate_problem()]
         curves = sweep(problems, T_list=(40,), tols=(1e-4, 1e-6, 1e-8),
                        max_epochs=10_000,
-                       check_safety=args.check_safety)
-        note = ("synthetic paper config n=100 p=2000 G=200 (T=40, "
-                "max_epochs=10000) + climate-like")
+                       check_safety=args.check_safety, loss=args.loss)
+        note = (f"synthetic paper config n=100 p=2000 G=200 (T=40, "
+                f"max_epochs=10000) + climate-like, loss={args.loss}")
     else:
         problems = [synthetic_paper_problem(), climate_problem()]
         curves = sweep(problems, T_list=(20,), tols=(1e-4, 1e-6),
-                       max_epochs=3000, check_safety=args.check_safety)
-        note = ("synthetic paper config n=100 p=2000 G=200 (T=20, "
-                "max_epochs=3000) + climate-like")
+                       max_epochs=3000, check_safety=args.check_safety,
+                       loss=args.loss)
+        note = (f"synthetic paper config n=100 p=2000 G=200 (T=20, "
+                f"max_epochs=3000) + climate-like, loss={args.loss}")
 
     # Artifacts are written BEFORE the smoke assertions run: when a CI
     # invariant fails, the uploaded curves are exactly what explains it.
@@ -325,7 +379,7 @@ def main() -> None:
             f.write("\n")
         print(f"wrote {args.md}")
     if args.smoke:
-        assert_smoke_invariants(curves)
+        assert_smoke_invariants(curves, loss=args.loss)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,7 @@
 """Batched LM serving smoke: prefill a batch of prompts, then greedily
 decode token-by-token against the KV cache.
 
-    PYTHONPATH=src python examples/serve_lm.py --arch qwen3-8b --tokens 32
+    PYTHONPATH=src python examples/serve_lm.py --arch demo --tokens 32
 
 Uses the reduced config on CPU.  The ``prefill`` / ``decode_step`` pair
 exercised here is the same one ``launch/dryrun.py`` lowers for the
@@ -24,7 +24,7 @@ from repro.models import build
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--arch", default="demo")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--tokens", type=int, default=32)

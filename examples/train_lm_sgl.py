@@ -3,7 +3,7 @@ sparsity as a first-class training feature.
 
     PYTHONPATH=src python examples/train_lm_sgl.py --steps 300
 
-Trains a reduced qwen3-family transformer (~1M params) on a synthetic
+Trains the registry's tiny dense 'demo' transformer on a synthetic
 copy-task corpus for a few hundred steps with:
 
   * AdamW + next-token cross entropy,
@@ -49,11 +49,11 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=50)
     args = ap.parse_args()
 
-    cfg = get("qwen3-8b").reduced()
+    cfg = get("demo").reduced()
     api = build(cfg)
     params = api.init_params(jax.random.PRNGKey(0), dtype=jnp.float32)
     n_params = sum(x.size for x in jax.tree.leaves(params))
-    print(f"arch=qwen3-8b (reduced): {n_params / 1e6:.2f}M params, "
+    print(f"arch=demo: {n_params / 1e6:.2f}M params, "
           f"{cfg.n_layers}L d={cfg.d_model}")
 
     sgl_cfg = SGLRegConfig(lam=args.sgl_lam, tau=args.sgl_tau)

@@ -248,6 +248,90 @@ def _build_serve_warm_eval():
     return build
 
 
+def _logistic_state():
+    """Template problem re-labelled with a {0, 1} response plus the
+    logistic loss and ITS lambda_max (the loss builders' shared state)."""
+    import jax.numpy as jnp
+
+    from repro.core import sgl
+    from repro.losses import resolve_loss
+
+    problem, _lmax = _template()
+    loss = resolve_loss("logistic")
+    y01 = np.asarray(problem.y) > np.median(np.asarray(problem.y))
+    problem = problem._replace(y=jnp.asarray(y01, problem.X.dtype))
+    lmax = sgl.lambda_max_loss(problem, loss)
+    beta = jnp.zeros((_G, _NG), problem.X.dtype)
+    lam = jnp.asarray(0.6, beta.dtype) * jnp.asarray(lmax, beta.dtype)
+    return problem, loss, beta, lam, jnp.asarray(lmax, beta.dtype)
+
+
+def _build_screen_round_logistic():
+    def build():
+        from repro.rules import resolve_rule
+
+        problem, loss, beta, lam, lmax = _logistic_state()
+        fn = _registered("screen_round")
+        return fn, (problem, beta, lam, lmax), {
+            "rule": resolve_rule("gap"), "backend": "xla", "loss": loss}
+
+    return build
+
+
+def _build_inner_rounds_loss():
+    def build():
+        import jax.numpy as jnp
+
+        from repro.core import solver as core_solver
+
+        problem, loss, beta, lam, _lmax = _logistic_state()
+        group_active = np.ones(_G, bool)
+        caches = core_solver.SolveCaches()
+        _idx, take, Xt, Lg, w, gmask = caches.gather(problem, group_active)
+        fn = _registered("inner_rounds_loss")
+        tol = jnp.asarray(1e-8, beta.dtype)
+        return fn, (Xt, Lg, w, problem.y, beta, problem.feat_mask, take,
+                    gmask, problem.tau, lam, tol), {
+                        "loss": loss, "block_epochs": 2, "max_blocks": 2,
+                        "backend": "xla"}
+
+    return build
+
+
+def _build_bcd_epochs_loss():
+    def build():
+        import jax.numpy as jnp
+
+        from repro.core import solver as core_solver
+
+        problem, loss, _beta, lam, _lmax = _logistic_state()
+        dtype = problem.X.dtype
+        group_active = np.ones(_G, bool)
+        caches = core_solver.SolveCaches()
+        _idx, _take, Xt, Lg, w, gmask = caches.gather(problem, group_active)
+        fmask = problem.feat_mask.astype(dtype)
+        # beta/z are donated (donate_argnums) — fresh every build()
+        beta = jnp.zeros((_G, _NG), dtype)
+        z = jnp.zeros((_N,), dtype)
+        fn = _registered("bcd_epochs_loss")
+        return fn, (Xt, Lg * gmask, w, fmask, beta, z, problem.tau,
+                    lam, problem.y), {"loss": loss, "n_epochs": 2}
+
+    return build
+
+
+def _build_serve_warm_eval_logistic():
+    def build():
+        import jax.numpy as jnp
+
+        problem, loss, beta, lam, _lmax = _logistic_state()
+        beta = beta.at[0, 0].set(jnp.asarray(0.1, beta.dtype))
+        fn = _registered("serve_warm_eval")
+        return fn, (problem, beta, lam), {"loss": loss}
+
+    return build
+
+
 def _build_screen_round_warm():
     def build():
         import jax.numpy as jnp
@@ -354,6 +438,32 @@ def default_entry_specs() -> List[EntryPointSpec]:
             build=_build_screen_round_warm(),
             note="cache-keyed serving round: fresh GAP re-certification "
                  "of a warm-start hint (stored certs are never reused)",
+        ),
+        EntryPointSpec(
+            name="screen_round/gap-logistic-xla", traceable="screen_round",
+            build=_build_screen_round_logistic(),
+            note="loss-generic certified round: GAP sphere from the "
+                 "generalized residual rho = -grad F(X beta), nu-scaled "
+                 "radius (repro.losses strategy)",
+        ),
+        EntryPointSpec(
+            name="inner_rounds_loss/logistic-xla",
+            traceable="inner_rounds_loss",
+            build=_build_inner_rounds_loss(),
+            note="blocked majorized-BCD epochs + loss reduced-gap exit "
+                 "(linear-predictor carry)",
+        ),
+        EntryPointSpec(
+            name="bcd_epochs_loss/logistic", traceable="bcd_epochs_loss",
+            build=_build_bcd_epochs_loss(),
+            note="lax.scan reference majorized epochs (donated beta/z; "
+                 "bit-parity oracle of the fused logistic kernel)",
+        ),
+        EntryPointSpec(
+            name="serve_warm_eval/logistic", traceable="serve_warm_eval",
+            build=_build_serve_warm_eval_logistic(),
+            note="loss-aware warm-start admission: the hint gap is "
+                 "measured under the request's data fidelity",
         ),
         EntryPointSpec(
             name="dist_fista/f64-mesh", traceable="dist_step_factory",

@@ -86,6 +86,24 @@ class ArchConfig:
         return dataclasses.replace(self, **changes)
 
 
+# Tiny dense LM used by the examples/launch demo paths and the model smoke
+# tests — already reduced-sized, so ``DEMO.reduced()`` is a fixed point.
+DEMO = ArchConfig(
+    name="demo",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv=2,
+    d_ff=128,
+    vocab=256,
+    head_dim=16,
+    qk_norm=True,
+    subquadratic=False,
+    notes="tiny dense GQA config for CPU demos and smoke tests",
+)
+
+
 @dataclasses.dataclass(frozen=True)
 class ShapeSpec:
     name: str

@@ -1,9 +1,29 @@
-"""Architecture registry: --arch <id> resolution."""
+"""Architecture registry: --arch <id> resolution.
+
+Pruned to the configs this repository actually solves with: the paper's
+own workload (``sgl-paper``) and a tiny dense LM (``demo``) for the
+model-zoo smoke paths.  The seed-era LLM zoo configs (qwen*,
+llama3-405b, mixtral-8x7b, ...) were scaffolding from the repository
+template — no production code path imported them — and were removed;
+:func:`get` keeps erroring helpfully on their names so stale scripts
+fail with directions instead of an ImportError.
+"""
 from __future__ import annotations
 
 import importlib
 
 ARCH_IDS = [
+    "sgl-paper",
+    "demo",
+]
+
+_MODULES = {
+    "sgl-paper": "sgl_paper",
+}
+
+# Seed-era LLM zoo configs removed in the configs prune.  Kept as a name
+# set purely for the error message below.
+_REMOVED = frozenset({
     "qwen2.5-14b",
     "codeqwen1.5-7b",
     "qwen3-8b",
@@ -14,27 +34,23 @@ ARCH_IDS = [
     "mamba2-2.7b",
     "seamless-m4t-large-v2",
     "llava-next-mistral-7b",
-    "sgl-paper",
-]
-
-_MODULES = {
-    "qwen2.5-14b": "qwen2_5_14b",
-    "codeqwen1.5-7b": "codeqwen1_5_7b",
-    "qwen3-8b": "qwen3_8b",
-    "llama3-405b": "llama3_405b",
-    "recurrentgemma-2b": "recurrentgemma_2b",
-    "olmoe-1b-7b": "olmoe_1b_7b",
-    "mixtral-8x7b": "mixtral_8x7b",
-    "mamba2-2.7b": "mamba2_2_7b",
-    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
-    "llava-next-mistral-7b": "llava_next_mistral_7b",
-    "sgl-paper": "sgl_paper",
-}
+})
 
 
 def get(name: str):
+    if name == "demo":
+        from .base import DEMO
+
+        return DEMO
+    if name in _REMOVED:
+        raise KeyError(
+            f"arch {name!r} was removed in the configs prune (the "
+            f"seed-era LLM zoo was template scaffolding); use 'demo' for "
+            f"a tiny dense LM, 'sgl-paper' for the paper workload, or "
+            f"construct an ArchConfig directly via repro.configs.base"
+        )
     if name not in _MODULES:
-        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCH_IDS)}")
     mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
     return mod.CONFIG
 

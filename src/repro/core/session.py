@@ -122,13 +122,17 @@ from .solver import (
     SolveResult,
     _bucket,
     _inner_rounds,
+    _inner_rounds_loss,
     _screen_round,
     _screen_round_compact,
     bcd_epochs,
+    bcd_epochs_loss,
+    check_rule_loss,
     resolve_screen_backend,
     resolve_solver_backend,
 )
 from ..kernels import ops as kops
+from ..losses import Loss, resolve_loss
 from ..rules import ScreeningRule, resolve_rule
 
 __all__ = [
@@ -174,6 +178,18 @@ class _SolverConfigFields(NamedTuple):
                                    #   reference.  Single-device strategy
                                    #   only (the mesh strategy's FISTA
                                    #   kernels have their own dispatch).
+    loss: Union[str, Loss] = "lsq"
+                                   # data-fidelity strategy: a repro.losses
+                                   #   Loss object or a registered name
+                                   #   (lsq | logistic | ...), resolved
+                                   #   through the registry at construction
+                                   #   so unknown names fail fast with the
+                                   #   registered list.  "lsq" is the
+                                   #   paper's squared loss and keeps every
+                                   #   historical code path bit-identical;
+                                   #   other losses run full certified
+                                   #   rounds (no compact rounds, no
+                                   #   batched lambdas, no mesh strategy).
 
 
 class SolverConfig(_SolverConfigFields):
@@ -204,6 +220,10 @@ class SolverConfig(_SolverConfigFields):
                     f"unknown {knob.replace('_', ' ')}: {val!r} "
                     f"(choose one of {'|'.join(cls._BACKENDS)})"
                 )
+        # Loss names are validated here too (same fail-fast contract as the
+        # backend knobs): resolve_loss raises with the registered list on
+        # an unknown name, instead of deep inside the first round.
+        resolve_loss(self.loss)
         return self
 
     def cache_token(self) -> tuple:
@@ -220,6 +240,11 @@ class SolverConfig(_SolverConfigFields):
         """
         d = self._asdict()
         d["rule"] = repr(resolve_rule(d["rule"]))
+        # Same treatment for the loss strategy: losses are frozen
+        # dataclasses, so the repr is a stable parameter-carrying identity
+        # — tenants solving different data fidelities can NEVER share a
+        # cached session, path, or warm-start hint.
+        d["loss"] = repr(resolve_loss(d["loss"]))
         return tuple(sorted(d.items()))
 
 
@@ -409,6 +434,18 @@ class SGLSession:
         # repro.rules registry here so an unknown name fails at session
         # construction (with the registered list), never inside a round.
         self.rule = resolve_rule(self.config.rule)
+        # Data-fidelity strategy, resolved and gated eagerly (same policy):
+        # an unsupported rule x loss pairing fails at construction with the
+        # rule's declared support list, never as a silently-unsafe screen.
+        self.loss = resolve_loss(self.config.loss)
+        if self.loss.multi_output:
+            raise ValueError(
+                f"loss={self.loss.name!r} is multi-output; SGLSession "
+                "solves single-output problems — use the "
+                "repro.core.sgl.multitask_* helpers for the multi-task "
+                "screening math"
+            )
+        check_rule_loss(self.rule, self.loss)
         self.backend = resolve_screen_backend(self.config.screen_backend)
         # Inner-epoch backend (single-device BCD strategy): "pallas" runs
         # whole epoch blocks through the fused kernels/bcd_epoch.py launch,
@@ -462,6 +499,14 @@ class SGLSession:
                 "the distributed strategy implements rule='gap' only; "
                 f"got rule={self.rule.name!r}"
             )
+        if mesh is not None and self.loss.name != "lsq":
+            # The shard_map FISTA/screen kernels hard-code the squared-loss
+            # residual and dual; accepting another loss here would silently
+            # solve the wrong problem on the mesh.
+            raise ValueError(
+                "the distributed strategy implements loss='lsq' only; "
+                f"got loss={self.loss.name!r}"
+            )
         self._dist = _DistStrategy(self, mesh, multi_pod=multi_pod, L=L) \
             if mesh is not None else None
 
@@ -469,9 +514,15 @@ class SGLSession:
 
     @property
     def lam_max(self) -> float:
-        """lambda_max = Omega^D(X^T y), computed once per session."""
+        """lambda_max = Omega^D(X^T rho_0), computed once per session
+        (rho_0 = -grad F(0): y for the squared loss, y - 1/2 logistic)."""
         if self._lam_max is None:
-            self._lam_max = float(sgl.lambda_max(self.problem))
+            if self.loss.name == "lsq":
+                self._lam_max = float(sgl.lambda_max(self.problem))
+            else:
+                self._lam_max = float(
+                    sgl.lambda_max_loss(self.problem, self.loss)
+                )
         return self._lam_max
 
     @property
@@ -497,9 +548,13 @@ class SGLSession:
         self.full_rounds += 1
         self._rounds_since_full = 0
         self.round_flops += 4.0 * problem.n * problem.G * problem.ng
+        # loss=None for lsq keeps the legacy jit cache key (shared with
+        # every pre-loss call site); non-lsq rounds screen from the
+        # generalized residual rho = -grad F(X beta).
         res, resid, terms = _screen_round(
             problem, beta, lam_j, lam_max_j, rule, self.backend,
             self.xt_pre,
+            loss=None if self.loss.name == "lsq" else self.loss,
         )
         caches.set_refs(problem, resid, terms)
         return res
@@ -560,6 +615,10 @@ class SGLSession:
         ``safe=False``: heuristic discards, never zero-certificates.
         """
         rule = self.rule if rule is None else resolve_rule(rule)
+        if rule is not self.rule:
+            # Per-call overrides get the same rule x loss gate as the
+            # session rule did at construction.
+            check_rule_loss(rule, self.loss)
         problem = self.problem
         dtype = problem.X.dtype
         if beta is None:
@@ -694,9 +753,16 @@ class SGLSession:
         gap_history: list = []
         active_history: list = []
         epochs_done = 0
+        lsq = self.loss.name == "lsq"
         # Placeholder dual point (overwritten by the first certified
         # round); lam_max is always known here (cached on the session).
-        theta = problem.y / max(float(lam_), float(lam_max))
+        # Generic losses scale rho_0 = -grad F(0) the same way (feasible
+        # at beta=0 by the lam_max definition).
+        if lsq:
+            theta = problem.y / max(float(lam_), float(lam_max))
+        else:
+            theta = (self.loss.lam_max_rho(problem.y)
+                     / max(float(lam_), float(lam_max)))
         gap = jnp.inf
         round_res = first_round
         lam_max_j = jnp.asarray(lam_max, dtype)
@@ -706,8 +772,11 @@ class SGLSession:
         # transposed design for the whole solve and a carried residual —
         # the loop used to re-materialise a fresh (G, n, ng) copy of X and
         # recompute the full residual einsum every certified round.
+        # Generic losses carry the linear predictor z = X beta instead
+        # (the majorized-BCD state; rho = -grad F(z) is derived per group).
         Xt_full = None
         resid_nc = None
+        z_nc = None
 
         while epochs_done < max_epochs:
             # ---- fused gap + screening round (paper does this every f_ce
@@ -723,7 +792,11 @@ class SGLSession:
                 # "compacted" buffer would cost more than the full round it
                 # replaces — those rounds go full directly.
                 n_act = int(group_active.sum())
-                if (rule.supports_compact and cfg.compact
+                # Compact rounds are lsq-only: the screened-group bound is
+                # proved against the quadratic dual's reference residual
+                # (repro.core.screening) — generic losses run every round
+                # full-problem.
+                if (lsq and rule.supports_compact and cfg.compact
                         and cfg.compact_rounds
                         and self._rounds_since_full < cfg.full_round_every
                         and 0 < n_act
@@ -735,7 +808,7 @@ class SGLSession:
                     round_res = self._certified_round(
                         beta, lam_j, lam_max_j, rule, caches=caches
                     )
-                    if not cfg.compact:
+                    if not cfg.compact and lsq:
                         # The full round just recomputed y - X beta exactly
                         # (stored as the compact-round reference): adopt it
                         # so the carried residual's incremental drift is
@@ -744,6 +817,11 @@ class SGLSession:
                         # bcd_epochs donates its residual buffer, which
                         # would otherwise invalidate the cached reference.
                         resid_nc = caches.resid_ref.copy()
+                    elif not cfg.compact:
+                        # Generic losses: the full round's reference is
+                        # rho, not z — drop the carried predictor so it is
+                        # recomputed from beta (same drift-reset cadence).
+                        z_nc = None
             if bool(round_res.compact) and float(round_res.gap) <= tol:
                 # The REPORTED gap/certificate must always be full-problem
                 # exact: re-confirm an (exact, but buffer-computed)
@@ -784,6 +862,14 @@ class SGLSession:
                     resid_nc = resid_nc + jnp.einsum(
                         "gnk,gk->n", Xt_full, beta - beta_masked
                     )
+                if z_nc is not None and masks_changed:
+                    # Same consistency rule for the generic-loss predictor
+                    # carry: z = X beta shrinks by X (beta - beta_masked).
+                    if Xt_full is None:
+                        Xt_full = jnp.transpose(problem.X, (1, 0, 2))
+                    z_nc = z_nc - jnp.einsum(
+                        "gnk,gk->n", Xt_full, beta - beta_masked
+                    )
                 beta = beta_masked
 
             active_history.append(
@@ -805,39 +891,71 @@ class SGLSession:
                     xt_rows = caches.gather_xt_rows(
                         problem, group_active, self.xt_pre
                     )
-                beta, k_done, _ = _inner_rounds(
-                    Xt, Lg, w, problem.y, beta, jnp.asarray(feat_active),
-                    take, gmask, problem.tau, lam_j,
-                    jnp.asarray(tol, dtype), check, max_blocks,
-                    self.solver_backend, xt_rows
-                )
+                if lsq:
+                    beta, k_done, _ = _inner_rounds(
+                        Xt, Lg, w, problem.y, beta,
+                        jnp.asarray(feat_active),
+                        take, gmask, problem.tau, lam_j,
+                        jnp.asarray(tol, dtype), check, max_blocks,
+                        self.solver_backend, xt_rows
+                    )
+                else:
+                    beta, k_done, _ = _inner_rounds_loss(
+                        Xt, Lg, w, problem.y, beta,
+                        jnp.asarray(feat_active),
+                        take, gmask, problem.tau, lam_j,
+                        jnp.asarray(tol, dtype), self.loss, check,
+                        max_blocks, self.solver_backend, xt_rows
+                    )
                 epochs_done += check * int(k_done)
-                if self.solver_backend == "pallas":
+                if self.solver_backend == "pallas" and (
+                        lsq or self.loss.name == "logistic"):
                     # Each inner block ran as ONE fused kernel launch
-                    # (k_done of them) instead of O(G) scan steps.
+                    # (k_done of them) instead of O(G) scan steps.  Other
+                    # generic losses fall back to the lax.scan epochs
+                    # inside _inner_rounds_loss — no fused launch to count.
                     self.fused_epoch_launches += int(k_done)
             else:
                 if Xt_full is None:
                     Xt_full = jnp.transpose(problem.X, (1, 0, 2))
                 fmask = jnp.asarray(feat_active, dtype)
                 Lg = problem.Lg * jnp.asarray(group_active, dtype)
-                if resid_nc is None:
-                    resid_nc = problem.y - jnp.einsum(
-                        "gnk,gk->n", Xt_full, beta
-                    )
-                if self.solver_backend == "pallas":
-                    beta_b, resid_b = kops.bcd_epochs_fused(
-                        Xt_full, Lg, problem.w, fmask[None], beta[None],
-                        resid_nc[None], problem.tau,
-                        jnp.reshape(lam_j, (1,)), f_ce
-                    )
-                    beta, resid_nc = beta_b[0], resid_b[0]
-                    self.fused_epoch_launches += 1
+                if lsq:
+                    if resid_nc is None:
+                        resid_nc = problem.y - jnp.einsum(
+                            "gnk,gk->n", Xt_full, beta
+                        )
+                    if self.solver_backend == "pallas":
+                        beta_b, resid_b = kops.bcd_epochs_fused(
+                            Xt_full, Lg, problem.w, fmask[None], beta[None],
+                            resid_nc[None], problem.tau,
+                            jnp.reshape(lam_j, (1,)), f_ce
+                        )
+                        beta, resid_nc = beta_b[0], resid_b[0]
+                        self.fused_epoch_launches += 1
+                    else:
+                        beta, resid_nc = bcd_epochs(
+                            Xt_full, Lg, problem.w, fmask, beta, resid_nc,
+                            problem.tau, lam_j, f_ce
+                        )
                 else:
-                    beta, resid_nc = bcd_epochs(
-                        Xt_full, Lg, problem.w, fmask, beta, resid_nc,
-                        problem.tau, lam_j, f_ce
-                    )
+                    if z_nc is None:
+                        z_nc = jnp.einsum("gnk,gk->n", Xt_full, beta)
+                    if (self.solver_backend == "pallas"
+                            and self.loss.name == "logistic"):
+                        beta_b, z_b = kops.bcd_epochs_logistic_fused(
+                            Xt_full, Lg, problem.w, fmask[None],
+                            beta[None], z_nc[None], problem.y,
+                            problem.tau, jnp.reshape(lam_j, (1,)), f_ce
+                        )
+                        beta, z_nc = beta_b[0], z_b[0]
+                        self.fused_epoch_launches += 1
+                    else:
+                        beta, z_nc = bcd_epochs_loss(
+                            Xt_full, Lg, problem.w, fmask, beta, z_nc,
+                            problem.tau, lam_j, problem.y, self.loss,
+                            f_ce
+                        )
                 epochs_done += f_ce
 
         return SolveResult(
@@ -1236,7 +1354,11 @@ class SGLSession:
         batch_ok = (sequential and rule.name == "gap"
                     and self.solver_backend == "pallas"
                     and batch_lambdas > 1
-                    and np.dtype(dtype).itemsize >= 8)
+                    and np.dtype(dtype).itemsize >= 8
+                    # Batched-lambda runs are lsq-only: the batch driver's
+                    # reduced-gap heuristic and fused kernel carry the
+                    # squared-loss residual.
+                    and self.loss.name == "lsq")
 
         t = 0
         while t < T_:

@@ -42,6 +42,20 @@ __all__ = [
     "duality_gap",
     "dual_scale",
     "lambda_max",
+    "primal_loss",
+    "dual_loss",
+    "duality_gap_loss",
+    "dual_scale_loss",
+    "lambda_max_loss",
+    "multitask_norm",
+    "multitask_dual_norm_terms",
+    "multitask_dual_norm",
+    "multitask_primal",
+    "multitask_dual",
+    "multitask_duality_gap",
+    "multitask_dual_scale",
+    "multitask_lambda_max",
+    "multitask_group_screen",
     "soft_threshold",
     "group_soft_threshold",
     "sgl_prox",
@@ -290,6 +304,177 @@ def lambda_max(problem: SGLProblem) -> jax.Array:
     """lambda_max = Omega^D(X^T y)   (paper Eq. 22)."""
     corr = jnp.einsum("ngk,n->gk", problem.X, problem.y)
     return sgl_dual_norm(corr, problem.tau, problem.w)
+
+
+# ----------------------------------------------------------------------------
+# Loss-generalized objectives (journal follow-up arXiv 1611.05780)
+# ----------------------------------------------------------------------------
+#
+# The quartet below generalizes primal/dual/gap/lambda_max to any
+# registered :class:`repro.losses.Loss`:
+#
+#     P(beta)  = F(X beta) + lam * Omega_{tau,w}(beta)
+#     D(theta) = -F*(-lam * theta)
+#     rho      = -grad F(X beta)        (the generalized residual)
+#     theta    = rho / max(lam, Omega^D(X^T rho))      (Eq. 15, verbatim)
+#     lam_max  = Omega^D(X^T rho_0),  rho_0 = -grad F(0)
+#
+# The ``loss.name == "lsq"`` branches delegate to the original functions
+# above *verbatim* — the default loss must produce bit-identical jitted
+# programs to the pre-loss solver (asserted by tests/test_losses.py).
+
+def primal_loss(problem: SGLProblem, loss, beta: jax.Array,
+                lam_: jax.Array) -> jax.Array:
+    """``F(X beta) + lam * Omega`` for any registered loss."""
+    if loss.name == "lsq":
+        return primal(problem, beta, lam_)
+    z = jnp.einsum("ngk,gk->n", problem.X, beta)
+    return loss.value(problem.y, z) + lam_ * sgl_norm(
+        beta, problem.tau, problem.w
+    )
+
+
+def dual_loss(problem: SGLProblem, loss, theta: jax.Array,
+              lam_: jax.Array) -> jax.Array:
+    """``D(theta) = -F*(-lam theta)`` for any registered loss."""
+    if loss.name == "lsq":
+        return dual(problem, theta, lam_)
+    return loss.dual_obj(problem.y, theta, lam_)
+
+
+def duality_gap_loss(problem: SGLProblem, loss, beta: jax.Array,
+                     theta: jax.Array, lam_: jax.Array) -> jax.Array:
+    if loss.name == "lsq":
+        return duality_gap(problem, beta, theta, lam_)
+    return primal_loss(problem, loss, beta, lam_) - dual_loss(
+        problem, loss, theta, lam_
+    )
+
+
+def dual_scale_loss(problem: SGLProblem, loss, beta: jax.Array,
+                    lam_: jax.Array) -> jax.Array:
+    """Dual feasible point from the loss gradient (Eq. 15 generalized):
+    ``theta = rho / max(lam, Omega^D(X^T rho))``, ``rho = -grad F(X beta)``.
+
+    The ``>= lam`` floor keeps ``-lam theta`` inside the conjugate's
+    domain for bounded-domain losses (logistic), so the gap is finite.
+    """
+    if loss.name == "lsq":
+        resid = problem.y - jnp.einsum("ngk,gk->n", problem.X, beta)
+        return dual_scale(problem, resid, lam_)
+    z = jnp.einsum("ngk,gk->n", problem.X, beta)
+    rho = loss.neg_grad(problem.y, z)
+    corr = jnp.einsum("ngk,n->gk", problem.X, rho)
+    scale = jnp.maximum(lam_, sgl_dual_norm(corr, problem.tau, problem.w))
+    return rho / scale
+
+
+def lambda_max_loss(problem: SGLProblem, loss) -> jax.Array:
+    """``lam_max = Omega^D(X^T rho_0)`` with ``rho_0 = -grad F(0)``
+    (lsq: Eq. 22 verbatim; logistic: ``rho_0 = y - 1/2``)."""
+    if loss.name == "lsq":
+        return lambda_max(problem)
+    rho0 = loss.lam_max_rho(problem.y)
+    corr = jnp.einsum("ngk,n->gk", problem.X, rho0)
+    return sgl_dual_norm(corr, problem.tau, problem.w)
+
+
+# ----------------------------------------------------------------------------
+# Multi-task SGL math (arXiv 1506.03736): matrix-valued beta (G, ng, K)
+# ----------------------------------------------------------------------------
+#
+# The penalty becomes row-group norms:
+#
+#     Omega(B) = tau * sum_{g,j} ||B[g, j, :]||_2
+#                + (1 - tau) * sum_g w_g ||B_g||_F
+#
+# i.e. the vector SGL norm applied to the matrix of row norms
+# R[g, j] = ||B[g, j, :]||_2 — which means the dual norm REDUCES to the
+# vector machinery: for a dual variable xi (G, ng, K), the sup over
+# {B : Omega(B) <= 1} of <xi, B> factors through rows (each row of B
+# only enters via its own l2 norm, and <xi_row, b_row> <= ||xi_row||_2
+# * ||b_row||_2 with equality for aligned rows), so
+#
+#     Omega^D(xi) = vector-SGL-dual-norm of the row-norm matrix
+#                   R'[g, j] = ||xi[g, j, :]||_2.
+#
+# The epsilon-norm only sees |x_j|, so feeding it row norms is exact.
+# These helpers take raw arrays (Y is (n, K), beta (G, ng, K)) because
+# :class:`SGLProblem` carries a (n,) response; the session-level solver
+# threading is future work (SGLSession rejects multi_output losses).
+
+def multitask_norm(beta: jax.Array, tau, w) -> jax.Array:
+    """Row-group SGL norm of matrix-valued beta (G, ng, K)."""
+    rows = jnp.linalg.norm(beta, axis=-1)           # (G, ng)
+    l1 = jnp.sum(rows)
+    l2 = jnp.sum(w * jnp.linalg.norm(rows, axis=-1))
+    return tau * l1 + (1.0 - tau) * l2
+
+
+def multitask_dual_norm_terms(xi: jax.Array, tau, w) -> jax.Array:
+    """Per-group dual-norm terms of the row-group norm: the vector terms
+    (Eq. 20) evaluated on the row-norm matrix (see the reduction above)."""
+    rows = jnp.linalg.norm(xi, axis=-1)             # (G, ng)
+    return sgl_dual_norm_terms(rows, tau, w)
+
+
+def multitask_dual_norm(xi: jax.Array, tau, w) -> jax.Array:
+    return jnp.max(multitask_dual_norm_terms(xi, tau, w))
+
+
+def multitask_primal(X: jax.Array, Y: jax.Array, beta: jax.Array,
+                     tau, w, lam_) -> jax.Array:
+    """``0.5 ||Y - X beta||_F^2 + lam * Omega`` (X (n,G,ng), Y (n,K))."""
+    R = Y - jnp.einsum("ngk,gkt->nt", X, beta)
+    return 0.5 * jnp.sum(R * R) + lam_ * multitask_norm(beta, tau, w)
+
+
+def multitask_dual(Y: jax.Array, theta: jax.Array, lam_) -> jax.Array:
+    """Quadratic dual at matrix-valued theta (n, K)."""
+    d = theta - Y / lam_
+    return 0.5 * jnp.sum(Y * Y) - 0.5 * lam_ * lam_ * jnp.sum(d * d)
+
+
+def multitask_duality_gap(X: jax.Array, Y: jax.Array, beta: jax.Array,
+                          theta: jax.Array, tau, w, lam_) -> jax.Array:
+    return multitask_primal(X, Y, beta, tau, w, lam_) - multitask_dual(
+        Y, theta, lam_
+    )
+
+
+def multitask_dual_scale(X: jax.Array, Y: jax.Array, beta: jax.Array,
+                         tau, w, lam_) -> jax.Array:
+    """Eq. 15 on the matrix residual: theta = R / max(lam, Omega^D(X^T R))."""
+    R = Y - jnp.einsum("ngk,gkt->nt", X, beta)
+    corr = jnp.einsum("ngk,nt->gkt", X, R)
+    scale = jnp.maximum(lam_, multitask_dual_norm(corr, tau, w))
+    return R / scale
+
+
+def multitask_lambda_max(X: jax.Array, Y: jax.Array, tau, w) -> jax.Array:
+    corr = jnp.einsum("ngk,nt->gkt", X, Y)
+    return multitask_dual_norm(corr, tau, w)
+
+
+def multitask_group_screen(corr: jax.Array, radius, Xnorm_grp: jax.Array,
+                           tau, w) -> jax.Array:
+    """Conservative safe group test for the multi-task GAP sphere.
+
+    For the GAP sphere B(theta, r), group g can be discarded when
+    ``sup_{||Z||_F <= r} Omega^D_g(X_g^T (theta + Z)) < 1``.  We bound
+    the sup by ``Omega^D_g(X_g^T theta) + r ||X_g||_2 / (tau +
+    (1-tau) w_g)`` — the second factor because ``Omega_g(B_g) >= (tau +
+    (1-tau) w_g) ||B_g||_F`` (every row contributes at least its own
+    norm to both the l1-of-rows and the Frobenius term), hence
+    ``Omega^D_g(V) <= ||V||_F / (tau + (1-tau) w_g)``.  Conservative
+    (never screens a group the exact test would keep), hence safe.
+
+    ``corr``: X^T theta in grouped layout (G, ng, K).  Returns (G,) bool,
+    True = group survives (may be active).
+    """
+    terms = multitask_dual_norm_terms(corr, tau, w)   # (G,)
+    slack = radius * Xnorm_grp / group_weight_total(tau, jnp.asarray(w))
+    return terms + slack >= 1.0
 
 
 # ----------------------------------------------------------------------------

@@ -93,6 +93,7 @@ from . import sgl
 from .sgl import SGLProblem
 from ..kernels import _util as kernel_util
 from ..kernels import ops as kops
+from ..losses import Loss, resolve_loss
 from ..rules import RuleState, ScreeningRule, resolve_rule
 
 __all__ = [
@@ -101,10 +102,12 @@ __all__ = [
     "RoundResult",
     "solve",
     "bcd_epochs",
+    "bcd_epochs_loss",
     "screen_round",
     "resolve_backend",
     "resolve_screen_backend",
     "resolve_solver_backend",
+    "check_rule_loss",
 ]
 
 
@@ -281,6 +284,66 @@ def bcd_epochs(
     return beta, resid
 
 
+@functools.partial(jax.jit, static_argnames=("loss", "n_epochs"),
+                   donate_argnums=(4, 5))
+def bcd_epochs_loss(
+    Xt: jax.Array,         # (Gb, n, ng) compacted design (group-major)
+    Lg: jax.Array,         # (Gb,)
+    w: jax.Array,          # (Gb,)
+    feat_mask: jax.Array,  # (Gb, ng) float mask
+    beta: jax.Array,       # (Gb, ng)
+    z: jax.Array,          # (n,) linear predictor X beta (the loss carry)
+    tau: jax.Array,
+    lam_: jax.Array,
+    y: jax.Array,          # (n,) response (the loss gradient needs it)
+    loss: Loss,
+    n_epochs: int,
+):
+    """Loss-generic twin of :func:`bcd_epochs`: majorized BCD carrying the
+    linear predictor ``z = X beta`` instead of the lsq residual.
+
+    Per group (majorize-minimize; arXiv 1611.05780 §4):
+        rho    = -grad F(z) = loss.neg_grad(y, z)     (fresh each group)
+        z_g    = beta_g + X_g^T rho / (nu L_g)        (gradient step)
+        beta_g = two-level prox at step lam / (nu L_g)
+        z     += X_g (beta_g_new - beta_g_old)
+    ``nu L_g`` upper-bounds the block Hessian ``X_g^T diag(f'') X_g``
+    (per-sample curvature <= nu), so every epoch decreases the primal.
+    For ``loss="lsq"`` (nu=1, rho = y - z) this is algebraically the
+    :func:`bcd_epochs` update — but the carry differs (z vs resid), so the
+    lsq solver keeps the original function; this one serves non-quadratic
+    losses and the parity tests.
+    """
+    live = (Lg > 0).astype(beta.dtype)                # (Gb,)
+    Lmaj = loss.nu * Lg                               # block majorization
+    safe_L = jnp.where(Lg > 0, Lmaj, 1.0)
+    step = lam_ / safe_L
+    thr1 = tau * step                                 # (Gb,)
+    thr2 = (1.0 - tau) * w * step                     # (Gb,)
+
+    def group_update(z, inputs):
+        Xg, bg, L, t1, t2, m, lv = inputs
+        rho = loss.neg_grad(y, z)                     # (n,)
+        grad_step = (Xg.T @ rho) / L                  # (ng,)
+        u = (bg + grad_step) * m
+        u = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t1, 0.0)
+        nrm = jnp.linalg.norm(u)
+        u = jnp.maximum(1.0 - t2 / jnp.maximum(nrm, 1e-30), 0.0) * u
+        new_bg = jnp.where(lv > 0, u, bg)
+        z = z + Xg @ (new_bg - bg)
+        return z, new_bg
+
+    def epoch(carry, _):
+        beta, z = carry
+        z, beta = jax.lax.scan(
+            group_update, z, (Xt, beta, safe_L, thr1, thr2, feat_mask, live)
+        )
+        return (beta, z), None
+
+    (beta, z), _ = jax.lax.scan(epoch, (beta, z), None, length=n_epochs)
+    return beta, z
+
+
 # ----------------------------------------------------------------------------
 # Certified gap + screening round (resumable-round API)
 # ----------------------------------------------------------------------------
@@ -324,11 +387,30 @@ def _corr_grouped(problem: SGLProblem, v: jax.Array, backend: str,
     return jnp.einsum("ngk,n->gk", problem.X, v)
 
 
-@functools.partial(jax.jit, static_argnames=("rule", "backend"))
+def check_rule_loss(rule: ScreeningRule, loss: Loss) -> None:
+    """Fail fast on a rule x loss pairing the rule's sphere cannot prove.
+
+    Mirrors the rule x mesh gate in :class:`repro.core.session.SGLSession`:
+    rules whose geometry is least-squares-specific declare
+    ``supported_losses=("lsq",)`` and any other loss is rejected at
+    construction time, never silently screened unsafely.
+    """
+    if rule.supported_losses is not None and (
+            loss.name not in rule.supported_losses):
+        raise ValueError(
+            f"rule={rule.name!r} supports losses "
+            f"{list(rule.supported_losses)}, not loss={loss.name!r} "
+            f"(its sphere is built from the quadratic dual's y/lambda "
+            f"geometry); use the GAP family for non-lsq losses"
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("rule", "backend", "loss"))
 def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
                   lam_max: jax.Array, rule: ScreeningRule,
                   backend: str = "xla",
-                  xt_pre: Optional[jax.Array] = None):
+                  xt_pre: Optional[jax.Array] = None,
+                  loss: Optional[Loss] = None):
     """One fused FULL gap + screening round (single XLA program) — the
     shared sphere-test SKELETON every :class:`repro.rules.ScreeningRule`
     plugs into.
@@ -359,8 +441,20 @@ def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
     ``xt_pre`` is the persistent (p, n) transposed design from
     :func:`repro.kernels.ops.prepare_transposed` — without it every
     Pallas-backed round materialises a fresh transposed copy of X.
+
+    ``loss`` (static): a :class:`repro.losses.Loss`, or None for the
+    historical squared loss.  The skeleton generalizes by swapping the
+    residual for ``rho = -grad F(X beta)`` (Eq. 15 is otherwise verbatim)
+    and the gap for the loss's primal/dual pair; the lsq branch keeps the
+    original arithmetic untouched so the default loss stays bit-identical.
+    The sphere test sees the loss only through ``RuleState.nu``.
     """
-    resid = problem.y - jnp.einsum("ngk,gk->n", problem.X, beta)
+    lsq = loss is None or loss.name == "lsq"
+    if lsq:
+        resid = problem.y - jnp.einsum("ngk,gk->n", problem.X, beta)
+    else:
+        z = jnp.einsum("ngk,gk->n", problem.X, beta)
+        resid = loss.neg_grad(problem.y, z)   # generalized residual rho
     corr = _corr_grouped(problem, resid, backend, xt_pre)
     if backend == "pallas":
         terms = kops.sgl_dual_norm_terms_fused(corr, problem.tau, problem.w)
@@ -369,12 +463,18 @@ def _screen_round(problem: SGLProblem, beta: jax.Array, lam_: jax.Array,
     dual_norm = jnp.max(terms)
     scale = jnp.maximum(lam_, dual_norm)
     theta = resid / scale
-    gap = sgl.duality_gap(problem, beta, theta, lam_)
+    if lsq:
+        gap = sgl.duality_gap(problem, beta, theta, lam_)
+    else:
+        primal = loss.value(problem.y, z) + lam_ * sgl.sgl_norm(
+            beta, problem.tau, problem.w)
+        gap = primal - loss.dual_obj(problem.y, theta, lam_)
 
     if rule.is_dynamic:
         state = RuleState(
             problem=problem, beta=beta, resid=resid, corr=corr, scale=scale,
             theta=theta, gap=gap, lam=lam_, lam_max=lam_max,
+            nu=1.0 if lsq else float(loss.nu),
         )
         center, radius, corr_c = rule.center_and_radius(state)
         if corr_c is None:
@@ -507,6 +607,7 @@ def screen_round(
     rule="gap",
     backend: str = "auto",
     xt_pre: Optional[jax.Array] = None,
+    loss="lsq",
 ) -> RoundResult:
     """Public resumable-round API: one certified gap + screening round.
 
@@ -523,8 +624,19 @@ def screen_round(
     ``xt_pre``: persistent transposed design (Pallas backend only) — see
     :meth:`repro.core.session.SGLSession.screen`, which supplies it
     automatically.
+    ``loss``: a registered :mod:`repro.losses` name or ``Loss`` object
+    (default ``"lsq"``); rule x loss pairings the rule cannot prove fail
+    fast here (``supported_losses``).
     """
     rule = resolve_rule(rule)
+    loss = resolve_loss(loss)
+    if loss.multi_output:
+        raise ValueError(
+            f"loss={loss.name!r} is multi-output (matrix-valued beta); "
+            "the round skeleton supports single-output losses — use the "
+            "repro.core.sgl.multitask_* helpers"
+        )
+    check_rule_loss(rule, loss)
     if rule.pre_screens:
         # Checked BEFORE needs_lam_max: this refusal is terminal, so a
         # static-rule caller must not first be told to pass lambda_max.
@@ -548,6 +660,7 @@ def screen_round(
         rule,
         resolve_screen_backend(backend),
         xt_pre,
+        loss=None if loss.name == "lsq" else loss,
     )
     return res
 
@@ -634,6 +747,76 @@ def _inner_rounds(Xt, Lg, w, y, beta, feat_active, take, gmask, tau, lam_,
 
     bsub, resid, k, gap = jax.lax.while_loop(
         cond, body, (bsub0, resid0, jnp.zeros((), jnp.int32),
+                     jnp.asarray(jnp.inf, dtype))
+    )
+    delta = (bsub - bsub0) * fmask
+    return beta.at[take].add(delta), k, gap
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("loss", "block_epochs", "max_blocks", "backend"))
+def _inner_rounds_loss(Xt, Lg, w, y, beta, feat_active, take, gmask, tau,
+                       lam_, tol, loss, block_epochs, max_blocks,
+                       backend="xla", xt_rows=None):
+    """Loss-generic twin of :func:`_inner_rounds`: blocked majorized BCD
+    epochs + reduced-gap early exit for any single-output loss.
+
+    The carry is the linear predictor ``z = X beta`` (the loss-defined
+    state that replaces the lsq residual); between blocks the reduced gap
+    is built from ``rho = -grad F(z)`` through the same Eq. 15 scaling and
+    the loss's conjugate dual.  Exact for the reduced problem, heuristic
+    for the full one — the caller always re-certifies with a full
+    :func:`_screen_round` before stopping or screening, same contract as
+    the lsq path.
+
+    ``backend="pallas"`` with ``loss="logistic"`` routes each epoch block
+    through the fused :func:`repro.kernels.ops.bcd_epochs_logistic_fused`
+    mega-kernel (z carried in VMEM) and the reduced-gap correlation
+    through the Pallas corr kernel; other losses fall back to the
+    ``lax.scan`` epochs, which are the bit-parity reference either way.
+    """
+    dtype = beta.dtype
+    Gb, ng = Xt.shape[0], Xt.shape[2]
+    fmask = (jnp.take(feat_active, take, axis=0).astype(dtype)
+             * gmask[:, None])
+    bsub0 = jnp.take(beta, take, axis=0) * fmask
+    # beta is exactly zero off the buffer, so this IS the full predictor.
+    z0 = jnp.einsum("gnk,gk->n", Xt, bsub0)
+
+    def reduced_gap(bsub, z):
+        rho = loss.neg_grad(y, z)
+        if backend == "pallas" and xt_rows is not None:
+            corr = kops.screening_corr(xt_rows, rho)[: Gb * ng]
+            corr = corr.reshape(Gb, ng) * fmask
+        else:
+            corr = jnp.einsum("gnk,n->gk", Xt, rho) * fmask
+        dn = sgl.sgl_dual_norm(corr, tau, w)
+        theta = rho / jnp.maximum(lam_, dn)
+        primal = loss.value(y, z) + lam_ * sgl.sgl_norm(bsub, tau, w)
+        return primal - loss.dual_obj(y, theta, lam_)
+
+    def cond(c):
+        bsub, z, k, gap = c
+        return (k < max_blocks) & (gap > tol)
+
+    def body(c):
+        bsub, z, k, gap = c
+        if backend == "pallas" and loss.name == "logistic":
+            bsub_b, z_b = kops.bcd_epochs_logistic_fused(
+                Xt, Lg * gmask, w, fmask[None], bsub[None], z[None],
+                y, tau, jnp.reshape(lam_, (1,)), block_epochs
+            )
+            bsub, z = bsub_b[0], z_b[0]
+        else:
+            bsub, z = bcd_epochs_loss(
+                Xt, Lg * gmask, w, fmask, bsub, z, tau, lam_, y,
+                loss, block_epochs
+            )
+        return bsub, z, k + 1, reduced_gap(bsub, z)
+
+    bsub, z, k, gap = jax.lax.while_loop(
+        cond, body, (bsub0, z0, jnp.zeros((), jnp.int32),
                      jnp.asarray(jnp.inf, dtype))
     )
     delta = (bsub - bsub0) * fmask
@@ -752,4 +935,8 @@ register_traceable("screen_round_compact", _screen_round_compact,
 register_traceable("inner_rounds", _inner_rounds,
                    module=__name__, kind="jit")
 register_traceable("bcd_epochs", bcd_epochs,
+                   module=__name__, kind="jit")
+register_traceable("inner_rounds_loss", _inner_rounds_loss,
+                   module=__name__, kind="jit")
+register_traceable("bcd_epochs_loss", bcd_epochs_loss,
                    module=__name__, kind="jit")

@@ -213,3 +213,162 @@ def bcd_epoch_pallas(
         beta,
         resid,
     )
+
+
+# ----------------------------------------------------------------------------
+# Logistic variant: the VMEM carry is the linear predictor z = X beta
+# ----------------------------------------------------------------------------
+
+def bcd_epoch_logistic_launch_spec(
+    B: int,
+    Gb: int,
+    n: int,
+    ng: int,
+    n_epochs: int,
+    *,
+    block_g: int = 8,
+    dtype="float64",
+) -> LaunchSpec:
+    """Auditable launch geometry of :func:`bcd_epoch_logistic_pallas`.
+
+    Same grid/streaming layout as :func:`bcd_epoch_launch_spec`, with the
+    carried (n,) state being the linear predictor instead of the lsq
+    residual, plus the batch-invariant (n,) response ``y`` as one extra
+    streamed-once input (its index map ignores the whole grid).
+    """
+    return LaunchSpec(
+        name="bcd_epoch_logistic",
+        grid=(B, n_epochs, Gb // block_g),
+        inputs=(
+            ArraySpec((Gb, n, ng), (block_g, n, ng),
+                      lambda b, e, g: (g, 0, 0), dtype),        # design tile
+            ArraySpec((Gb, 1), (block_g, 1),
+                      lambda b, e, g: (g, 0), dtype),           # Lg
+            ArraySpec((Gb, 1), (block_g, 1),
+                      lambda b, e, g: (g, 0), dtype),           # w
+            ArraySpec((B, Gb, ng), (1, block_g, ng),
+                      lambda b, e, g: (b, g, 0), dtype),        # feat mask
+            ArraySpec((B, 1), (1, 1),
+                      lambda b, e, g: (b, 0), dtype),           # lam
+            ArraySpec((1, 1), (1, 1),
+                      lambda b, e, g: (0, 0), dtype),           # tau
+            ArraySpec((1, n), (1, n),
+                      lambda b, e, g: (0, 0), dtype),           # y (labels)
+            ArraySpec((B, Gb, ng), (1, Gb, ng),
+                      lambda b, e, g: (b, 0, 0), dtype),        # beta0
+            ArraySpec((B, n), (1, n),
+                      lambda b, e, g: (b, 0), dtype),           # z0
+        ),
+        outputs=(
+            ArraySpec((B, Gb, ng), (1, Gb, ng),
+                      lambda b, e, g: (b, 0, 0), dtype),        # beta
+            ArraySpec((B, n), (1, n),
+                      lambda b, e, g: (b, 0), dtype),           # z
+        ),
+        carried=((1, 2), (1, 2)),
+        note="logistic BCD mega-kernel; VMEM-carried beta/linear predictor",
+    )
+
+
+def _bcd_epoch_logistic_kernel(
+    xt_ref,       # (block_g, n, ng) design tile (streamed by g)
+    lg_ref,       # (block_g, 1)     block spectral norms ||X_g||_2^2
+    w_ref,        # (block_g, 1)     group weights
+    fm_ref,       # (1, block_g, ng) per-lambda float feature mask tile
+    lam_ref,      # (1, 1)           this lambda
+    tau_ref,      # (1, 1)           SGL mixing parameter
+    y_ref,        # (1, n)           {0,1} labels (batch-invariant)
+    beta0_ref,    # (1, Gb, ng)      warm-start coefficients
+    z0_ref,       # (1, n)           warm-start linear predictor X beta
+    beta_ref,     # (1, Gb, ng)      OUT, VMEM-resident across (e, g)
+    z_ref,        # (1, n)           OUT, VMEM-resident across (e, g)
+    *,
+    block_g: int,
+):
+    e = pl.program_id(1)
+    g = pl.program_id(2)
+
+    @pl.when((e == 0) & (g == 0))
+    def _init():
+        beta_ref[...] = beta0_ref[...]
+        z_ref[...] = z0_ref[...]
+
+    lam_ = lam_ref[0, 0]
+    tau = tau_ref[0, 0]
+    y = y_ref[0, :]
+    base = g * block_g
+    z = z_ref[0, :]
+
+    def group_update(i, z):
+        # Line-for-line the update of repro.core.solver.bcd_epochs_loss
+        # for LogisticLoss (bit-parity contract, tests/test_losses.py):
+        # majorized step with block bound nu*Lg = Lg/4, fresh gradient
+        # rho = y - sigmoid(z) per group, rank-one predictor update.
+        Xg = xt_ref[i]                                   # (n, ng)
+        L = lg_ref[i, 0]
+        lv = (L > 0).astype(z.dtype)
+        Lmaj = 0.25 * L                                  # nu * Lg
+        safe_L = jnp.where(L > 0, Lmaj, 1.0)
+        step = lam_ / safe_L
+        t1 = tau * step
+        t2 = (1.0 - tau) * w_ref[i, 0] * step
+        m = fm_ref[0, i]                                 # (ng,)
+        bg = beta_ref[0, base + i]                       # (ng,)
+        rho = y - jax.nn.sigmoid(z)                      # (n,)
+        grad_step = (Xg.T @ rho) / safe_L
+        u = (bg + grad_step) * m
+        u = jnp.sign(u) * jnp.maximum(jnp.abs(u) - t1, 0.0)
+        nrm = jnp.linalg.norm(u)
+        u = jnp.maximum(1.0 - t2 / jnp.maximum(nrm, 1e-30), 0.0) * u
+        new_bg = jnp.where(lv > 0, u, bg)
+        beta_ref[0, base + i] = new_bg
+        return z + Xg @ (new_bg - bg)
+
+    z = jax.lax.fori_loop(0, block_g, group_update, z)
+    z_ref[0, :] = z
+
+
+def bcd_epoch_logistic_pallas(
+    Xt: jax.Array,        # (Gb, n, ng) compacted group-major design
+    Lg: jax.Array,        # (Gb,)  block spectral norms (* gmask)
+    w: jax.Array,         # (Gb,)  group weights
+    fmask: jax.Array,     # (B, Gb, ng) float feature masks (0 = inert)
+    lam_b: jax.Array,     # (B,)   per-lambda regularisation
+    tau: jax.Array,       # ()     SGL mixing parameter
+    y: jax.Array,         # (n,)   {0,1} labels
+    beta: jax.Array,      # (B, Gb, ng) warm-start coefficients
+    z: jax.Array,         # (B, n) warm-start linear predictors
+    n_epochs: int,
+    *,
+    block_g: int = 8,
+    interpret: bool | None = None,
+):
+    """Logistic twin of :func:`bcd_epoch_pallas`: ``n_epochs`` majorized
+    cyclic BCD passes for B lambdas in one launch, carrying the linear
+    predictor in VMEM.  Returns ``(beta, z)``."""
+    if interpret is None:
+        interpret = default_interpret()
+    B, Gb, ng = beta.shape
+    n = Xt.shape[1]
+    assert Xt.shape == (Gb, n, ng), (Xt.shape, beta.shape)
+    assert Gb % block_g == 0, (Gb, block_g)
+    spec = bcd_epoch_logistic_launch_spec(
+        B, Gb, n, ng, n_epochs, block_g=block_g, dtype=beta.dtype)
+    return pl.pallas_call(
+        functools.partial(_bcd_epoch_logistic_kernel, block_g=block_g),
+        grid=spec.grid,
+        in_specs=block_specs(spec.inputs),
+        out_specs=block_specs(spec.outputs),
+        out_shape=out_shapes(spec.outputs),
+        interpret=interpret,
+    )(
+        Xt,
+        Lg[:, None],
+        w[:, None],
+        fmask,
+        lam_b[:, None],
+        jnp.reshape(tau, (1, 1)),
+        y[None, :],
+        beta,
+        z,
+    )

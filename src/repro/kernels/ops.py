@@ -13,7 +13,12 @@ import jax
 import jax.numpy as jnp
 
 from ..analysis.registry import register_kernel_audit
-from .bcd_epoch import bcd_epoch_launch_spec, bcd_epoch_pallas
+from .bcd_epoch import (
+    bcd_epoch_launch_spec,
+    bcd_epoch_logistic_launch_spec,
+    bcd_epoch_logistic_pallas,
+    bcd_epoch_pallas,
+)
 from .dual_norm import dual_norm_launch_spec, dual_norm_pallas
 from .screening_scores import (
     screening_corr_launch_spec,
@@ -341,6 +346,32 @@ def bcd_epochs_fused(Xt, Lg, w, fmask, beta, resid, tau, lam_b,
     return beta_out[:, :Gb], resid_out
 
 
+@functools.partial(jax.jit, static_argnames=("n_epochs", "block_g"))
+def bcd_epochs_logistic_fused(Xt, Lg, w, fmask, beta, z, y, tau, lam_b,
+                              n_epochs: int, block_g: int = 8):
+    """Logistic twin of :func:`bcd_epochs_fused`: whole blocks of majorized
+    cyclic BCD epochs in one fused launch, with the linear predictor
+    ``z (B, n)`` as the VMEM carry and the {0,1} labels ``y (n,)`` as one
+    extra batch-invariant input.  Same group-axis padding contract (inert
+    ``Lg = 0`` rows leave both outputs bit-unchanged); bit-parity reference
+    is :func:`repro.core.solver.bcd_epochs_loss` with ``LogisticLoss``
+    (asserted by tests/test_losses.py in f64 interpret mode).
+    """
+    B, Gb, ng = beta.shape
+    if n_epochs <= 0:
+        return beta, z
+    bg = max(1, min(block_g, Gb))
+    Xp = _pad_to(Xt, 0, bg)
+    Lp = _pad_to(Lg, 0, bg)                      # pad 0.0 -> inert groups
+    wp = _pad_to(w, 0, bg, value=1.0)
+    fp = _pad_to(fmask, 1, bg)
+    bp = _pad_to(beta, 1, bg)
+    beta_out, z_out = bcd_epoch_logistic_pallas(
+        Xp, Lp, wp, fp, lam_b, tau, y, bp, z, n_epochs, block_g=bg
+    )
+    return beta_out[:, :Gb], z_out
+
+
 def sgl_prox_batched(beta, lam_b, L, w, tau: float, block_g: int = 256):
     """Two-level prox over a batched-lambda state (B, G, ng).
 
@@ -381,6 +412,12 @@ register_kernel_audit(
     "bcd_epoch/paper-ng8",
     lambda: bcd_epoch_launch_spec(B=1, Gb=64, n=2048, ng=8, n_epochs=2,
                                   block_g=8, dtype="float64"),
+)
+register_kernel_audit(
+    "bcd_epoch_logistic/bucket",
+    lambda: bcd_epoch_logistic_launch_spec(B=4, Gb=256, n=1024, ng=16,
+                                           n_epochs=3, block_g=8,
+                                           dtype="float64"),
 )
 register_kernel_audit(
     "screening_scores/default",

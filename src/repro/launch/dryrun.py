@@ -4,7 +4,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 """Multi-pod dry-run: lower + compile every (architecture x input shape) cell
 on the production meshes and extract memory / cost / collective statistics.
 
-    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --arch demo --shape train_4k
     PYTHONPATH=src python -m repro.launch.dryrun --all --out artifacts/dryrun
     PYTHONPATH=src python -m repro.launch.dryrun --arch sgl-paper --shape solve
 
@@ -69,6 +69,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, q_chunk: int = 512,
 
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         # Trip-count-aware analysis: XLA's cost_analysis counts while bodies
         # once, undercounting scanned layer stacks / q-chunk loops by their

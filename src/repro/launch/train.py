@@ -6,7 +6,7 @@ Two modes, mirroring the two workloads in this framework:
   regularizer as an optional first-class feature)::
 
     PYTHONPATH=src python -m repro.launch.train \
-        --arch qwen3-8b --reduced --steps 200 --batch 8 --seq 128 \
+        --arch demo --reduced --steps 200 --batch 8 --seq 128 \
         --sgl-lam 3e-4 --ckpt-dir /tmp/ckpt
 
   Distributed SGL solve (the paper's own problem on a mesh)::
@@ -34,7 +34,7 @@ import numpy as np
 
 def parse_args():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--arch", default="demo")
     ap.add_argument("--reduced", action="store_true",
                     help="tiny same-family config (CPU)")
     ap.add_argument("--steps", type=int, default=100)

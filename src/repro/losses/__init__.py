@@ -1,0 +1,52 @@
+"""Pluggable data-fidelity losses for the GAP screening machinery.
+
+The paper's Thm 1/2 + Eq. 15 apply to any smooth data-fidelity term with
+a computable Fenchel conjugate (journal follow-ups arXiv 1611.05780,
+arXiv 1506.03736).  This package is the loss axis of that observation,
+mirroring :mod:`repro.rules` on the rule axis:
+
+* :class:`Loss` (:mod:`repro.losses.base`) — the strategy protocol:
+  ``value`` / ``neg_grad`` / ``conjugate`` / ``dual_obj`` plus the
+  smoothness constant ``nu`` that generalizes the GAP radius to
+  ``sqrt(2 nu gap) / lam``;
+* the registered implementations (:mod:`repro.losses.library`):
+  :class:`LeastSquaresLoss` (``"lsq"``, the bit-frozen default),
+  :class:`LogisticLoss` (``"logistic"``), :class:`MultiTaskLoss`
+  (``"multitask"``, math-level only);
+* the registry (:mod:`repro.losses.registry`) — ``resolve_loss`` keeps
+  string configs working and fails fast on unknown names.
+
+The consumers are the same shared skeletons the rules plug into:
+``core/solver._screen_round`` (generalized residual + Eq. 15 scaling),
+``_inner_rounds`` (loss-routed reduced gap + majorized BCD),
+``kernels/bcd_epoch.py`` (a logistic mega-kernel carrying the linear
+predictor in VMEM), and ``SGLSession`` / ``SolverConfig.loss`` — so
+every registered rule x every supported loss x backend composes through
+one code path.  Rules whose sphere geometry is least-squares-specific
+declare ``supported_losses=("lsq",)`` and the session fails fast on the
+combination, exactly like unsupported rule x mesh pairings.
+"""
+from .base import Loss
+from .library import LeastSquaresLoss, LogisticLoss, MultiTaskLoss
+from .registry import (
+    available_losses,
+    get_loss,
+    register_loss,
+    resolve_loss,
+)
+
+__all__ = [
+    "Loss",
+    "LeastSquaresLoss",
+    "LogisticLoss",
+    "MultiTaskLoss",
+    "available_losses",
+    "get_loss",
+    "register_loss",
+    "resolve_loss",
+]
+
+# Built-in registrations (singletons; instances are jit static args).
+register_loss(LeastSquaresLoss())
+register_loss(LogisticLoss())
+register_loss(MultiTaskLoss())

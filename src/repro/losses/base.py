@@ -1,0 +1,107 @@
+"""The data-fidelity ``Loss`` strategy protocol.
+
+GAP safe screening (paper Thm 1/2, Eq. 15) never needed least squares —
+it needs a smooth data-fidelity term ``F(z) = sum_i f_i(z_i)`` with a
+computable Fenchel conjugate.  The primal is ``P(beta) = F(X beta) +
+lam * Omega(beta)``; the generalized dual point is built from the
+negative loss gradient ``rho = -grad F(X beta)`` through the same Eq. 15
+scaling ``theta = rho / max(lam, Omega^D(X^T rho))``; the GAP sphere
+radius generalizes to ``r = sqrt(2 * nu * gap) / lam`` where ``nu`` is
+the per-sample smoothness constant of ``f_i`` (``nu = 1`` for squared
+loss, ``nu = 1/4`` for logistic) — see the journal follow-ups arXiv
+1611.05780 (smooth losses) and arXiv 1506.03736 (multi-task).
+
+A :class:`Loss` is a **frozen, hashable value object**, exactly like
+:class:`repro.rules.ScreeningRule`: instances ride into jitted functions
+as static arguments, so two equal losses must hash equal and carry no
+arrays.  Everything a loss defines is a *proof obligation*:
+
+``value(y, z)``
+    ``F(z)`` — the full data-fidelity term at linear predictor
+    ``z = X beta_flat`` (summed over samples).
+``neg_grad(y, z)``
+    ``rho = -grad_z F(z)`` — the generalized residual.  For squared loss
+    this is literally ``y - z``; every layer that used to write
+    ``resid`` now means this.
+``conjugate(y, u)``
+    ``F*(u) = sum_i f_i*(u_i)`` — must satisfy Fenchel–Young so that
+    ``D(theta) = -F*(-lam * theta)`` is a true dual lower bound and
+    ``gap = P(beta) - D(theta) >= 0`` at every feasible ``theta``.
+``dual_obj(y, theta, lam_)``
+    ``-F*(-lam * theta)``.  The default derives it from ``conjugate``;
+    a loss may override with algebraically equal but numerically
+    preferred arithmetic (lsq does, to stay bit-identical to the
+    historical quadratic form).
+``nu``
+    Sample-wise smoothness: ``f_i`` must be ``1/nu``-strongly-smooth,
+    i.e. ``f_i*`` is ``nu``-strongly convex, so the GAP radius
+    ``sqrt(2 nu gap) / lam`` is safe (Thm 2 generalization).  Also the
+    majorization constant: ``(1/nu) * ||X_g||^2`` upper-bounds the block
+    Hessian, which is what the BCD update divides by.
+
+The Eq. 15 scaling keeps feasibility for free: ``Omega^D(X^T theta) <=
+1`` by construction, and for losses whose conjugate has a bounded domain
+(logistic: ``-lam theta_i`` must lie in ``(y_i - 1, y_i)``) the scaling
+``max(lam, Omega^D(X^T rho)) >= lam`` keeps ``lam * theta = lam * rho /
+scale`` inside the domain whenever ``rho`` itself is (logistic:
+``rho_i = y_i - sigmoid(z_i)`` is strictly inside).
+
+``multi_output`` losses (multi-task, arXiv 1506.03736) grow a task axis
+on ``y`` and on beta; they are currently supported at the
+:mod:`repro.core.sgl` math level (norms, primal/dual/gap, safe sphere
+test) and rejected by :class:`repro.core.session.SGLSession` with a
+clear error — the solver threading is future work.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["Loss"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Loss:
+    """Base class for data-fidelity strategies (see module docstring).
+
+    Subclasses override the class attributes and the four math methods.
+    Instances are jit static arguments — keep them frozen/hashable.
+    """
+
+    # -- metadata (plain class attributes, NOT dataclass fields, so
+    # frozen subclasses just shadow them — same pattern as ScreeningRule)
+    name = "abstract"
+    #: per-sample smoothness constant: GAP radius = sqrt(2*nu*gap)/lam,
+    #: block majorization bound = nu*Lg.  Python float on purpose — it
+    #: constant-folds at trace time (nu=1.0 leaves the lsq radius graph
+    #: bit-identical to the pre-loss code).
+    nu = 1.0
+    #: True when y/beta carry a task axis (matrix-valued coefficients).
+    multi_output = False
+
+    # -- the strategy surface ---------------------------------------------
+
+    def value(self, y, z):
+        """``F(z)``: data-fidelity at linear predictor ``z`` (scalar)."""
+        raise NotImplementedError
+
+    def neg_grad(self, y, z):
+        """``rho = -grad_z F(z)``: the generalized residual (shape of y)."""
+        raise NotImplementedError
+
+    def conjugate(self, y, u):
+        """``F*(u)`` (scalar); +inf outside the conjugate's domain."""
+        raise NotImplementedError
+
+    def dual_obj(self, y, theta, lam_):
+        """``D(theta) = -F*(-lam * theta)`` — override only to swap in
+        algebraically equal, numerically preferred arithmetic."""
+        return -self.conjugate(y, -lam_ * theta)
+
+    def lam_max_rho(self, y):
+        """``rho`` at ``beta = 0`` (drives ``lam_max = Omega^D(X^T rho0)``)."""
+        return self.neg_grad(y, jnp.zeros_like(y))
+
+    def __repr__(self) -> str:  # stable cache-token identity, like rules
+        return f"{type(self).__name__}(name={self.name!r})"

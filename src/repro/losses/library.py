@@ -1,0 +1,128 @@
+"""Built-in data-fidelity losses: "lsq", "logistic", "multitask".
+
+Each class states its conjugate pair explicitly — the safety of every
+GAP certificate built on top rests on these identities (see the proof
+obligations in :mod:`repro.losses.base` and the property tests in
+``tests/test_losses.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .base import Loss
+
+__all__ = ["LeastSquaresLoss", "LogisticLoss", "MultiTaskLoss"]
+
+
+def _xlogx(v):
+    """``v * log(v)`` with the conventional ``0 * log 0 = 0`` and +inf
+    for ``v < 0`` (outside the entropy domain)."""
+    safe = jnp.where(v > 0, v, 1.0)
+    out = jnp.where(v > 0, v * jnp.log(safe), 0.0)
+    return jnp.where(v < 0, jnp.inf, out)
+
+
+@dataclasses.dataclass(frozen=True)
+class LeastSquaresLoss(Loss):
+    """``F(z) = 0.5 ||y - z||^2`` — the paper's squared loss.
+
+    Conjugate: ``f_i*(u) = 0.5 u^2 + u y_i``, so ``-F*(-lam theta) =
+    lam <theta, y> - 0.5 lam^2 ||theta||^2``.  :meth:`dual_obj` keeps the
+    historical equivalent form ``0.5||y||^2 - 0.5 lam^2 ||theta -
+    y/lam||^2`` (expand the square — identical algebra) so the default
+    loss produces bit-identical programs to the pre-loss solver.
+    ``nu = 1``: each ``f_i`` is 1-smooth.
+    """
+
+    name = "lsq"
+    nu = 1.0
+
+    def value(self, y, z):
+        r = y - z
+        return 0.5 * jnp.sum(r * r)
+
+    def neg_grad(self, y, z):
+        return y - z
+
+    def conjugate(self, y, u):
+        return jnp.sum(0.5 * u * u + u * y)
+
+    def dual_obj(self, y, theta, lam_):
+        # Historical arithmetic, verbatim (== -conjugate(y, -lam*theta)).
+        return (0.5 * jnp.sum(y * y)
+                - 0.5 * lam_ ** 2 * jnp.sum((theta - y / lam_) ** 2))
+
+    def lam_max_rho(self, y):
+        return y
+
+
+@dataclasses.dataclass(frozen=True)
+class LogisticLoss(Loss):
+    """``F(z) = sum_i log(1 + e^{z_i}) - y_i z_i`` with labels in {0, 1}.
+
+    ``rho_i = y_i - sigmoid(z_i)`` lies strictly in ``(y_i - 1, y_i)``,
+    and the Eq. 15 scaling (``>= lam``) keeps ``-lam theta_i = -lam
+    rho_i / scale`` inside the conjugate domain, so the dual objective is
+    finite at every scaled point.  Conjugate (negative binary entropy):
+    ``f_i*(u) = (u + y_i) log(u + y_i) + (1 - u - y_i) log(1 - u - y_i)``
+    for ``u + y_i`` in ``[0, 1]`` (+inf outside).  ``f_i`` is 1/4-smooth
+    (``sigma'(z) <= 1/4``), hence ``nu = 1/4``: the GAP radius tightens
+    to ``sqrt(gap / 2) / lam`` and the BCD majorization divides by the
+    block bound ``nu * L_g = L_g / 4`` (the logistic Hessian is
+    ``diag(sigma')``, bounded by ``I/4``); see ``solver._bcd_epochs_loss``.
+    """
+
+    name = "logistic"
+    nu = 0.25
+
+    def value(self, y, z):
+        # log(1 + e^z) - y z, stable at both tails.
+        return jnp.sum(jnp.logaddexp(0.0, z) - y * z)
+
+    def neg_grad(self, y, z):
+        return y - jax.nn.sigmoid(z)
+
+    def conjugate(self, y, u):
+        v = u + y
+        return jnp.sum(_xlogx(v) + _xlogx(1.0 - v))
+
+    def lam_max_rho(self, y):
+        return y - 0.5
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiTaskLoss(Loss):
+    """``F(Z) = 0.5 ||Y - Z||_F^2`` with ``Y`` of shape (n, K) — the
+    multi-task squared loss of arXiv 1506.03736.
+
+    Same quadratic conjugate algebra as :class:`LeastSquaresLoss`, summed
+    over the task axis; beta grows to (G, ng, K) and the SGL penalty
+    becomes row-group norms (``tau``-weighted row l2 + group Frobenius).
+    Supported at the :mod:`repro.core.sgl` math level (norms, primal/
+    dual/gap, safe-sphere group test); :class:`SGLSession` rejects it
+    until the solver grows a task axis.
+    """
+
+    name = "multitask"
+    nu = 1.0
+    multi_output = True
+
+    def value(self, y, z):
+        r = y - z
+        return 0.5 * jnp.sum(r * r)
+
+    def neg_grad(self, y, z):
+        return y - z
+
+    def conjugate(self, y, u):
+        return jnp.sum(0.5 * u * u + u * y)
+
+    def dual_obj(self, y, theta, lam_):
+        return (0.5 * jnp.sum(y * y)
+                - 0.5 * lam_ ** 2 * jnp.sum((theta - y / lam_) ** 2))
+
+    def lam_max_rho(self, y):
+        return y

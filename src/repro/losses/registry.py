@@ -1,0 +1,57 @@
+"""Loss registry: name -> singleton, mirroring :mod:`repro.rules.registry`.
+
+``resolve_loss`` keeps string configs (``SolverConfig(loss="logistic")``)
+working and fails fast on unknown names with the registered list — the
+same contract the rule registry gives ``SolverConfig.rule``.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Union
+
+from .base import Loss
+
+__all__ = ["register_loss", "available_losses", "get_loss", "resolve_loss"]
+
+_REGISTRY: Dict[str, Loss] = {}
+
+
+def register_loss(loss: Loss, *, overwrite: bool = False) -> Loss:
+    """Register a loss singleton under its ``name``."""
+    if not isinstance(loss, Loss):
+        raise TypeError(
+            f"register_loss expects a Loss instance, got {type(loss)!r}"
+        )
+    if loss.name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"loss {loss.name!r} is already registered "
+            f"(pass overwrite=True to replace)"
+        )
+    _REGISTRY[loss.name] = loss
+    return loss
+
+
+def available_losses() -> List[str]:
+    """Registered loss names, sorted."""
+    return sorted(_REGISTRY)
+
+
+def get_loss(name: str) -> Loss:
+    """The registered singleton for ``name`` (ValueError on unknown)."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown loss {name!r}; registered losses: {available_losses()}"
+        ) from None
+
+
+def resolve_loss(loss: Union[str, Loss]) -> Loss:
+    """Accept a loss object or a legacy string name."""
+    if isinstance(loss, Loss):
+        return loss
+    if isinstance(loss, str):
+        return get_loss(loss)
+    raise TypeError(
+        f"loss must be a Loss instance or a registered name, "
+        f"got {type(loss)!r}"
+    )

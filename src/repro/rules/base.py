@@ -66,6 +66,12 @@ class RuleState(NamedTuple):
     gap: jax.Array        # duality gap at (beta, theta)
     lam: jax.Array        # regularisation level of this round
     lam_max: jax.Array    # lambda_max (0.0 when the caller does not know it)
+    #: sample-wise smoothness constant of the data-fidelity loss
+    #: (:attr:`repro.losses.Loss.nu`): the GAP radius generalizes to
+    #: ``sqrt(2 * nu * gap) / lam``.  A Python float on purpose — it is a
+    #: trace-time constant, so the default 1.0 (squared loss) constant-
+    #: folds and leaves the historical radius graph bit-identical.
+    nu: float = 1.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -105,6 +111,15 @@ class ScreeningRule:
     ``needs_lam_max``
         The sphere construction divides by the true lambda_max; callers
         without it must fail fast instead of passing 0.
+    ``supported_losses``
+        ``None`` means the sphere is valid for every registered
+        data-fidelity loss (the GAP family: radius ``sqrt(2 nu gap)/lam``
+        holds for any nu-smooth loss).  A tuple of loss names restricts
+        the rule to those losses — the static/dynamic/DST3 spheres are
+        built from the quadratic dual's ``y/lambda`` geometry and are
+        least-squares-only; :class:`repro.core.session.SGLSession` fails
+        fast on an unsupported rule x loss pairing, mirroring the
+        rule x mesh gate.
     """
 
     name = "abstract"
@@ -114,6 +129,7 @@ class ScreeningRule:
     supports_compact = False
     pre_screens = False
     needs_lam_max = False
+    supported_losses = None  # None = every loss; else tuple of names
 
     def center_and_radius(
         self, state: RuleState

@@ -32,6 +32,11 @@ class GapSafeRule(ScreeningRule):
     the solver converges).  The center is the skeleton's rescaled dual
     point and the sphere correlation is the residual correlation over the
     dual scale, so the round pays no extra O(n p) work.
+
+    Loss-generic: for a nu-smooth data fidelity the radius generalizes to
+    ``sqrt(2 nu gap) / lambda`` (journal follow-up, arXiv 1611.05780) —
+    ``state.nu`` is a trace-time Python float, so the default 1.0
+    (squared loss) folds away and the historical graph is unchanged.
     """
 
     name = "gap"
@@ -41,7 +46,8 @@ class GapSafeRule(ScreeningRule):
     supports_compact = True
 
     def center_and_radius(self, state: RuleState):
-        radius = jnp.sqrt(2.0 * jnp.maximum(state.gap, 0.0)) / state.lam
+        radius = (jnp.sqrt(2.0 * state.nu * jnp.maximum(state.gap, 0.0))
+                  / state.lam)
         return state.theta, radius, state.corr / state.scale
 
 
@@ -56,6 +62,8 @@ class StaticSafeRule(ScreeningRule):
     is_safe = True
     pre_screens = True
     needs_lam_max = True
+    # The y/lambda-centered sphere is quadratic-dual geometry: lsq only.
+    supported_losses = ("lsq",)
 
     def pre_solve_sphere(self, problem, lam_, lam_max):
         # Delegate to the canonical construction in core (lazy import —
@@ -78,6 +86,7 @@ class DynamicSafeRule(ScreeningRule):
     name = "dynamic"
     is_safe = True
     is_dynamic = True
+    supported_losses = ("lsq",)  # y/lambda center: quadratic dual only
 
     def center_and_radius(self, state: RuleState):
         from repro.core.screening import dynamic_sphere
@@ -96,6 +105,7 @@ class Dst3Rule(ScreeningRule):
     is_safe = True
     is_dynamic = True
     needs_lam_max = True
+    supported_losses = ("lsq",)  # hyperplane at y/lam_max: lsq dual only
 
     def center_and_radius(self, state: RuleState):
         # Lazy import: repro.core.solver imports this package at module
@@ -161,5 +171,6 @@ class StrongSequentialRule(ScreeningRule):
     supports_sequential = True
 
     def center_and_radius(self, state: RuleState):
-        r_gap = jnp.sqrt(2.0 * jnp.maximum(state.gap, 0.0)) / state.lam
+        r_gap = (jnp.sqrt(2.0 * state.nu * jnp.maximum(state.gap, 0.0))
+                 / state.lam)
         return state.theta, self.shrink * r_gap, state.corr / state.scale

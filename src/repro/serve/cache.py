@@ -31,6 +31,7 @@ from ..core.session import SGLSession, SolverConfig
 from ..core.sgl import SGLProblem
 from ..core.solver import resolve_screen_backend, resolve_solver_backend
 from ..kernels import ops as kops
+from ..losses import resolve_loss
 from .types import array_digest, problem_digest
 
 __all__ = ["SessionCache"]
@@ -70,6 +71,7 @@ class SessionCache:
         self.evictions = 0
         self.design_hits = 0
         self.retraces = 0
+        self.loss_rejects = 0
 
     # -- lookups -----------------------------------------------------------
 
@@ -82,6 +84,17 @@ class SessionCache:
         key = self.key(problem, config)
         sess = self._sessions.get(key)
         if sess is not None:
+            if repr(sess.loss) != repr(resolve_loss(config.loss)):
+                # Defense-in-depth: the key already hashes the loss (via
+                # cache_token), so a hit with a mismatched loss means the
+                # keying itself regressed — refuse to hand a tenant a
+                # session compiled for another data fidelity.
+                self.loss_rejects += 1
+                raise RuntimeError(
+                    f"session-cache key collision across losses: cached "
+                    f"session solves {sess.loss.name!r}, request asks "
+                    f"for {resolve_loss(config.loss).name!r}"
+                )
             self._sessions.move_to_end(key)
             self.hits += 1
             return sess, True
@@ -146,4 +159,5 @@ class SessionCache:
             "evictions": self.evictions,
             "design_hits": self.design_hits,
             "retraces": self.retraces,
+            "loss_rejects": self.loss_rejects,
         }

@@ -258,9 +258,16 @@ class SGLServer:
                 dtype = req.problem.X.dtype
                 lam0 = jnp.asarray(float(group.lambdas[0]), dtype)
                 beta_h = jnp.asarray(hint.beta, dtype)
-                gap_h = float(warm_eval(req.problem, beta_h, lam0))
+                # The admission gap is evaluated under the REQUEST's loss
+                # (loss=None is the squared loss, sharing the historical
+                # jit program): a hint must beat the cold start on the
+                # data fidelity actually being solved.
+                wloss = (None if session.loss.name == "lsq"
+                         else session.loss)
+                gap_h = float(warm_eval(req.problem, beta_h, lam0,
+                                        loss=wloss))
                 gap_c = float(warm_eval(
-                    req.problem, jnp.zeros_like(beta_h), lam0))
+                    req.problem, jnp.zeros_like(beta_h), lam0, loss=wloss))
                 # Admission is measured: adopt the hint only when its gap
                 # on the NEW problem beats the cold start's.  The hint is
                 # a primal point only — solve_path re-screens it with a

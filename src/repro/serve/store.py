@@ -32,6 +32,7 @@ is served from memory without touching the solver.
 """
 from __future__ import annotations
 
+import functools
 from collections import OrderedDict
 from typing import NamedTuple, Optional
 
@@ -42,13 +43,14 @@ import jax.numpy as jnp
 from ..core import sgl
 from ..core.session import PathResult, SolverConfig
 from ..core.sgl import SGLProblem
+from ..losses import resolve_loss
 from .types import array_digest, design_digest
 
 __all__ = ["CertificateStore", "WarmHint", "warm_eval"]
 
 
-@jax.jit
-def warm_eval(problem: SGLProblem, beta, lam_):
+@functools.partial(jax.jit, static_argnames=("loss",))
+def warm_eval(problem: SGLProblem, beta, lam_, loss=None):
     """Duality gap of a warm-start candidate on the NEW problem.
 
     One O(n p) pass: residual at ``beta``, dual-scaled feasible point
@@ -57,16 +59,33 @@ def warm_eval(problem: SGLProblem, beta, lam_):
     primal point only, so this evaluation is an economics decision, not a
     safety decision (safety comes from the fresh GAP rounds inside the
     solve).
+
+    ``loss=None`` is the squared loss verbatim (the historical program —
+    the default shares its jit cache entry with every pre-loss call
+    site); a :class:`repro.losses.Loss` evaluates the same admission gap
+    from the generalized residual ``rho = -grad F(X beta)`` and the
+    loss's conjugate dual.
     """
-    resid = problem.y - jnp.einsum("ngk,gk->n", problem.X, beta)
-    corr = jnp.einsum("ngk,n->gk", problem.X, resid)
+    if loss is None or loss.name == "lsq":
+        resid = problem.y - jnp.einsum("ngk,gk->n", problem.X, beta)
+        corr = jnp.einsum("ngk,n->gk", problem.X, resid)
+        scale = jnp.maximum(
+            lam_, sgl.sgl_dual_norm(corr, problem.tau, problem.w)
+        )
+        theta = resid / scale
+        pr = (0.5 * jnp.sum(resid * resid)
+              + lam_ * sgl.sgl_norm(beta, problem.tau, problem.w))
+        return pr - sgl.dual(problem, theta, lam_)
+    z = jnp.einsum("ngk,gk->n", problem.X, beta)
+    rho = loss.neg_grad(problem.y, z)
+    corr = jnp.einsum("ngk,n->gk", problem.X, rho)
     scale = jnp.maximum(
         lam_, sgl.sgl_dual_norm(corr, problem.tau, problem.w)
     )
-    theta = resid / scale
-    pr = (0.5 * jnp.sum(resid * resid)
+    theta = rho / scale
+    pr = (loss.value(problem.y, z)
           + lam_ * sgl.sgl_norm(beta, problem.tau, problem.w))
-    return pr - sgl.dual(problem, theta, lam_)
+    return pr - loss.dual_obj(problem.y, theta, lam_)
 
 
 class PathRecord(NamedTuple):
@@ -84,6 +103,13 @@ class PathRecord(NamedTuple):
     group_active: np.ndarray     # (T, G) masks of the SOURCE problem
     certificates_safe: bool
     y_digest: str
+    loss_token: str = "LeastSquaresLoss()"
+                                 # repr of the loss the path was solved
+                                 #   under; a primal point optimised for a
+                                 #   different data fidelity must never be
+                                 #   offered as a hint (defense-in-depth —
+                                 #   the design digest already separates
+                                 #   losses via the config cache token)
 
 
 class WarmHint(NamedTuple):
@@ -111,6 +137,7 @@ class CertificateStore:
         self.warm_hits = 0
         self.puts = 0
         self.evictions = 0
+        self.loss_rejects = 0
 
     # -- writes ------------------------------------------------------------
 
@@ -139,6 +166,7 @@ class CertificateStore:
             group_active=np.asarray(result.group_active),
             certificates_safe=bool(result.certificates_safe),
             y_digest=ydig,
+            loss_token=repr(resolve_loss(config.loss)),
         )
         self._records.move_to_end(rkey)
         while len(self._exact) > self.capacity:
@@ -165,8 +193,19 @@ class CertificateStore:
         nearest stored lambda (in log space) to the new path's start."""
         dkey = design_digest(problem, config)
         ydig = array_digest(problem.y)
-        candidates = [(k, r) for k, r in self._records.items()
-                      if k[0] == dkey]
+        loss_token = repr(resolve_loss(config.loss))
+        candidates = []
+        for k, r in self._records.items():
+            if k[0] != dkey:
+                continue
+            if r.loss_token != loss_token:
+                # Should be unreachable (the design digest hashes the
+                # config cache token, loss included) — counted, never
+                # served: a hint optimised under another data fidelity is
+                # an anti-warm start at best.
+                self.loss_rejects += 1
+                continue
+            candidates.append((k, r))
         if not candidates:
             return None
         same = [(k, r) for k, r in candidates if r.y_digest == ydig]
@@ -200,6 +239,7 @@ class CertificateStore:
             "warm_hits": self.warm_hits,
             "puts": self.puts,
             "evictions": self.evictions,
+            "loss_rejects": self.loss_rejects,
         }
 
 

@@ -1,0 +1,470 @@
+"""Pluggable data-fidelity Loss strategy: registry/fail-fast wiring,
+lsq bit-identity with the pre-loss solver, logistic GAP certificates and
+Thm-1 screen-then-verify safety per rule x loss, kernel bit parity, the
+multi-task math layer, and the serve-layer loss-identity guards.
+
+The hypothesis property section (conjugate Fenchel-Young, Eq. 15 dual
+feasibility, randomized screen-then-verify) is skipped cleanly when
+hypothesis is absent, like tests/test_properties.py; everything above it
+is deterministic tier-1 coverage.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import SGLSession, SolverConfig, make_problem, sgl
+from repro.core.solver import bcd_epochs_loss, check_rule_loss
+from repro.data.synthetic import make_synthetic
+from repro.kernels import ops, ref
+from repro.losses import (
+    LeastSquaresLoss,
+    LogisticLoss,
+    MultiTaskLoss,
+    available_losses,
+    get_loss,
+    resolve_loss,
+)
+from repro.rules import available_rules, get_rule
+
+try:
+    import hypothesis  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _problem(loss="lsq", n=24, p=40, n_groups=8, seed=7, tau=0.3):
+    X, y, _, sizes = make_synthetic(n=n, p=p, n_groups=n_groups,
+                                    gamma1=3, gamma2=3, seed=seed)
+    problem = make_problem(X, y, sizes, tau=tau)
+    if loss == "logistic":
+        y01 = np.asarray(problem.y) > np.median(np.asarray(problem.y))
+        problem = problem._replace(y=jnp.asarray(y01, problem.X.dtype))
+    return problem
+
+
+@pytest.fixture(scope="module")
+def prob_lsq():
+    return _problem("lsq")
+
+
+@pytest.fixture(scope="module")
+def prob_logistic():
+    return _problem("logistic")
+
+
+# ---------------------------------------------------------------------------
+# Registry + fail-fast wiring
+# ---------------------------------------------------------------------------
+
+def test_registry_contents_and_resolution():
+    assert available_losses() == ["logistic", "lsq", "multitask"]
+    assert isinstance(get_loss("lsq"), LeastSquaresLoss)
+    assert isinstance(resolve_loss("logistic"), LogisticLoss)
+    ll = LogisticLoss()
+    assert resolve_loss(ll) is ll
+    assert resolve_loss("lsq") == LeastSquaresLoss()  # frozen value object
+    assert hash(resolve_loss("lsq")) == hash(LeastSquaresLoss())
+
+
+def test_unknown_loss_fails_fast_everywhere():
+    with pytest.raises(ValueError, match="huber"):
+        resolve_loss("huber")
+    # ... and already at config construction, listing what IS registered.
+    with pytest.raises(ValueError, match="logistic"):
+        SolverConfig(loss="huber")
+
+
+def test_loss_metadata():
+    assert resolve_loss("lsq").nu == 1.0
+    assert resolve_loss("logistic").nu == 0.25
+    assert resolve_loss("multitask").multi_output
+    assert not resolve_loss("lsq").multi_output
+    # nu must be a Python float: it constant-folds at trace time so the
+    # lsq radius graph stays bit-identical to the pre-loss code.
+    assert type(resolve_loss("lsq").nu) is float
+    assert type(resolve_loss("logistic").nu) is float
+
+
+def test_cache_token_separates_losses(prob_lsq):
+    default = SolverConfig().cache_token()
+    explicit = SolverConfig(loss="lsq").cache_token()
+    obj = SolverConfig(loss=LeastSquaresLoss()).cache_token()
+    logistic = SolverConfig(loss="logistic").cache_token()
+    assert default == explicit == obj
+    assert logistic != default
+
+
+def test_rule_x_loss_gate(prob_logistic):
+    logistic = resolve_loss("logistic")
+    for name in ("static", "dynamic", "dst3"):
+        with pytest.raises(ValueError, match="lsq"):
+            check_rule_loss(get_rule(name), logistic)
+        with pytest.raises(ValueError, match=name):
+            SGLSession(prob_logistic,
+                       SolverConfig(rule=name, loss="logistic"))
+    # The GAP family holds for every nu-smooth loss.
+    for name in ("gap", "none", "strong"):
+        check_rule_loss(get_rule(name), logistic)
+
+
+def test_session_rejects_multitask(prob_lsq):
+    with pytest.raises(ValueError, match="multi-output"):
+        SGLSession(prob_lsq, SolverConfig(loss="multitask"))
+
+
+def test_mesh_rejects_non_lsq(prob_logistic):
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("b",))
+    with pytest.raises(ValueError, match="lsq"):
+        SGLSession(prob_logistic, SolverConfig(loss="logistic"), mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# lsq bit-identity: the default loss IS the pre-loss solver
+# ---------------------------------------------------------------------------
+
+def test_lsq_default_string_object_bit_identical(prob_lsq):
+    """Acceptance criterion: default config, loss="lsq" string, and
+    LeastSquaresLoss() object produce bit-identical paths — betas,
+    epochs, screening counters, and the compact/full round split."""
+    runs = []
+    for loss in (None, "lsq", LeastSquaresLoss()):
+        cfg = SolverConfig(tol=1e-7) if loss is None else \
+            SolverConfig(tol=1e-7, loss=loss)
+        runs.append(SGLSession(prob_lsq, cfg).solve_path(T=5, delta=2.0))
+    a = runs[0]
+    for b in runs[1:]:
+        np.testing.assert_array_equal(a.betas, b.betas)
+        assert (a.epochs == b.epochs).all()
+        assert np.array_equal(a.seq_screened, b.seq_screened)
+        assert np.array_equal(a.dyn_screened, b.dyn_screened)
+        assert (a.n_compact_rounds, a.n_full_rounds) == \
+            (b.n_compact_rounds, b.n_full_rounds)
+
+
+# ---------------------------------------------------------------------------
+# Logistic: certificates, lam_max, and the full-rounds-only gating
+# ---------------------------------------------------------------------------
+
+def test_logistic_solve_certified(prob_logistic):
+    session = SGLSession(prob_logistic, SolverConfig(tol=1e-8,
+                                                     loss="logistic"))
+    lam = 0.5 * float(session.lam_max)
+    res = session.solve(lam)
+    assert float(res.gap) <= 1e-8
+    # the certified gap is a true duality gap: recompute it from the
+    # loss-generalized primal/dual at the Eq. 15 scaled dual point.
+    loss = resolve_loss("logistic")
+    theta = sgl.dual_scale_loss(prob_logistic, loss, res.beta, lam)
+    gap = float(sgl.duality_gap_loss(prob_logistic, loss, res.beta,
+                                     theta, lam))
+    assert gap >= -1e-12
+    assert gap <= 1e-7
+
+
+def test_logistic_lam_max(prob_logistic):
+    """lam_max = Omega^D(X^T (y - 1/2)): beta = 0 is optimal at and
+    above it (zero gap at beta = 0), and NOT just below it."""
+    loss = resolve_loss("logistic")
+    lmax = float(sgl.lambda_max_loss(prob_logistic, loss))
+    session = SGLSession(prob_logistic, SolverConfig(tol=1e-9,
+                                                     loss="logistic"))
+    assert float(session.lam_max) == pytest.approx(lmax, rel=1e-12)
+    res = session.solve(1.01 * lmax)
+    assert float(jnp.abs(res.beta).max()) == 0.0
+    res = session.solve(0.8 * lmax)
+    assert float(jnp.abs(res.beta).max()) > 0.0
+
+
+def test_logistic_path_full_rounds_only(prob_logistic):
+    """Non-lsq solves take the certified full-round path only: the
+    compact gather/scatter and batched-lambda fast paths are lsq-only."""
+    session = SGLSession(prob_logistic, SolverConfig(tol=1e-7,
+                                                     loss="logistic"))
+    res = session.solve_path(T=5, delta=2.0)
+    assert res.n_compact_rounds == 0
+    assert res.n_full_rounds > 0
+    assert bool(res.certificates_safe)
+    assert float(np.max(res.gaps)) <= 1e-7
+
+
+# ---------------------------------------------------------------------------
+# Thm-1 screen-then-verify: every is_safe rule x supported loss
+# ---------------------------------------------------------------------------
+
+def _safe_matrix():
+    cells = []
+    for loss_name in ("lsq", "logistic"):
+        for rule_name in available_rules():
+            r = get_rule(rule_name)
+            if not r.is_safe:
+                continue
+            if r.supported_losses is not None and \
+                    loss_name not in r.supported_losses:
+                continue
+            cells.append((loss_name, rule_name))
+    return cells
+
+
+@pytest.fixture(scope="module")
+def tight_refs(prob_lsq, prob_logistic):
+    """Tight-tol unscreened reference paths per loss (the safety oracle),
+    solved once and shared across the rule matrix."""
+    from repro.core.session import lambda_grid
+
+    refs = {}
+    for loss_name, problem in (("lsq", prob_lsq),
+                               ("logistic", prob_logistic)):
+        session = SGLSession(problem, SolverConfig(
+            tol=1e-10, rule="none", loss=loss_name, max_epochs=40_000))
+        lambdas = lambda_grid(session.lam_max, T=4, delta=2.0)
+        betas, beta = [], jnp.zeros((problem.G, problem.ng),
+                                    problem.X.dtype)
+        for lam_ in lambdas:
+            beta = session.solve(float(lam_), beta0=beta).beta
+            betas.append(np.asarray(beta))
+        refs[loss_name] = np.stack(betas)
+    return refs
+
+
+@pytest.mark.parametrize("loss_name,rule_name", _safe_matrix())
+def test_screen_then_verify_safety(loss_name, rule_name, prob_lsq,
+                                   prob_logistic, tight_refs):
+    """Thm 1: a variable screened by a safe rule is zero at the optimum —
+    checked against the tight-tol unscreened reference, per rule x loss."""
+    problem = prob_lsq if loss_name == "lsq" else prob_logistic
+    session = SGLSession(problem, SolverConfig(
+        tol=1e-6, rule=rule_name, loss=loss_name, max_epochs=20_000))
+    res = session.solve_path(T=4, delta=2.0, keep_results=True)
+    assert bool(res.certificates_safe)
+    beta_ref = tight_refs[loss_name]
+    feat_mask = np.asarray(problem.feat_mask).astype(bool)
+    for t in range(4):
+        screened = ~res.feat_active[t] & feat_mask
+        assert (np.abs(beta_ref[t])[screened] <= 1e-7).all(), (
+            f"rule={rule_name} loss={loss_name}: screened a variable "
+            f"that is nonzero at the optimum (lambda index {t})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity: logistic fused mega-kernel == carry reference == XLA
+# ---------------------------------------------------------------------------
+
+def _logistic_state(rng, Gb=8, n=20, ng=4, B=1):
+    Xt = rng.standard_normal((Gb, n, ng))
+    Lg = rng.uniform(0.5, 3.0, Gb)
+    Lg[-1] = 0.0                       # one dead (screened/padded) slot
+    fm = (rng.random((B, Gb, ng)) < 0.85).astype(float)
+    fm[:, -1] = 0.0
+    w = np.sqrt(ng) * np.ones(Gb)
+    beta = rng.standard_normal((B, Gb, ng)) * fm
+    z = np.einsum("gnk,bgk->bn", Xt, beta)
+    y = (rng.random(n) < 0.5).astype(float)
+    return (jnp.asarray(Xt), jnp.asarray(Lg), jnp.asarray(w),
+            jnp.asarray(fm), jnp.asarray(beta), jnp.asarray(z),
+            jnp.asarray(y))
+
+
+def test_logistic_fused_kernel_bit_identical_to_carry(rng):
+    """f64 interpret-mode logistic mega-kernel == the lax.scan carry
+    reference == the solver's bcd_epochs_loss, bit for bit."""
+    Xt, Lg, w, fm, beta, z, y = _logistic_state(rng)
+    tau, lam = jnp.asarray(0.3), jnp.asarray(0.4)
+    loss = resolve_loss("logistic")
+    want_b, want_z = bcd_epochs_loss(Xt, Lg, w, fm[0], beta[0], z[0],
+                                     tau, lam, y, loss, 3)
+    ref_b, ref_z = ref.bcd_epochs_logistic_ref(Xt, Lg, w, fm, beta, z, y,
+                                               tau, jnp.reshape(lam, (1,)),
+                                               3)
+    got_b, got_z = ops.bcd_epochs_logistic_fused(Xt, Lg, w, fm, beta, z, y,
+                                                 tau,
+                                                 jnp.reshape(lam, (1,)), 3)
+    np.testing.assert_array_equal(np.asarray(ref_b[0]), np.asarray(want_b))
+    np.testing.assert_array_equal(np.asarray(ref_z[0]), np.asarray(want_z))
+    np.testing.assert_array_equal(np.asarray(got_b[0]), np.asarray(want_b))
+    np.testing.assert_array_equal(np.asarray(got_z[0]), np.asarray(want_z))
+
+
+def test_logistic_session_pallas_reproduces_xla(prob_logistic):
+    """Session pin: solver_backend="pallas" (interpret on CPU) reproduces
+    the XLA logistic path bit for bit."""
+    paths = {}
+    for backend in ("xla", "pallas"):
+        session = SGLSession(prob_logistic, SolverConfig(
+            tol=1e-7, loss="logistic", solver_backend=backend))
+        paths[backend] = session.solve_path(T=4, delta=2.0)
+    np.testing.assert_array_equal(paths["xla"].betas,
+                                  paths["pallas"].betas)
+    assert (paths["xla"].epochs == paths["pallas"].epochs).all()
+
+
+# ---------------------------------------------------------------------------
+# Multi-task math layer (arXiv 1506.03736)
+# ---------------------------------------------------------------------------
+
+def test_multitask_math_properties(rng):
+    n, G, ng, K = 16, 5, 3, 4
+    X = jnp.asarray(rng.standard_normal((n, G, ng)))
+    Y = jnp.asarray(rng.standard_normal((n, K)))
+    w = jnp.ones(G)
+    tau = 0.4
+    lmax = float(sgl.multitask_lambda_max(X, Y, tau, w))
+    assert lmax > 0
+
+    # K=1 reduces to the vector machinery exactly.
+    beta1 = jnp.asarray(rng.standard_normal((G, ng, 1)))
+    assert float(sgl.multitask_norm(beta1, tau, w)) == pytest.approx(
+        float(sgl.sgl_norm(beta1[..., 0], tau, w)), rel=1e-12)
+    xi1 = jnp.asarray(rng.standard_normal((G, ng, 1)))
+    assert float(sgl.multitask_dual_norm(xi1, tau, w)) == pytest.approx(
+        float(sgl.sgl_dual_norm(xi1[..., 0], tau, w)), rel=1e-12)
+
+    # Eq. 15 scaled point is dual-feasible and its gap is nonnegative.
+    beta = jnp.asarray(rng.standard_normal((G, ng, K)) * 0.1)
+    lam = 0.5 * lmax
+    theta = sgl.multitask_dual_scale(X, Y, beta, tau, w, lam)
+    corr = jnp.einsum("ngk,nt->gkt", X, theta)
+    assert float(sgl.multitask_dual_norm(corr, tau, w)) <= 1 + 1e-10
+    gap = float(sgl.multitask_duality_gap(X, Y, beta, theta, tau, w, lam))
+    assert gap >= -1e-10
+
+    # At lam >= lam_max, beta = 0 is optimal: zero gap at the scaled point.
+    beta0 = jnp.zeros((G, ng, K))
+    lam_hi = 1.5 * lmax
+    theta0 = sgl.multitask_dual_scale(X, Y, beta0, tau, w, lam_hi)
+    gap0 = float(sgl.multitask_duality_gap(X, Y, beta0, theta0, tau, w,
+                                           lam_hi))
+    assert abs(gap0) <= 1e-9 * max(1.0, float(jnp.sum(Y * Y)))
+
+
+# ---------------------------------------------------------------------------
+# Serve layer: loss identity guards (defense-in-depth)
+# ---------------------------------------------------------------------------
+
+def test_certificate_store_rejects_cross_loss_hints(prob_lsq):
+    from repro.serve.store import CertificateStore
+
+    cfg = SolverConfig(tol=1e-6)
+    session = SGLSession(prob_lsq, cfg)
+    res = session.solve_path(T=3, delta=2.0)
+    store = CertificateStore(capacity=4)
+    store.put("req0", prob_lsq, cfg, res)
+
+    hint = store.warm_hint(prob_lsq, cfg, np.asarray(res.lambdas))
+    assert hint is not None
+    assert hint.record.loss_token == "LeastSquaresLoss()"
+
+    # A logistic request never sees the lsq record (the design digest
+    # already separates losses via the config cache token).
+    cfg_log = SolverConfig(tol=1e-6, loss="logistic")
+    assert store.warm_hint(prob_lsq, cfg_log,
+                           np.asarray(res.lambdas)) is None
+    assert store.stats()["loss_rejects"] == 0
+
+    # Defense-in-depth: even if the keying regressed and a record landed
+    # under this design with a foreign loss token, it is never served.
+    (k, rec), = [(k, r) for k, r in store._records.items()]
+    store._records[k] = rec._replace(loss_token="LogisticLoss()")
+    assert store.warm_hint(prob_lsq, cfg, np.asarray(res.lambdas)) is None
+    assert store.stats()["loss_rejects"] == 1
+
+
+def test_session_cache_refuses_cross_loss_collision(prob_lsq):
+    from repro.serve.cache import SessionCache
+
+    cache = SessionCache(capacity=4)
+    cfg = SolverConfig(tol=1e-6)
+    sess, hit = cache.get(prob_lsq, cfg)
+    assert not hit
+    _, hit = cache.get(prob_lsq, cfg)
+    assert hit
+
+    # Defense-in-depth: plant a key collision across losses and the
+    # cache must refuse to serve the mismatched session.
+    cfg_log = SolverConfig(tol=1e-6, loss="logistic")
+    cache._sessions[cache.key(prob_lsq, cfg_log)] = sess
+    with pytest.raises(RuntimeError, match="collision across losses"):
+        cache.get(prob_lsq, cfg_log)
+    assert cache.stats()["loss_rejects"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties (skipped cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+    import hypothesis.extra.numpy as hnp
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        z=hnp.arrays(np.float64, 12,
+                     elements=st.floats(-30, 30, allow_nan=False)),
+        t=hnp.arrays(np.float64, 12,
+                     elements=st.floats(-30, 30, allow_nan=False)),
+        ybits=hnp.arrays(np.bool_, 12),
+    )
+    def test_property_logistic_fenchel_young(z, t, ybits):
+        """F(z) + F*(u) >= <u, z> for u in the conjugate domain, with
+        equality at u = grad F(z) — the identity every logistic GAP
+        certificate rests on."""
+        loss = LogisticLoss()
+        y = jnp.asarray(ybits, jnp.float64)
+        zj = jnp.asarray(z)
+        # u = grad F at predictor t: always strictly inside the domain.
+        u = jax.nn.sigmoid(jnp.asarray(t)) - y
+        F = float(loss.value(y, zj))
+        Fstar = float(loss.conjugate(y, u))
+        inner = float(jnp.vdot(u, zj))
+        assert F + Fstar >= inner - 1e-8 * (1 + abs(inner))
+        # Fenchel-Young equality at u = grad F(z):
+        ustar = jax.nn.sigmoid(zj) - y
+        eq = float(loss.value(y, zj) + loss.conjugate(y, ustar)
+                   - jnp.vdot(ustar, zj))
+        assert abs(eq) <= 1e-7 * (1 + F)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**16),
+        lam_frac=st.floats(0.05, 2.0),
+        scale=st.floats(0.0, 2.0),
+    )
+    def test_property_logistic_dual_scaling_feasible(seed, lam_frac,
+                                                     scale):
+        """The Eq. 15 scaled dual point is feasible (Omega^D <= 1) and
+        yields a finite, nonnegative gap at EVERY primal point — the
+        dynamic-screening precondition."""
+        problem = _problem("logistic", n=16, p=20, n_groups=4, seed=seed)
+        loss = LogisticLoss()
+        rng_ = np.random.default_rng(seed)
+        beta = jnp.asarray(
+            scale * rng_.standard_normal((problem.G, problem.ng)))
+        lam = lam_frac * float(sgl.lambda_max_loss(problem, loss))
+        theta = sgl.dual_scale_loss(problem, loss, beta, lam)
+        corr = jnp.einsum("ngk,n->gk", problem.X, theta)
+        assert float(sgl.sgl_dual_norm(corr, problem.tau,
+                                       problem.w)) <= 1 + 1e-10
+        gap = float(sgl.duality_gap_loss(problem, loss, beta, theta, lam))
+        assert np.isfinite(gap)
+        assert gap >= -1e-10
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), loss_name=st.sampled_from(
+        ["lsq", "logistic"]))
+    def test_property_screen_then_verify(seed, loss_name):
+        """Randomized Thm-1 audit: the GAP rule's screened set on a
+        random problem is zero at a tight-tol unscreened optimum."""
+        problem = _problem(loss_name, n=16, p=24, n_groups=6, seed=seed)
+        session = SGLSession(problem, SolverConfig(
+            tol=1e-6, loss=loss_name, max_epochs=20_000))
+        lam = 0.4 * float(session.lam_max)
+        res = session.solve(lam)
+        ref = SGLSession(problem, SolverConfig(
+            tol=1e-10, rule="none", loss=loss_name, max_epochs=40_000))
+        beta_ref = np.asarray(ref.solve(lam).beta)
+        feat_mask = np.asarray(problem.feat_mask).astype(bool)
+        screened = ~np.asarray(res.feat_active) & feat_mask
+        assert (np.abs(beta_ref)[screened] <= 1e-7).all()
