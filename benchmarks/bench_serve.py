@@ -30,15 +30,19 @@ the same workload at CI scale; ``--json`` records the perf trajectory
 from __future__ import annotations
 
 import argparse
+import json
+import tempfile
 import time
 
 import numpy as np
 
 from benchmarks.common import emit, header, write_json
 
+from repro import ckpt
 from repro.core import sgl
 from repro.core.session import SGLSession, SolverConfig, lambda_grid
 from repro.data.synthetic import make_synthetic
+from repro.faults import FaultPlan, FaultSpec, inject
 from repro.serve import PathRequest, ServeConfig, SGLServer
 
 
@@ -242,15 +246,146 @@ def run(n=64, p=512, groups=64, T=10, tau=0.3, tol=1e-7,
     print("SERVE BENCH PASS")
 
 
+# ---------------------------------------------------------------------------
+# --faults mode: the same 10-tenant load under injected failures
+# ---------------------------------------------------------------------------
+
+def _lat_stats(responses, total_s: float) -> dict:
+    lat = np.array([t for _r, t in responses])
+    return {
+        "requests": int(len(lat)),
+        "total_seconds": float(total_s),
+        "latency_p50_s": float(np.percentile(lat, 50)),
+        "latency_p99_s": float(np.percentile(lat, 99)),
+    }
+
+
+def _merge_json(path: str, key: str, payload: dict) -> None:
+    """Merge ``payload`` under ``key`` — the chaos runner records into
+    the same file (``"chaos"``), and CI order must not matter."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        if not isinstance(data, dict) or "rows" in data:
+            data = {}
+    except (FileNotFoundError, json.JSONDecodeError):
+        data = {}
+    data[key] = payload
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"faults report -> {path}")
+
+
+def run_faults(n=48, p=256, groups=32, T=8, tau=0.3, tol=1e-7,
+               max_epochs=20_000, json_path=None) -> None:
+    """10-tenant two-wave load with a mid-wave worker kill, a mid-path
+    segment kill, and one poisoned (truncated) checkpoint.
+
+    Availability must stay 1.0 — every future resolves with a result
+    whose betas are bit-identical to the fault-free pass; the cost of
+    the faults shows up only in p99 (which includes recovery) and the
+    retry/restart/quarantine counters recorded alongside the fault-free
+    baseline.
+    """
+    solver = SolverConfig(tol=tol, max_epochs=max_epochs)
+    wave1, wave2, _refs = _build_workload(n, p, groups, T, tau, solver)
+    waves = [wave1, wave2]
+    n_req = len(wave1) + len(wave2)
+
+    def chunk_cfg(tmpdir):
+        return ServeConfig(default_solver=solver, coalesce_window_s=0.05,
+                           batch_lambdas=4, ckpt_dir=tmpdir,
+                           ckpt_every=max(T // 2, 2),
+                           retry_backoff_s=0.01)
+
+    # Untimed warmup so both timed passes run against warm jit caches.
+    with tempfile.TemporaryDirectory() as tmp:
+        warm = SGLServer(chunk_cfg(tmp)).start()
+        _play(warm, waves)
+        warm.stop()
+
+    # ---- fault-free pass (the recovery-cost baseline) ----
+    with tempfile.TemporaryDirectory() as tmp:
+        server = SGLServer(chunk_cfg(tmp)).start()
+        responses, total_ff = _play(server, waves)
+        server.stop()
+    base_stats = _lat_stats(responses, total_ff)
+    base_stats["availability"] = 1.0
+    base_by_tenant = {r.tenant: r for r, _t in responses}
+
+    # ---- faulted pass: kill the worker as the SECOND coalesced group
+    # enters service (mid wave 1), kill it again mid-path on a later
+    # segment, and truncate one published checkpoint so the recovery
+    # resume has to quarantine it ----
+    plan = FaultPlan((
+        FaultSpec("serve.worker", "kill", hits=(1,)),
+        FaultSpec("serve.segment", "kill", hits=(3,)),
+        FaultSpec("ckpt.payload", "truncate", hits=(2,)),
+    ))
+    q0 = ckpt.quarantine_count()
+    with tempfile.TemporaryDirectory() as tmp:
+        server = SGLServer(chunk_cfg(tmp)).start()
+        with inject(plan) as log:
+            responses_f, total_f = _play(server, waves)
+        server.stop()
+    fired = log.count()
+    resolved = [r for r, _t in responses_f if r is not None]
+    availability = len(resolved) / n_req
+    fault_stats = _lat_stats(responses_f, total_f)
+    fault_stats.update({
+        "availability": float(availability),
+        "faults_fired": int(fired),
+        "retries": int(server.counters["retries"]),
+        "worker_restarts": int(server.counters["worker_restarts"]),
+        "checkpoints_quarantined": int(ckpt.quarantine_count() - q0),
+    })
+
+    # ---- the contract: nothing lost, nothing wrong, only slower ----
+    assert fired >= 3, f"only {fired} faults fired"
+    assert availability == 1.0, f"availability {availability:.2f} < 1.0"
+    assert server.counters["worker_restarts"] >= 2
+    assert server.counters["retries"] >= 2
+    for r, _t in responses_f:
+        np.testing.assert_array_equal(
+            r.result.betas, base_by_tenant[r.tenant].result.betas,
+            err_msg=f"{r.tenant}: faulted betas differ from fault-free")
+    assert all(r.result.certificates_safe for r, _t in responses_f)
+
+    for case, st in (("fault_free", base_stats), ("faulted", fault_stats)):
+        for metric, value in st.items():
+            emit("serve_faults", case, metric, value)
+    if json_path:
+        _merge_json(json_path, "serve_faults", {
+            "workload": {"tenants": n_req, "n": n, "p": p,
+                         "groups": groups, "T": T},
+            "fault_free": base_stats,
+            "faulted": fault_stats,
+        })
+    print("SERVE FAULTS BENCH PASS")
+
+
 def main() -> None:
     parser = argparse.ArgumentParser(description=__doc__)
     parser.add_argument("--smoke", action="store_true",
                         help="CI scale: small shapes, same assertions")
+    parser.add_argument("--faults", action="store_true",
+                        help="run the fault-injection load (mid-wave "
+                             "worker kill + poisoned checkpoint) and "
+                             "record availability/p99/retries")
     parser.add_argument("--json", metavar="PATH",
                         help="write the emitted rows as JSON (the "
-                             "BENCH_pr7.json perf-trajectory record)")
+                             "BENCH_pr7.json perf-trajectory record; "
+                             "with --faults, merged into BENCH_pr9-style "
+                             "fault reports)")
     args = parser.parse_args()
     header()
+    if args.faults:
+        if args.smoke:
+            run_faults(n=32, p=128, groups=16, T=6, json_path=args.json)
+        else:
+            run_faults(json_path=args.json)
+        return
     # T=10 at delta=0.5 is the densest-grid recipe that keeps the warm
     # predictor satisfied on these shapes, so the coalesced solves
     # exercise the batched-lambda machinery (same recipe as bench_path).

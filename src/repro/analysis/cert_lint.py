@@ -19,6 +19,12 @@ source level:
   the safety-matrix tests in ``tests/test_rules.py`` (the tests that
   assert certified masks match the exact support) — a rule claiming
   safety that no test cross-checks is an unbacked proof claim.
+* **CS004** no ``except`` handler under ``core/`` or ``serve/``
+  constructs a ``RoundResult``/``PathResult`` or adopts a screen mask
+  (``group_active &= ...`` / ``feat_active &= ...``): an exception means
+  the round's dataflow is suspect, and the only sound moves are to
+  rewind to known-good state or re-raise — never to synthesise a result
+  (which would carry a safety claim derived from a broken trajectory).
 """
 from __future__ import annotations
 
@@ -141,6 +147,61 @@ def lint_strong_imports(src_root: str) -> List[Finding]:
     return findings
 
 
+_MASK_NAMES = {"group_active", "feat_active"}
+
+
+def lint_exception_paths(
+    src_root: str,
+    subdirs: Sequence[str] = ("core", "serve"),
+) -> List[Finding]:
+    """CS004: exception handlers in solver/serve code must rewind or
+    re-raise — never construct a result object or adopt a screen mask.
+
+    Re-wraps through a star (``RoundResult(*r)``) are exempt for the
+    same reason as CS001: the safety bit travels through an existing,
+    already-certified result rather than being synthesised in the
+    handler.
+    """
+    findings: List[Finding] = []
+    for path in _py_files(src_root, subdirs=subdirs):
+        rel = os.path.normpath(os.path.relpath(path, src_root))
+        with open(path) as f:
+            tree = ast.parse(f.read(), filename=path)
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            for sub in ast.walk(node):
+                if isinstance(sub, ast.Call):
+                    name = _callee_name(sub.func)
+                    if name not in _RESULT_KEYS:
+                        continue
+                    if any(isinstance(a, ast.Starred) for a in sub.args):
+                        continue
+                    findings.append(Finding(
+                        pass_name="cert", code="CS004",
+                        message=(f"except handler constructs {name}(...); "
+                                 f"exception paths must rewind or "
+                                 f"re-raise, never synthesise a result"),
+                        location=f"{rel}:{sub.lineno}",
+                    ))
+                elif (isinstance(sub, ast.AugAssign)
+                      and isinstance(sub.op, ast.BitAnd)):
+                    tgt = sub.target
+                    ident = (tgt.id if isinstance(tgt, ast.Name)
+                             else tgt.attr if isinstance(tgt, ast.Attribute)
+                             else "")
+                    if ident in _MASK_NAMES:
+                        findings.append(Finding(
+                            pass_name="cert", code="CS004",
+                            message=(f"except handler intersects screen "
+                                     f"mask {ident!r}; a mask narrowed on "
+                                     f"an exception path is an uncertified "
+                                     f"discard"),
+                            location=f"{rel}:{sub.lineno}",
+                        ))
+    return findings
+
+
 def lint_safety_matrix(tests_root: str,
                        safe_rule_names: Sequence[str]) -> List[Finding]:
     path = os.path.join(tests_root, "test_rules.py")
@@ -203,5 +264,6 @@ def run(src_root: Optional[str] = None,
                            if get_rule(n).is_safe]
     findings = lint_result_constructions(src_root)
     findings += lint_strong_imports(src_root)
+    findings += lint_exception_paths(src_root)
     findings += lint_safety_matrix(tests_root, safe_rule_names)
     return findings

@@ -3,9 +3,11 @@ from .checkpoint import (
     gc_keep_k,
     latest,
     latest_step,
+    quarantine_count,
     restore,
     save,
 )
+from repro.faults.errors import CheckpointCorrupt
 
 __all__ = ["CheckpointManager", "save", "restore", "latest", "latest_step",
-           "gc_keep_k"]
+           "gc_keep_k", "quarantine_count", "CheckpointCorrupt"]

@@ -12,10 +12,17 @@ Guarantees:
   standard TPU-pod preemption signal) before exiting.
 
 Format: one ``.npz`` per checkpoint with leaves keyed by their tree path +
-a JSON manifest (step, leaf paths, dtypes/shapes).
+a JSON manifest (step, leaf paths, dtypes/shapes, payload digest).
+
+Integrity: :func:`save` records a content digest of the payload file in
+the manifest; :func:`latest` and :func:`restore` verify it.  A corrupt or
+truncated step is *quarantined* (renamed aside, counted) and :func:`latest`
+falls back to the newest intact snapshot — so a resume after bit-rot lands
+on valid state and simply rewinds the path cursor.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -26,6 +33,25 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 import jax
+
+from repro.faults.errors import CheckpointCorrupt
+from repro.faults.inject import corrupt_file as _corrupt_file
+from repro.faults.inject import fire as _fire_fault
+
+_QUARANTINED = 0
+
+
+def quarantine_count() -> int:
+    """Checkpoints quarantined (renamed aside) this process."""
+    return _QUARANTINED
+
+
+def _payload_digest(path: str) -> str:
+    h = hashlib.blake2b(digest_size=16)
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def _flatten_with_paths(tree):
@@ -58,6 +84,7 @@ def save(directory: str, step: int, tree: Any,
         "step": step,
         "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                    for k, v in flat.items()},
+        "payload_digest": _payload_digest(os.path.join(tmp, "arrays.npz")),
         "extra": dict(extra_manifest) if extra_manifest else {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -65,6 +92,11 @@ def save(directory: str, step: int, tree: Any,
     if os.path.exists(final):
         shutil.rmtree(final)
     os.replace(tmp, final)     # atomic publish
+    # Chaos hook: bit-rot strikes AFTER publish, after the digest was
+    # recorded — exactly the corruption verification must catch.
+    specs = _fire_fault("ckpt.payload")
+    if specs:
+        _corrupt_file(os.path.join(final, "arrays.npz"), specs)
     _write_latest_pointer(directory, step, manifest)
     return final
 
@@ -78,8 +110,43 @@ def _write_latest_pointer(directory: str, step: int, manifest: dict) -> None:
     os.replace(tmp, os.path.join(directory, "latest.json"))
 
 
+def _verify_step(directory: str, step: int) -> bool:
+    """True iff the step's payload matches its recorded digest.
+
+    Manifests written before digests existed have nothing to verify and
+    pass; a missing/unreadable payload or manifest fails.
+    """
+    path = os.path.join(directory, f"step_{step:012d}")
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return False
+    want = manifest.get("payload_digest")
+    if want is None:
+        return True
+    try:
+        return _payload_digest(os.path.join(path, "arrays.npz")) == want
+    except FileNotFoundError:
+        return False
+
+
+def _quarantine(directory: str, step: int) -> None:
+    """Rename a corrupt step dir aside so scans never see it again."""
+    global _QUARANTINED
+    src = os.path.join(directory, f"step_{step:012d}")
+    dst = os.path.join(directory, f"quarantined.step_{step:012d}")
+    if os.path.exists(dst):
+        shutil.rmtree(dst, ignore_errors=True)
+    try:
+        os.replace(src, dst)
+    except FileNotFoundError:
+        return
+    _QUARANTINED += 1
+
+
 def latest(directory: str) -> Optional[tuple]:
-    """``(step, manifest)`` of the newest checkpoint, or ``None``.
+    """``(step, manifest)`` of the newest *intact* checkpoint, or ``None``.
 
     Reads the atomic ``latest.json`` pointer written by :func:`save` —
     one small JSON instead of an O(k) step-dir scan — and falls back to
@@ -87,6 +154,11 @@ def latest(directory: str) -> Optional[tuple]:
     directories written before the pointer existed (or whose pointer was
     deleted).  The pointed-at step dir is verified to still exist, so a
     stale pointer can never resolve to a GC'd checkpoint.
+
+    Every candidate is digest-verified before being returned; a corrupt
+    or truncated step is quarantined (renamed aside, counted in
+    :func:`quarantine_count`) and the scan falls back to the next newest
+    intact snapshot — resume then rewinds to the last good cursor.
     """
     pointer = os.path.join(directory, "latest.json")
     try:
@@ -94,15 +166,21 @@ def latest(directory: str) -> Optional[tuple]:
             data = json.load(f)
         step = int(data["step"])
         if os.path.isdir(os.path.join(directory, f"step_{step:012d}")):
-            return step, data["manifest"]
+            if _verify_step(directory, step):
+                return step, data["manifest"]
+            _quarantine(directory, step)
     except (FileNotFoundError, KeyError, ValueError, json.JSONDecodeError):
         pass
-    step = latest_step(directory)
-    if step is None:
-        return None
-    with open(os.path.join(directory, f"step_{step:012d}",
-                           "manifest.json")) as f:
-        return step, json.load(f)
+    while True:
+        step = latest_step(directory)
+        if step is None:
+            return None
+        if not _verify_step(directory, step):
+            _quarantine(directory, step)
+            continue
+        with open(os.path.join(directory, f"step_{step:012d}",
+                               "manifest.json")) as f:
+            return step, json.load(f)
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -129,6 +207,8 @@ def restore(directory: str, tree_like: Any, step: Optional[int] = None,
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
     path = os.path.join(directory, f"step_{step:012d}")
+    if not _verify_step(directory, step):
+        raise CheckpointCorrupt(path, "payload digest mismatch")
     data = np.load(os.path.join(path, "arrays.npz"))
 
     flat_paths = jax.tree_util.tree_flatten_with_path(tree_like)
@@ -172,6 +252,9 @@ class CheckpointManager:
         self.keep = keep
         self._lock = threading.Lock()
         self._latest_provider: Optional[Callable[[], tuple]] = None
+        self._sigterm_installed = False
+        self._sigterm_prev: Any = None
+        self._sigterm_once = threading.Lock()
 
     def maybe_save(self, step: int, tree: Any) -> Optional[str]:
         if step % self.every != 0:
@@ -182,16 +265,33 @@ class CheckpointManager:
             return path
 
     def install_sigterm_hook(self, provider: Callable[[], tuple]) -> None:
-        """provider() -> (step, tree); called on SIGTERM (pod preemption)."""
+        """provider() -> (step, tree); called on SIGTERM (pod preemption).
+
+        Idempotent: installing twice updates the provider without
+        stacking handlers.  A pre-existing SIGTERM handler is chained
+        (called after the save); a second SIGTERM landing while a save
+        is already in progress skips the save entirely rather than
+        re-entering the checkpoint write.
+        """
         self._latest_provider = provider
+        if self._sigterm_installed:
+            return
 
         def handler(signum, frame):
-            if self._latest_provider is not None:
-                step, tree = self._latest_provider()
-                save(self.directory, step, tree)
+            if self._sigterm_once.acquire(blocking=False):
+                try:
+                    if self._latest_provider is not None:
+                        step, tree = self._latest_provider()
+                        save(self.directory, step, tree)
+                finally:
+                    self._sigterm_once.release()
+            prev = self._sigterm_prev
+            if callable(prev) and prev is not handler:
+                prev(signum, frame)
             raise SystemExit(143)
 
-        signal.signal(signal.SIGTERM, handler)
+        self._sigterm_prev = signal.signal(signal.SIGTERM, handler)
+        self._sigterm_installed = True
 
     def restore_latest(self, tree_like: Any, shardings: Any = None):
         step = latest_step(self.directory)

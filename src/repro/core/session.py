@@ -131,6 +131,8 @@ from .solver import (
     resolve_screen_backend,
     resolve_solver_backend,
 )
+from ..faults.errors import KernelLaunchError, NumericsError
+from ..faults.inject import fire as _fire_fault
 from ..kernels import ops as kops
 from ..losses import Loss, resolve_loss
 from ..rules import ScreeningRule, resolve_rule
@@ -323,6 +325,12 @@ class PathResult(NamedTuple):
                                    #   — they certify NOTHING, and Fig. 3
                                    #   style comparisons must treat them as
                                    #   potentially erroneous.
+    degraded: str = ""             # "" = full path; "deadline" |
+                                   #   "epoch_budget" = a SolveBudget
+                                   #   tripped and the arrays hold only the
+                                   #   prefix of lambdas actually solved —
+                                   #   every entry still carries its honest
+                                   #   certified full-problem gap.
 
 
 @functools.partial(jax.jit, static_argnames=("backend",))
@@ -385,6 +393,13 @@ def _global_lipschitz(problem: SGLProblem, n_iter: int = 150) -> float:
     v = jax.lax.fori_loop(0, n_iter, body, v0)
     u = jnp.einsum("ngk,gk->n", X, v)
     return float(jnp.sum(u * u)) * 1.05
+
+
+def _fire_epoch_launch_fault() -> None:
+    """Chaos hook for the fused epoch-kernel dispatch sites."""
+    for s in _fire_fault("kernels.epochs"):
+        if s.kind == "raise":
+            raise KernelLaunchError("injected epoch-kernel launch failure")
 
 
 class SGLSession:
@@ -479,6 +494,14 @@ class SGLSession:
         # Epoch blocks dispatched as ONE fused Pallas launch instead of an
         # O(G) lax.scan (solver_backend="pallas" only).
         self.fused_epoch_launches = 0
+        # Fault-tolerance accounting + per-request budget (repro.faults):
+        # certified rounds discarded for a non-finite gap (the solve loop
+        # rewinds and re-runs them), pallas→reference kernel demotions
+        # after failed launches, and the optional SolveBudget the serving
+        # layer attaches for the duration of one request.
+        self.nonfinite_rounds = 0
+        self.kernel_demotions = 0
+        self.budget = None
         if xt_pre is not None:
             p = problem.G * problem.ng
             bp, bn = kops._corr_blocks(p, problem.n)
@@ -541,9 +564,21 @@ class SGLSession:
     def _certified_round(self, beta, lam_j, lam_max_j, rule,
                          caches: Optional[SolveCaches] = None) -> RoundResult:
         """One FULL certified round; refreshes the compact-round reference
-        (residual + per-group dual-norm terms) on ``caches``."""
+        (residual + per-group dual-norm terms) on ``caches`` — but only
+        when the round's gap is finite.  A corrupted round must never
+        install its residual as the compact-round reference: the previous
+        full round's reference stays cached, and it remains a valid bound
+        anchor for later compact rounds.
+
+        Fault sites: ``core.round`` (numeric corruption of this round's
+        outputs, stalls), ``kernels.screen`` (Pallas launch failure — the
+        session demotes itself to the XLA reference backend, retries the
+        round once, and counts the demotion; pallas/XLA bit-parity keeps
+        the retried round's outputs identical).
+        """
         caches = self.caches if caches is None else caches
         problem = self.problem
+        specs = _fire_fault("core.round")   # stall kinds sleep in fire()
         self.rounds += 1
         self.full_rounds += 1
         self._rounds_since_full = 0
@@ -551,13 +586,60 @@ class SGLSession:
         # loss=None for lsq keeps the legacy jit cache key (shared with
         # every pre-loss call site); non-lsq rounds screen from the
         # generalized residual rho = -grad F(X beta).
-        res, resid, terms = _screen_round(
-            problem, beta, lam_j, lam_max_j, rule, self.backend,
-            self.xt_pre,
-            loss=None if self.loss.name == "lsq" else self.loss,
-        )
-        caches.set_refs(problem, resid, terms)
+        loss_arg = None if self.loss.name == "lsq" else self.loss
+        try:
+            for s in _fire_fault("kernels.screen"):
+                if s.kind == "raise":
+                    raise KernelLaunchError(
+                        "injected screening-kernel launch failure"
+                    )
+            res, resid, terms = _screen_round(
+                problem, beta, lam_j, lam_max_j, rule, self.backend,
+                self.xt_pre, loss=loss_arg,
+            )
+        except Exception:
+            if self.backend != "pallas":
+                raise
+            # Failed Pallas launch: demote the session to the XLA
+            # reference path and retry ONCE.  Bit-parity between the
+            # backends keeps the retried round's outputs identical; the
+            # demotion is counted so a degraded node stays visible in the
+            # fused-launch audit.
+            self.backend = "xla"
+            self.kernel_demotions += 1
+            kops.note_kernel_demotion()
+            res, resid, terms = _screen_round(
+                problem, beta, lam_j, lam_max_j, rule, "xla", None,
+                loss=loss_arg,
+            )
+        for s in specs:
+            if s.kind in ("nan", "inf"):
+                bad = float("nan") if s.kind == "nan" else float("inf")
+                field = s.field or "theta"
+                if field == "resid":
+                    resid = resid * bad
+                elif field == "corr":
+                    terms = terms * bad
+                else:
+                    res = res._replace(theta=res.theta * bad)
+                # Real corruption in resid/corr/theta propagates into the
+                # gap through the same dataflow; mirror that so the gap
+                # stays the universal corruption detector.
+                res = res._replace(gap=res.gap * bad)
+        if np.isfinite(float(res.gap)):
+            caches.set_refs(problem, resid, terms)
+        else:
+            self.nonfinite_rounds += 1
         return res
+
+    def _demote_solver_backend(self) -> None:
+        """A fused epoch-kernel launch failed: fall back to the lax.scan
+        reference path for the rest of the session.  Bit-parity between
+        the paths keeps results identical; the demotion is counted so the
+        degraded throughput stays visible in the fused-launch audit."""
+        self.solver_backend = "xla"
+        self.kernel_demotions += 1
+        kops.note_kernel_demotion()
 
     def _compact_round(self, beta, lam_j, group_active, feat_active,
                        caches: SolveCaches) -> Optional[RoundResult]:
@@ -777,6 +859,14 @@ class SGLSession:
         Xt_full = None
         resid_nc = None
         z_nc = None
+        # Fault-tolerance state: consecutive non-finite certified rounds
+        # (cap 3 -> typed NumericsError), the best finite iterate to
+        # rewind to when beta itself is corrupted, and the budget-trip
+        # reason (threads into SolveResult.degraded).
+        nonfinite_run = 0
+        best_gap: Optional[float] = None
+        best_beta = None
+        degraded: Optional[str] = None
 
         while epochs_done < max_epochs:
             # ---- fused gap + screening round (paper does this every f_ce
@@ -816,7 +906,11 @@ class SGLSession:
                         # per-round recomputation.  Copied because
                         # bcd_epochs donates its residual buffer, which
                         # would otherwise invalidate the cached reference.
-                        resid_nc = caches.resid_ref.copy()
+                        # Gated on round finiteness: a corrupted round left
+                        # the PREVIOUS full round's reference cached, which
+                        # no longer equals y - X beta for the current beta.
+                        if np.isfinite(float(round_res.gap)):
+                            resid_nc = caches.resid_ref.copy()
                     elif not cfg.compact:
                         # Generic losses: the full round's reference is
                         # rho, not z — drop the carried predictor so it is
@@ -831,10 +925,38 @@ class SGLSession:
                 round_res = self._certified_round(
                     beta, lam_j, lam_max_j, rule, caches=caches
                 )
-            gap, theta = round_res.gap, round_res.theta
+            gap_r, theta_r = round_res.gap, round_res.theta
             g_act, f_act = round_res.group_active, round_res.feat_active
             round_res = None
-            gap_history.append((epochs_done, float(gap)))
+            gap_history.append((epochs_done, float(gap_r)))
+
+            if not np.isfinite(float(gap_r)):
+                # Corrupted round: NEVER adopt its masks/theta (an all-False
+                # NaN-comparison mask would erase the active set and the
+                # "certificate" would be garbage).  If beta itself is still
+                # finite the corruption was round-local — keep beta and
+                # simply re-run the round (jit determinism makes the re-run
+                # bit-identical to the fault-free round).  If beta is
+                # corrupted, rewind to the best finite certified iterate
+                # and drop the incremental carries so they are recomputed.
+                nonfinite_run += 1
+                if nonfinite_run >= 3:
+                    raise NumericsError(
+                        f"{nonfinite_run} consecutive non-finite certified "
+                        f"rounds at lambda={float(lam_):.3e}; rewind could "
+                        "not recover a finite trajectory"
+                    )
+                if not bool(jnp.all(jnp.isfinite(beta))):
+                    beta = (best_beta if best_beta is not None
+                            else jnp.zeros((G, ng), dtype))
+                    resid_nc = None
+                    z_nc = None
+                continue
+            nonfinite_run = 0
+            if best_gap is None or float(gap_r) < best_gap:
+                best_gap = float(gap_r)
+                best_beta = beta
+            gap, theta = gap_r, theta_r
 
             if float(gap) <= tol:
                 # Do NOT apply this round's masks: at convergence the
@@ -843,6 +965,15 @@ class SGLSession:
                 # beta here would invalidate the gap just reported.  The
                 # returned active sets reflect the last screen applied.
                 break
+
+            if self.budget is not None:
+                reason = self.budget.exceeded()
+                if reason is not None:
+                    # Budget tripped at a certified boundary: return the
+                    # prefix actually certified — gap/theta above are the
+                    # honest full-problem values for the current beta.
+                    degraded = reason
+                    break
 
             if rule.is_dynamic:
                 n_g0 = int(group_active.sum())
@@ -878,6 +1009,7 @@ class SGLSession:
             )
 
             # ---- up to max_blocks x check BCD epochs in one jitted call --
+            epochs_before = epochs_done
             if cfg.compact:
                 idx, take, Xt, Lg, w, gmask = caches.gather(
                     problem, group_active
@@ -891,22 +1023,34 @@ class SGLSession:
                     xt_rows = caches.gather_xt_rows(
                         problem, group_active, self.xt_pre
                     )
-                if lsq:
-                    beta, k_done, _ = _inner_rounds(
-                        Xt, Lg, w, problem.y, beta,
-                        jnp.asarray(feat_active),
-                        take, gmask, problem.tau, lam_j,
-                        jnp.asarray(tol, dtype), check, max_blocks,
-                        self.solver_backend, xt_rows
-                    )
-                else:
-                    beta, k_done, _ = _inner_rounds_loss(
+                def _epochs_compact(backend, rows):
+                    if backend == "pallas":
+                        _fire_epoch_launch_fault()
+                    if lsq:
+                        return _inner_rounds(
+                            Xt, Lg, w, problem.y, beta,
+                            jnp.asarray(feat_active),
+                            take, gmask, problem.tau, lam_j,
+                            jnp.asarray(tol, dtype), check, max_blocks,
+                            backend, rows
+                        )
+                    return _inner_rounds_loss(
                         Xt, Lg, w, problem.y, beta,
                         jnp.asarray(feat_active),
                         take, gmask, problem.tau, lam_j,
                         jnp.asarray(tol, dtype), self.loss, check,
-                        max_blocks, self.solver_backend, xt_rows
+                        max_blocks, backend, rows
                     )
+
+                try:
+                    beta, k_done, _ = _epochs_compact(
+                        self.solver_backend, xt_rows
+                    )
+                except Exception:
+                    if self.solver_backend != "pallas":
+                        raise
+                    self._demote_solver_backend()
+                    beta, k_done, _ = _epochs_compact("xla", None)
                 epochs_done += check * int(k_done)
                 if self.solver_backend == "pallas" and (
                         lsq or self.loss.name == "logistic"):
@@ -926,13 +1070,21 @@ class SGLSession:
                             "gnk,gk->n", Xt_full, beta
                         )
                     if self.solver_backend == "pallas":
-                        beta_b, resid_b = kops.bcd_epochs_fused(
-                            Xt_full, Lg, problem.w, fmask[None], beta[None],
-                            resid_nc[None], problem.tau,
-                            jnp.reshape(lam_j, (1,)), f_ce
-                        )
-                        beta, resid_nc = beta_b[0], resid_b[0]
-                        self.fused_epoch_launches += 1
+                        try:
+                            _fire_epoch_launch_fault()
+                            beta_b, resid_b = kops.bcd_epochs_fused(
+                                Xt_full, Lg, problem.w, fmask[None],
+                                beta[None], resid_nc[None], problem.tau,
+                                jnp.reshape(lam_j, (1,)), f_ce
+                            )
+                            beta, resid_nc = beta_b[0], resid_b[0]
+                            self.fused_epoch_launches += 1
+                        except Exception:
+                            self._demote_solver_backend()
+                            beta, resid_nc = bcd_epochs(
+                                Xt_full, Lg, problem.w, fmask, beta,
+                                resid_nc, problem.tau, lam_j, f_ce
+                            )
                     else:
                         beta, resid_nc = bcd_epochs(
                             Xt_full, Lg, problem.w, fmask, beta, resid_nc,
@@ -943,13 +1095,22 @@ class SGLSession:
                         z_nc = jnp.einsum("gnk,gk->n", Xt_full, beta)
                     if (self.solver_backend == "pallas"
                             and self.loss.name == "logistic"):
-                        beta_b, z_b = kops.bcd_epochs_logistic_fused(
-                            Xt_full, Lg, problem.w, fmask[None],
-                            beta[None], z_nc[None], problem.y,
-                            problem.tau, jnp.reshape(lam_j, (1,)), f_ce
-                        )
-                        beta, z_nc = beta_b[0], z_b[0]
-                        self.fused_epoch_launches += 1
+                        try:
+                            _fire_epoch_launch_fault()
+                            beta_b, z_b = kops.bcd_epochs_logistic_fused(
+                                Xt_full, Lg, problem.w, fmask[None],
+                                beta[None], z_nc[None], problem.y,
+                                problem.tau, jnp.reshape(lam_j, (1,)), f_ce
+                            )
+                            beta, z_nc = beta_b[0], z_b[0]
+                            self.fused_epoch_launches += 1
+                        except Exception:
+                            self._demote_solver_backend()
+                            beta, z_nc = bcd_epochs_loss(
+                                Xt_full, Lg, problem.w, fmask, beta, z_nc,
+                                problem.tau, lam_j, problem.y, self.loss,
+                                f_ce
+                            )
                     else:
                         beta, z_nc = bcd_epochs_loss(
                             Xt_full, Lg, problem.w, fmask, beta, z_nc,
@@ -957,6 +1118,16 @@ class SGLSession:
                             f_ce
                         )
                 epochs_done += f_ce
+
+            if self.budget is not None:
+                self.budget.note_epochs(epochs_done - epochs_before)
+            # Chaos hook: corrupt the iterate AFTER an epoch block — the
+            # next certified round sees the non-finite beta through the
+            # real dataflow (its gap goes non-finite) and rewinds.
+            for s in _fire_fault("core.epochs"):
+                if s.kind in ("nan", "inf"):
+                    beta = beta * (float("nan") if s.kind == "nan"
+                                   else float("inf"))
 
         return SolveResult(
             beta=beta,
@@ -967,6 +1138,7 @@ class SGLSession:
             feat_active=feat_active,
             gap_history=gap_history,
             active_history=active_history,
+            degraded=degraded,
         )
 
     def _solve_batch_bcd(self, lams, beta0, certs, caches: SolveCaches):
@@ -1058,6 +1230,8 @@ class SGLSession:
         final_f = [fm_full.copy() if done[b] else None for b in range(B)]
         final_theta = [certs[b].theta for b in range(B)]
 
+        degraded_b = [None] * B
+
         def results():
             return [
                 SolveResult(
@@ -1069,6 +1243,7 @@ class SGLSession:
                     feat_active=final_f[b],
                     gap_history=gap_hist[b],
                     active_history=[],
+                    degraded=degraded_b[b],
                 )
                 for b in range(B)
             ]
@@ -1110,11 +1285,31 @@ class SGLSession:
 
         step = 0
         while not done.all() and step < cfg.max_epochs:
-            bsub, resid = kops.bcd_epochs_fused(
-                Xt, Lg_eff, w, fm_b, bsub, resid, problem.tau, lam_b, block
-            )
+            if self.budget is not None:
+                reason = self.budget.exceeded()
+                if reason is not None:
+                    for b in range(B):
+                        if not done[b]:
+                            degraded_b[b] = reason
+                    break
+            try:
+                _fire_epoch_launch_fault()
+                bsub, resid = kops.bcd_epochs_fused(
+                    Xt, Lg_eff, w, fm_b, bsub, resid, problem.tau, lam_b,
+                    block
+                )
+            except Exception as e:
+                # The batched-lambda driver has no reference twin (the
+                # lax.scan path is per-lambda); a failed fused launch
+                # surfaces as a typed error instead of a silent retry.
+                raise KernelLaunchError(
+                    "batched fused epoch launch failed (no reference twin "
+                    "for the batched driver)"
+                ) from e
             self.fused_epoch_launches += 1
             step += block
+            if self.budget is not None:
+                self.budget.note_epochs(block * B)
             red = np.asarray(_batch_reduced_gaps(
                 Xt, fm_b, bsub, resid, w, y, problem.tau, lam_b,
                 backend=self.solver_backend, xt_rows=xt_rows,
@@ -1169,6 +1364,12 @@ class SGLSession:
                         caches=caches
                     )
                 gap_hist[b].append((step, float(rres.gap)))
+                if not np.isfinite(float(rres.gap)):
+                    # Corrupted round: adopt NOTHING (theta, masks,
+                    # convergence).  The batch buffer state is untouched
+                    # by rounds, so the next cadence round simply re-runs
+                    # from healthy state.
+                    continue
                 final_theta[b] = rres.theta
                 if float(rres.gap) <= tol:
                     # Converging round's masks are NOT adopted (same
@@ -1360,8 +1561,17 @@ class SGLSession:
                     # squared-loss residual.
                     and self.loss.name == "lsq")
 
+        path_degraded = ""
         t = 0
         while t < T_:
+            if self.budget is not None:
+                reason = self.budget.exceeded()
+                if reason is not None:
+                    # Budget tripped between lambdas: return the certified
+                    # prefix (arrays truncated below) without starting the
+                    # next sequential round.
+                    path_degraded = reason
+                    break
             lam_ = lambdas[t]
             # Previous-lambda epoch count for the warmness predictor; at
             # the head of a resumed sub-grid it comes from the caller
@@ -1380,7 +1590,18 @@ class SGLSession:
                 # refine during a solve but transfer nothing across
                 # lambdas.
                 first_round = self.screen(float(lam_), beta, rule=rule)
-                if screening_rule:
+                if not np.isfinite(float(first_round.gap)):
+                    # Corrupted sequential round: refuse its masks (a
+                    # NaN-poisoned comparison can claim everything
+                    # screened) and re-run once at the same beta — a
+                    # round-local corruption's re-run is bit-identical to
+                    # the fault-free round (jit determinism).  Still bad:
+                    # solve this lambda cold, with no sequential
+                    # certificate at all.
+                    first_round = self.screen(float(lam_), beta, rule=rule)
+                    if not np.isfinite(float(first_round.gap)):
+                        first_round = None
+                if first_round is not None and screening_rule:
                     n_seq_active = int(
                         np.asarray(first_round.group_active).sum()
                     )
@@ -1413,6 +1634,11 @@ class SGLSession:
                        and t + len(certs) < T_):
                     k = t + len(certs)
                     ck = self.screen(float(lambdas[k]), beta, rule=rule)
+                    if not np.isfinite(float(ck.gap)):
+                        # A corrupted probe certificate must never enter
+                        # the batched driver's adopted masks; stop probing
+                        # — lambda k re-certifies later from a warmer beta.
+                        break
                     cg = np.asarray(ck.group_active)
                     if (_bucket(max(int((union_g | cg).sum()), 1))
                             <= 2 * bucket0):
@@ -1430,6 +1656,14 @@ class SGLSession:
                                n_groups - int(seq_scr[t + j]))
                     beta = run[-1].beta
                     t += len(certs)
+                    deg = next((r.degraded for r in run if r.degraded),
+                               None)
+                    if deg is not None:
+                        # Partially-solved lambdas stay in the prefix —
+                        # their recorded gaps are the honest last-certified
+                        # values; the unattempted tail is dropped.
+                        path_degraded = deg
+                        break
                     continue
 
             if cfg.check_every == "auto":
@@ -1465,6 +1699,19 @@ class SGLSession:
                 n_gathers_total += lam_caches.n_gathers
             record(t, res, first_round, n_seq_active)
             t += 1
+            if res.degraded:
+                path_degraded = res.degraded
+                break
+
+        if path_degraded and t < T_:
+            # Truncate the dense arrays to the certified prefix: a
+            # degraded path never pads with zeros that could be mistaken
+            # for solved (and certified) lambdas.
+            lambdas = lambdas[:t]
+            betas, gaps, epochs = betas[:t], gaps[:t], epochs[:t]
+            gfrac, ffrac = gfrac[:t], ffrac[:t]
+            g_act, f_act = g_act[:t], f_act[:t]
+            seq_scr, dyn_scr = seq_scr[:t], dyn_scr[:t]
 
         return PathResult(
             lambdas=lambdas,
@@ -1496,6 +1743,7 @@ class SGLSession:
             batched_lambdas=self.batched_lambdas - batched0,
             rule_name=rule.name,
             certificates_safe=rule.is_safe,
+            degraded=path_degraded,
         )
 
 

@@ -145,6 +145,9 @@ class SolveResult(NamedTuple):
     feat_active: np.ndarray    # (G, ng) final active mask
     gap_history: list
     active_history: list       # [(epoch, n_groups_active, n_feats_active)]
+    degraded: Optional[str] = None  # budget-trip reason ("deadline" |
+                                    #   "epoch_budget"); gap stays the
+                                    #   honest last-certified value
 
 
 class SolveCaches:

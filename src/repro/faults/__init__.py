@@ -1,0 +1,55 @@
+"""repro.faults — deterministic fault injection + graceful degradation.
+
+Three pieces:
+
+* **Harness** — :class:`FaultPlan` / :class:`FaultSpec` value objects and
+  the :func:`inject` context manager: seeded, site-addressable faults
+  (numeric corruption, kernel-launch failure, stalls, worker kills,
+  checkpoint truncation/bit-flips, store poisoning) with per-site firing
+  schedules, so chaos runs are reproducible bit-for-bit.
+* **Error taxonomy** — :class:`Degraded`, :class:`ServeError`,
+  :class:`WorkerCrash`, :class:`NumericsError`,
+  :class:`KernelLaunchError`, :class:`CheckpointCorrupt` (plus
+  :class:`repro.serve.Preempted`): every failure a future can resolve to.
+* **Budgets** — :class:`SolveBudget`: per-request deadlines and epoch
+  caps checked at host-synced round boundaries.
+
+``python -m repro.faults --check`` runs the seeded chaos matrix (the
+executable spec of the safety contract: every registered fault ends in
+bit-identical-after-recovery betas, a certified-honest degraded result,
+or a typed error — never an unsafe certificate, never a hung future).
+
+The chaos runner itself lives in :mod:`repro.faults.chaos` and is NOT
+imported here: it imports the solver and serve layers, which in turn
+import this package's leaf modules (errors/plan/inject/budget).
+"""
+from .budget import SolveBudget
+from .errors import (
+    CheckpointCorrupt,
+    Degraded,
+    KernelLaunchError,
+    NumericsError,
+    ServeError,
+    WorkerCrash,
+)
+from .inject import FaultLog, FiredEvent, active_plan, fire, inject
+from .plan import KINDS, SITES, FaultPlan, FaultSpec
+
+__all__ = [
+    "FaultPlan",
+    "FaultSpec",
+    "FaultLog",
+    "FiredEvent",
+    "SITES",
+    "KINDS",
+    "inject",
+    "fire",
+    "active_plan",
+    "SolveBudget",
+    "Degraded",
+    "ServeError",
+    "WorkerCrash",
+    "NumericsError",
+    "KernelLaunchError",
+    "CheckpointCorrupt",
+]

@@ -164,6 +164,13 @@ _TRANSPOSE_TRACES = 0
 # the transpose counter it only ever moves when the hazard is real.
 _RETRACE_EVENTS = 0
 
+# Kernel demotions: a Pallas launch failed and the caller fell back to the
+# XLA/lax.scan reference path for that dispatch.  Bit-parity between the
+# backends keeps results identical, but a demotion trades the fused
+# kernel's throughput for the reference path's — the fused-launch audit
+# surfaces the count so a degraded serving node is visible, not silent.
+_KERNEL_DEMOTIONS = 0
+
 
 def transpose_trace_count() -> int:
     return _TRANSPOSE_TRACES
@@ -179,6 +186,16 @@ def note_retrace(n: int = 1) -> None:
     _RETRACE_EVENTS += int(n)
 
 
+def kernel_demotion_count() -> int:
+    return _KERNEL_DEMOTIONS
+
+
+def note_kernel_demotion(n: int = 1) -> None:
+    """Record ``n`` pallas→reference fallbacks after failed launches."""
+    global _KERNEL_DEMOTIONS
+    _KERNEL_DEMOTIONS += int(n)
+
+
 class AuditCounters:
     """Live view of the audit counters inside an :func:`audit_scope`.
 
@@ -187,12 +204,13 @@ class AuditCounters:
     the instance so assertions after the ``with`` block keep working.
     """
 
-    __slots__ = ("_frozen", "_transpose", "_retrace")
+    __slots__ = ("_frozen", "_transpose", "_retrace", "_demotions")
 
     def __init__(self) -> None:
         self._frozen = False
         self._transpose = 0
         self._retrace = 0
+        self._demotions = 0
 
     @property
     def transpose_traces(self) -> int:
@@ -202,9 +220,14 @@ class AuditCounters:
     def retraces(self) -> int:
         return self._retrace if self._frozen else _RETRACE_EVENTS
 
+    @property
+    def kernel_demotions(self) -> int:
+        return self._demotions if self._frozen else _KERNEL_DEMOTIONS
+
     def _freeze(self) -> None:
         self._transpose = _TRANSPOSE_TRACES
         self._retrace = _RETRACE_EVENTS
+        self._demotions = _KERNEL_DEMOTIONS
         self._frozen = True
 
 
@@ -226,15 +249,15 @@ def audit_scope():
     propagated to the outer scope: a scope is a measurement boundary, and
     an enclosing baseline must not see another test's traffic.
     """
-    global _TRANSPOSE_TRACES, _RETRACE_EVENTS
-    prev_t, prev_r = _TRANSPOSE_TRACES, _RETRACE_EVENTS
-    _TRANSPOSE_TRACES, _RETRACE_EVENTS = 0, 0
+    global _TRANSPOSE_TRACES, _RETRACE_EVENTS, _KERNEL_DEMOTIONS
+    prev = (_TRANSPOSE_TRACES, _RETRACE_EVENTS, _KERNEL_DEMOTIONS)
+    _TRANSPOSE_TRACES, _RETRACE_EVENTS, _KERNEL_DEMOTIONS = 0, 0, 0
     counters = AuditCounters()
     try:
         yield counters
     finally:
         counters._freeze()
-        _TRANSPOSE_TRACES, _RETRACE_EVENTS = prev_t, prev_r
+        _TRANSPOSE_TRACES, _RETRACE_EVENTS, _KERNEL_DEMOTIONS = prev
 
 
 def transposed_design(X: jax.Array) -> jax.Array:

@@ -7,11 +7,16 @@ Public surface:
   queue, coalescing, session cache, certificate store, resumable paths);
 * :class:`SessionCache`, :class:`CertificateStore`, :class:`RequestQueue`
   — the building blocks, usable standalone;
-* :class:`Preempted` — raised into futures when the server drains.
+* :class:`Preempted` — raised into futures when the server drains;
+* :class:`Degraded` / :class:`ServeError` / :class:`WorkerCrash`
+  (re-exported from :mod:`repro.faults`) — the rest of the typed error
+  taxonomy a future can resolve to (README "Fault tolerance &
+  degradation").
 
 See the README "Serving" section for the coalescing compatibility rules,
 the cache key, and the certificate-reuse safety contract.
 """
+from ..faults.errors import Degraded, ServeError, WorkerCrash
 from .cache import SessionCache
 from .queue import CoalescedGroup, RequestQueue, coalesce
 from .server import Preempted, ServeConfig, SGLServer
@@ -29,6 +34,9 @@ __all__ = [
     "SGLServer",
     "ServeConfig",
     "Preempted",
+    "Degraded",
+    "ServeError",
+    "WorkerCrash",
     "PathRequest",
     "PathResponse",
     "SessionCache",

@@ -24,11 +24,11 @@ group.
 """
 from __future__ import annotations
 
-import queue as _queue
 import threading
 import time
+from collections import deque
 from concurrent.futures import Future
-from typing import List, NamedTuple, Optional
+from typing import Callable, List, NamedTuple, Optional
 
 import numpy as np
 
@@ -62,35 +62,54 @@ class CoalescedGroup(NamedTuple):
 
 
 class RequestQueue:
-    """Thread-safe submit side of the server."""
+    """Thread-safe submit side of the server.
 
-    def __init__(self) -> None:
-        self._q: _queue.Queue = _queue.Queue()
-        self._closed = threading.Event()
-        self._lock = threading.Lock()   # guards submit-side stats
+    Event-driven: one :class:`threading.Condition` over a deque — submit
+    and close notify, :meth:`drain` waits on the condition, so there is
+    no polling sleep anywhere (a submit landing mid-window wakes the
+    drainer immediately, and the coalescing window closes exactly when
+    its deadline passes, not at the next poll tick).
+
+    ``clock`` / ``wait`` are injectable for deterministic tests: ``wait``
+    replaces the condition-timeout primitive (called with the remaining
+    window while holding the queue lock), letting a fake clock drive the
+    window logic without real sleeping.
+    """
+
+    def __init__(self, clock: Callable[[], float] = time.perf_counter,
+                 wait: Optional[Callable[[float], bool]] = None) -> None:
+        self._items: "deque[Pending]" = deque()
+        self._cond = threading.Condition()
+        self._is_closed = False
+        self._clock = clock
+        self._wait = wait if wait is not None \
+            else (lambda timeout: self._cond.wait(timeout))
         self.submitted = 0
 
     def submit(self, request: PathRequest,
                default_config: SolverConfig) -> Future:
-        if self._closed.is_set():
-            raise RuntimeError("queue is closed")
         fut: Future = Future()
-        self._q.put(Pending(request, fut,
-                            request.digest(default_config),
-                            time.perf_counter()))
-        with self._lock:
+        pending = Pending(request, fut, request.digest(default_config),
+                          self._clock())
+        with self._cond:
+            if self._is_closed:
+                raise RuntimeError("queue is closed")
+            self._items.append(pending)
             self.submitted += 1
+            self._cond.notify_all()
         return fut
 
     def close(self) -> None:
-        self._closed.set()
+        with self._cond:
+            self._is_closed = True
+            self._cond.notify_all()
 
     @property
     def closed(self) -> bool:
-        return self._closed.is_set()
+        return self._is_closed
 
     def pending(self) -> int:
-        return self._q.qsize()
+        return len(self._items)
 
     def drain(self, max_batch: int = 32,
               window_s: float = 0.02) -> Optional[List[Pending]]:
@@ -101,22 +120,23 @@ class RequestQueue:
         shutdown signal).
         """
         out: List[Pending] = []
-        while not out:
-            if self._closed.is_set() and self._q.empty():
-                return None
-            try:
-                out.append(self._q.get(timeout=0.05))
-            except _queue.Empty:
-                continue
-        deadline = time.perf_counter() + window_s
-        while len(out) < max_batch:
-            remaining = deadline - time.perf_counter()
-            if remaining <= 0:
-                break
-            try:
-                out.append(self._q.get(timeout=remaining))
-            except _queue.Empty:
-                break
+        with self._cond:
+            while not self._items:
+                if self._is_closed:
+                    return None
+                self._cond.wait()
+            out.append(self._items.popleft())
+            deadline = self._clock() + window_s
+            while len(out) < max_batch:
+                if self._items:
+                    out.append(self._items.popleft())
+                    continue
+                remaining = deadline - self._clock()
+                if remaining <= 0 or self._is_closed:
+                    break
+                self._wait(remaining)
+                if not self._items and self._clock() >= deadline:
+                    break
         return out
 
 

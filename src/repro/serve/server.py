@@ -48,10 +48,13 @@ import jax.numpy as jnp
 from .. import ckpt
 from ..core.session import PathResult, SGLSession, SolverConfig
 from ..core.solver import SolveCaches
+from ..faults.budget import SolveBudget
+from ..faults.errors import Degraded, ServeError, WorkerCrash
+from ..faults.inject import maybe_kill
 from .cache import SessionCache
 from .queue import CoalescedGroup, Pending, RequestQueue, coalesce
 from .store import CertificateStore, warm_eval
-from .types import PathRequest, PathResponse, array_digest
+from .types import PathRequest, PathResponse, array_digest, problem_digest
 
 __all__ = ["ServeConfig", "SGLServer", "Preempted"]
 
@@ -93,6 +96,20 @@ class ServeConfig:
     on_segment: Optional[Callable[[str, int, int], None]] = None
                                      # (digest, cursor, T) after each
                                      # segment — observability/test hook
+    # -- graceful degradation (repro.faults) -------------------------------
+    deadline_s: Optional[float] = None   # per-request wall-clock budget;
+                                         #   a trip resolves the future
+                                         #   with a typed Degraded carrying
+                                         #   the certified prefix
+    epoch_budget: Optional[int] = None   # per-request total-epoch cap
+    max_retries: int = 2             # serve-side retries for transient
+                                     #   failures (crashes, raised solves)
+    retry_backoff_s: float = 0.05    # exponential backoff base between
+                                     #   retries of one group
+    breaker_threshold: int = 3       # consecutive terminal failures on one
+                                     #   problem before its breaker opens
+    breaker_cooldown_s: float = 30.0 # how long an open breaker fast-fails
+                                     #   new requests for that problem
 
 
 class SGLServer:
@@ -107,6 +124,17 @@ class SGLServer:
         self._thread: Optional[threading.Thread] = None
         self._served: set = set()      # digests completed at least once
         self._lock = threading.Lock()
+        # In-flight coalesced groups: ``[group, attempts]`` entries the
+        # worker is retrying.  Owned by the worker thread (the supervisor
+        # restart re-enters _worker_loop on the same thread), so a crashed
+        # solve loop never loses a queued future — every entry is served
+        # to a terminal outcome (result, Degraded, Preempted, ServeError).
+        self._inflight: List[list] = []
+        # Per-problem circuit breaker: problem digest -> [consecutive
+        # terminal failures, open-until monotonic timestamp].
+        self._breaker: dict = {}
+        self._sigterm_installed = False
+        self._sigterm_prev = None
         self.counters = {
             "requests": 0,
             "responses": 0,
@@ -116,6 +144,11 @@ class SGLServer:
             "warm_started": 0,
             "resumed": 0,
             "preempted": 0,
+            "worker_restarts": 0,
+            "retries": 0,
+            "degraded": 0,
+            "failed": 0,
+            "breaker_rejections": 0,
         }
 
     # -- lifecycle ---------------------------------------------------------
@@ -156,13 +189,26 @@ class SGLServer:
 
     def install_sigterm_hook(self):
         """Route SIGTERM (pod preemption) to :meth:`drain`; returns the
-        previous handler so callers/tests can restore it."""
+        previous handler so callers/tests can restore it.
+
+        Idempotent (a second install is a no-op returning the same
+        previous handler) and chaining (a pre-existing callable handler
+        runs after the drain).  :meth:`drain` itself only sets events, so
+        a second SIGTERM landing mid-drain is harmless — the checkpoint
+        write happens at the worker's segment boundary, never here.
+        """
+        if self._sigterm_installed:
+            return self._sigterm_prev
         prev = signal.getsignal(signal.SIGTERM)
 
         def handler(signum, frame):
             self.drain()
+            if callable(prev):
+                prev(signum, frame)
 
         signal.signal(signal.SIGTERM, handler)
+        self._sigterm_installed = True
+        self._sigterm_prev = prev
         return prev
 
     @property
@@ -180,8 +226,25 @@ class SGLServer:
     # -- worker ------------------------------------------------------------
 
     def _worker(self) -> None:
+        """Supervisor: restart a crashed solve loop without losing queued
+        futures.  A :class:`WorkerCrash` (or any escaping exception)
+        tears down :meth:`_worker_loop`; the in-flight entry stays in
+        ``self._inflight`` with its attempt count bumped, so the restarted
+        loop retries it (bounded by ``max_retries``) before draining new
+        work — no future is ever left forever-pending."""
+        while True:
+            try:
+                self._worker_loop()
+                return
+            except Exception:
+                self.counters["worker_restarts"] += 1
+
+    def _worker_loop(self) -> None:
         cfg = self.config
         while True:
+            while self._inflight:
+                if self._serve_entry(self._inflight[0]):
+                    self._inflight.pop(0)
             pending = self.queue.drain(max_batch=cfg.max_batch,
                                        window_s=cfg.coalesce_window_s)
             if pending is None:
@@ -201,26 +264,97 @@ class SGLServer:
                     )
                     for p in pending
                 ]
-            for group in groups:
-                if self._drain.is_set():
-                    self._fail(group.members, cursor=0)
-                    continue
-                try:
-                    self._serve_group(group)
-                except Preempted as e:
-                    self.counters["preempted"] += len(group.members)
-                    for p in group.members:
-                        p.future.set_exception(
-                            Preempted(p.digest, e.cursor))
-                except Exception as e:  # pragma: no cover - defensive
-                    for p in group.members:
-                        if not p.future.done():
-                            p.future.set_exception(e)
+            self._inflight.extend([g, 0] for g in groups)
+
+    def _serve_entry(self, entry: list) -> bool:
+        """Serve one in-flight group to a terminal outcome or a retry.
+
+        Returns True when the entry is finished (every member future
+        resolved — with a result, Degraded, Preempted, or ServeError) and
+        False when it should be retried by the caller.  A WorkerCrash
+        re-raises to the supervisor AFTER bumping the attempt count, so
+        the restarted loop picks the same entry back up.
+        """
+        cfg = self.config
+        group, attempts = entry[0], entry[1]
+        members = [p for p in group.members if not p.future.done()]
+        if not members:
+            return True
+        if self._drain.is_set():
+            self._fail(members, cursor=0)
+            return True
+        key = self._breaker_key(group)
+        if self._breaker_open(key):
+            self.counters["breaker_rejections"] += len(members)
+            for p in members:
+                p.future.set_exception(ServeError(
+                    "circuit breaker open for this problem "
+                    f"(cooldown {cfg.breaker_cooldown_s:g}s)",
+                    request_digest=p.digest,
+                ))
+            return True
+        try:
+            maybe_kill("serve.worker")
+            self._serve_group(group)
+        except Preempted as e:
+            self.counters["preempted"] += len(members)
+            for p in members:
+                if not p.future.done():
+                    p.future.set_exception(Preempted(p.digest, e.cursor))
+            return True
+        except Degraded as e:
+            # A budget trip is a terminal, typed, honest outcome — not a
+            # failure: the breaker does not count it.
+            self.counters["degraded"] += len(members)
+            for p in members:
+                if not p.future.done():
+                    p.future.set_exception(e)
+            return True
+        except Exception as e:
+            entry[1] = attempts = attempts + 1
+            if attempts > cfg.max_retries:
+                self._breaker_fail(key)
+                self.counters["failed"] += len(members)
+                err = e if isinstance(e, ServeError) else ServeError(
+                    f"retries exhausted after {attempts} attempts: {e!r}",
+                    request_digest=group.members[0].digest, cause=e,
+                )
+                for p in members:
+                    if not p.future.done():
+                        p.future.set_exception(err)
+                return True
+            self.counters["retries"] += 1
+            if isinstance(e, WorkerCrash):
+                raise          # supervisor restarts the loop; entry kept
+            time.sleep(cfg.retry_backoff_s * (2 ** (attempts - 1)))
+            return False
+        self._breaker.pop(key, None)
+        return True
+
+    # -- circuit breaker ----------------------------------------------------
+
+    def _breaker_key(self, group: CoalescedGroup) -> str:
+        req = group.members[0].request
+        scfg = req.resolved_config(self.config.default_solver)
+        return problem_digest(req.problem, scfg)
+
+    def _breaker_open(self, key: str) -> bool:
+        st = self._breaker.get(key)
+        return (st is not None
+                and st[0] >= self.config.breaker_threshold
+                and time.monotonic() < st[1])
+
+    def _breaker_fail(self, key: str) -> None:
+        st = self._breaker.setdefault(key, [0, 0.0])
+        st[0] += 1
+        if st[0] >= self.config.breaker_threshold:
+            st[1] = time.monotonic() + self.config.breaker_cooldown_s
 
     def _fail(self, members: List[Pending], cursor: int) -> None:
         self.counters["preempted"] += len(members)
         for p in members:
-            p.future.set_exception(Preempted(p.digest, cursor))
+            if not p.future.done():
+                p.future.set_exception(Preempted(p.digest, cursor))
 
     # -- serving one coalesced group ----------------------------------------
 
@@ -286,10 +420,25 @@ class SGLServer:
         watch = (self.cache.watch_retraces()
                  if hit and digest in self._served
                  else contextlib.nullcontext())
-        with watch:
-            result, resumed_from = self._run_path(
-                session, scfg, group.lambdas, beta0, digest
-            )
+        # Per-request budget: attached for the duration of this solve
+        # only (the session is shared across requests via the cache).
+        if cfg.deadline_s is not None or cfg.epoch_budget is not None:
+            session.budget = SolveBudget(cfg.deadline_s, cfg.epoch_budget)
+        try:
+            with watch:
+                result, resumed_from = self._run_path(
+                    session, scfg, group.lambdas, beta0, digest
+                )
+        finally:
+            session.budget = None
+        if result.degraded:
+            # Typed, honest degradation: the truncated prefix rides on the
+            # error with the last certified full-problem gap.  Raised
+            # BEFORE _respond, so a degraded result is never stored as an
+            # exact repeat and never warm-seeds the store.
+            gap_last = (float(result.gaps[-1]) if len(result.gaps)
+                        else float("inf"))
+            raise Degraded(result, result.degraded, gap_last)
         self.counters["path_solves"] += 1
         if len(group.members) > 1:
             self.counters["coalesced_requests"] += len(group.members)
@@ -326,6 +475,8 @@ class SGLServer:
                 # the store promises, not a tolerance-level stand-in.
                 self.store.put(p.digest, p.request.problem, scfg,
                                member_res, exact=not group.merged)
+            if p.future.done():     # resolved by an earlier attempt/drain
+                continue
             self.counters["responses"] += 1
             p.future.set_result(PathResponse(
                 tenant=p.request.tenant,
@@ -400,9 +551,13 @@ class SGLServer:
                 resumed_from = cursor
                 rule_restored = extra.get("rule_name")
 
+        degraded = ""
         while cursor < T_:
             if self.draining:
                 raise Preempted(digest, cursor)
+            # Chaos hook: a worker kill mid-path (between segments) —
+            # recovery resumes from the last intact checkpoint.
+            maybe_kill("serve.segment")
             # Fresh per-segment solver caches: a resumed run starts its
             # segment with empty caches, so the continuous run must too —
             # that is what makes interrupted+resumed bit-identical to
@@ -415,25 +570,34 @@ class SGLServer:
                 batch_lambdas=cfg.batch_lambdas,
             )
             segments.append(pr)
-            cursor += len(sub)
-            prev_epochs = int(pr.epochs[-1])
-            beta_carry = jnp.asarray(pr.betas[-1],
-                                     session.problem.X.dtype)
-            state = _pack_state(acc, segments, beta_carry)
-            ckpt.save(rdir, cursor, state, extra_manifest={
-                "request": digest,
-                "grid": grid_dig,
-                "cursor": cursor,
-                "prev_epochs": prev_epochs,
-                "caches": caches_dig,
-                "rule_name": pr.rule_name,
-                "T": T_,
-            })
-            ckpt.gc_keep_k(rdir, cfg.ckpt_keep)
-            if cfg.on_segment is not None:
-                cfg.on_segment(digest, cursor, T_)
+            # A degraded segment solved only a prefix of its sub-grid; the
+            # cursor advances by what was actually certified.
+            cursor += len(pr.lambdas)
+            if len(pr.lambdas):
+                prev_epochs = int(pr.epochs[-1])
+                beta_carry = jnp.asarray(pr.betas[-1],
+                                         session.problem.X.dtype)
+                state = _pack_state(acc, segments, beta_carry)
+                ckpt.save(rdir, cursor, state, extra_manifest={
+                    "request": digest,
+                    "grid": grid_dig,
+                    "cursor": cursor,
+                    "prev_epochs": prev_epochs,
+                    "caches": caches_dig,
+                    "rule_name": pr.rule_name,
+                    "T": T_,
+                })
+                ckpt.gc_keep_k(rdir, cfg.ckpt_keep)
+                if cfg.on_segment is not None:
+                    cfg.on_segment(digest, cursor, T_)
+            if pr.degraded:
+                degraded = pr.degraded
+                break
 
-        return _assemble(lambdas, acc, segments, rule_restored), resumed_from
+        lam_out = lambdas[:cursor] if degraded else lambdas
+        return (_assemble(lam_out, acc, segments, rule_restored,
+                          degraded=degraded),
+                resumed_from)
 
 
 # ----------------------------------------------------------------------------
@@ -468,7 +632,8 @@ def _pack_state(acc, segments: List[PathResult], beta_carry) -> dict:
 
 def _assemble(lambdas: np.ndarray, acc,
               segments: List[PathResult],
-              rule_restored: Optional[str] = None) -> PathResult:
+              rule_restored: Optional[str] = None,
+              degraded: str = "") -> PathResult:
     """Stitch restored state + fresh segments into one PathResult.
 
     ``rule_restored`` is the rule_name persisted in the checkpoint
@@ -502,6 +667,7 @@ def _assemble(lambdas: np.ndarray, acc,
         batched_lambdas=counters["batched_lambdas"],
         rule_name=rule_name,
         certificates_safe=bool(state["certificates_safe"]),
+        degraded=degraded,
     )
 
 
@@ -532,4 +698,5 @@ def _slice_result(result: PathResult, idx: np.ndarray) -> PathResult:
         batched_lambdas=result.batched_lambdas,
         rule_name=result.rule_name,
         certificates_safe=result.certificates_safe,
+        degraded=result.degraded,
     )

@@ -33,6 +33,7 @@ is served from memory without touching the solver.
 from __future__ import annotations
 
 import functools
+import hashlib
 from collections import OrderedDict
 from typing import NamedTuple, Optional
 
@@ -43,10 +44,27 @@ import jax.numpy as jnp
 from ..core import sgl
 from ..core.session import PathResult, SolverConfig
 from ..core.sgl import SGLProblem
+from ..faults.inject import fire as _fire_fault
 from ..losses import resolve_loss
 from .types import array_digest, design_digest
 
 __all__ = ["CertificateStore", "WarmHint", "warm_eval"]
+
+
+def _result_digest(result: PathResult) -> str:
+    """Content digest of a stored exact result's payload arrays.
+
+    Recorded at put() time and re-checked at exact() time, so a record
+    that rots in place (bit-flip, or an injected ``store.record`` poison)
+    can never be served verbatim — the entry is dropped and the request
+    falls through to a fresh solve.
+    """
+    parts = (np.asarray(result.lambdas), np.asarray(result.betas),
+             np.asarray(result.gaps), np.asarray(result.epochs))
+    h = hashlib.blake2b(digest_size=16)
+    for a in parts:
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
 
 
 @functools.partial(jax.jit, static_argnames=("loss",))
@@ -132,12 +150,14 @@ class CertificateStore:
     def __init__(self, capacity: int = 32):
         self.capacity = int(capacity)
         self._exact: OrderedDict[str, PathResult] = OrderedDict()
+        self._exact_digests: "OrderedDict[str, str]" = OrderedDict()
         self._records: OrderedDict[tuple, PathRecord] = OrderedDict()
         self.exact_hits = 0
         self.warm_hits = 0
         self.puts = 0
         self.evictions = 0
         self.loss_rejects = 0
+        self.poison_drops = 0
 
     # -- writes ------------------------------------------------------------
 
@@ -155,6 +175,18 @@ class CertificateStore:
         if exact:
             self._exact[request_digest] = result
             self._exact.move_to_end(request_digest)
+            self._exact_digests[request_digest] = _result_digest(result)
+            self._exact_digests.move_to_end(request_digest)
+            # Chaos hook: post-storage bit-rot — the poison lands AFTER
+            # the digest was recorded, so verification must catch it.
+            for s in _fire_fault("store.record"):
+                if s.kind == "poison":
+                    bad = np.array(result.betas, copy=True)
+                    if bad.size:
+                        bad.flat[0] += 1.0
+                    self._exact[request_digest] = result._replace(
+                        betas=bad
+                    )
         dkey = design_digest(problem, config)
         ydig = array_digest(problem.y)
         rkey = (dkey, ydig, array_digest(np.asarray(result.lambdas)))
@@ -170,7 +202,8 @@ class CertificateStore:
         )
         self._records.move_to_end(rkey)
         while len(self._exact) > self.capacity:
-            self._exact.popitem(last=False)
+            dig, _ = self._exact.popitem(last=False)
+            self._exact_digests.pop(dig, None)
             self.evictions += 1
         while len(self._records) > self.capacity:
             self._records.popitem(last=False)
@@ -179,11 +212,25 @@ class CertificateStore:
     # -- reads -------------------------------------------------------------
 
     def exact(self, request_digest: str) -> Optional[PathResult]:
-        """The stored result of an identical earlier request, or None."""
+        """The stored result of an identical earlier request, or None.
+
+        Integrity-checked: the entry's payload digest (recorded at put
+        time) is re-verified before serving.  A mismatch means the record
+        rotted in place — the entry is dropped (``poison_drops``) and the
+        caller falls through to a fresh solve instead of serving
+        corrupted betas verbatim.
+        """
         res = self._exact.get(request_digest)
-        if res is not None:
-            self._exact.move_to_end(request_digest)
-            self.exact_hits += 1
+        if res is None:
+            return None
+        want = self._exact_digests.get(request_digest)
+        if want is not None and _result_digest(res) != want:
+            del self._exact[request_digest]
+            del self._exact_digests[request_digest]
+            self.poison_drops += 1
+            return None
+        self._exact.move_to_end(request_digest)
+        self.exact_hits += 1
         return res
 
     def warm_hint(self, problem: SGLProblem, config: SolverConfig,
@@ -240,6 +287,7 @@ class CertificateStore:
             "puts": self.puts,
             "evictions": self.evictions,
             "loss_rejects": self.loss_rejects,
+            "poison_drops": self.poison_drops,
         }
 
 

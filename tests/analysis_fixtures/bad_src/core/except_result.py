@@ -1,0 +1,60 @@
+"""Seeded CS004 violations: results/masks forged on exception paths.
+
+FIXTURE for tests/test_analysis.py — parsed, never imported.  Each
+handler below must be flagged by
+repro.analysis.cert_lint.lint_exception_paths; the clean ones must not.
+The safety keywords are threaded from names (``safe=ok``) on purpose so
+this file adds nothing to the CS001 counts asserted elsewhere.
+"""
+
+
+def swallow_into_round(gap, theta, g, f, ok):
+    try:
+        risky()                                              # noqa: F821
+    except Exception:
+        # CS004: a result synthesised where the dataflow just broke
+        return RoundResult(gap, theta, g, f, safe=ok)        # noqa: F821
+
+
+def swallow_into_path(lambdas, betas, ok):
+    try:
+        risky()                                              # noqa: F821
+    except ValueError:
+        # CS004: same forgery, path-level
+        return PathResult(lambdas=lambdas, betas=betas,
+                          certificates_safe=ok)              # noqa: F821
+
+
+def narrow_mask_on_error(group_active, mask):
+    try:
+        risky()                                              # noqa: F821
+    except Exception:
+        # CS004: uncertified discard adopted on the exception path
+        group_active &= mask
+    return group_active
+
+
+def narrow_attr_mask_on_error(state, mask):
+    try:
+        risky()                                              # noqa: F821
+    except Exception:
+        # CS004: attribute-form mask adoption
+        state.feat_active &= mask
+    return state
+
+
+def clean_rewind(gap, theta, g, f, ok, best):
+    # fine: handler rewinds to known-good state, result built OUTSIDE
+    try:
+        gap, theta = risky()                                 # noqa: F821
+    except Exception:
+        gap, theta = best
+    return RoundResult(gap, theta, g, f, safe=ok)            # noqa: F821
+
+
+def clean_rewrap(r):
+    try:
+        return risky()                                       # noqa: F821
+    except Exception:
+        # fine: the bit travels through the star (existing result)
+        return RoundResult(*r)                               # noqa: F821

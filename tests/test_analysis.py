@@ -112,6 +112,27 @@ def test_cs003_fires_when_matrix_is_missing(tmp_path):
     assert codes(fs) == ["CS003"]
 
 
+def test_cs004_fires_on_exception_path_results_and_masks():
+    fs = cert_lint.lint_exception_paths(os.path.join(FIXTURES, "bad_src"))
+    assert codes(fs) == ["CS004"] * 4
+    assert all(f.location.startswith(os.path.join("core", "except_result.py"))
+               for f in fs)
+    msgs = " | ".join(f.message for f in fs)
+    assert "RoundResult" in msgs and "PathResult" in msgs
+    assert "group_active" in msgs and "feat_active" in msgs
+    # the clean handlers (rewind-then-build, star re-wrap) must NOT fire:
+    # exactly the four seeded violations, nothing from the clean section
+    assert len(fs) == 4
+
+
+def test_cs004_fixture_stays_cs001_clean():
+    """The CS004 fixture threads safety from names, so it must not leak
+    into the CS001 counts (which other tests pin exactly)."""
+    fs = cert_lint.lint_result_constructions(
+        os.path.join(FIXTURES, "bad_src"))
+    assert not any("except_result" in f.location for f in fs)
+
+
 # ---------------------------------------------------------------------------
 # 3. Pallas auditor fires on seeded launch geometry
 # ---------------------------------------------------------------------------

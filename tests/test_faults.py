@@ -1,0 +1,478 @@
+"""repro.faults: plans, injection, budgets, and the degradation protocol.
+
+The deeper contracts (worker supervision, checkpoint quarantine + resume,
+the full scenario matrix) live in the chaos suite (``python -m
+repro.faults --check``); this file pins the unit-level value semantics
+plus the three satellite regressions of PR 9:
+
+* the NaN-round guard — corrupted rounds are refused (masks never
+  adopted), beta rewinds, and the path still certifies against a
+  tight-tolerance unscreened reference;
+* ``RequestQueue.drain`` honours its window exactly (event-driven, no
+  polling sleep) under a fake clock;
+* ``install_sigterm_hook`` is idempotent, chains a pre-existing handler,
+  and a second SIGTERM during an in-progress drain never re-enters the
+  checkpoint write.
+"""
+import functools
+import os
+import signal
+import threading
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro import ckpt
+from repro.core import sgl
+from repro.core.session import SGLSession, SolverConfig, lambda_grid
+from repro.data.synthetic import make_synthetic
+from repro.faults import (
+    Degraded,
+    FaultLog,
+    FaultPlan,
+    FaultSpec,
+    NumericsError,
+    SolveBudget,
+    active_plan,
+    fire,
+    inject,
+)
+from repro.faults.inject import corrupt_file
+from repro.kernels import ops as kops
+from repro.serve.queue import Pending, RequestQueue
+
+CFG = SolverConfig(tol=1e-7, max_epochs=5_000)
+
+
+def _problem(seed=0):
+    X, y, _beta, sizes = make_synthetic(
+        n=24, p=64, n_groups=8, gamma1=3, gamma2=3, seed=seed)
+    return sgl.make_problem(X, y, sizes, tau=0.3)
+
+
+def _grid(problem, T=4, delta=1.5):
+    return lambda_grid(float(sgl.lambda_max(problem)), T=T, delta=delta)
+
+
+@functools.lru_cache(maxsize=None)
+def _baseline(seed=0):
+    prob = _problem(seed)
+    return prob, SGLSession(prob, CFG).solve_path(_grid(prob))
+
+
+@functools.lru_cache(maxsize=None)
+def _reference_betas(seed=0):
+    prob = _problem(seed)
+    ref = SGLSession(prob, SolverConfig(
+        tol=1e-9, max_epochs=50_000, rule="none")).solve_path(_grid(prob))
+    return np.asarray(ref.betas)
+
+
+def _assert_certifies(result, seed=0):
+    """Every screened group must be zero in the unscreened reference."""
+    ref = _reference_betas(seed)
+    for t in range(len(np.asarray(result.lambdas))):
+        screened = ~np.asarray(result.group_active[t])
+        nz = np.linalg.norm(ref[t], axis=-1) > 1e-8
+        assert int((screened & nz).sum()) == 0
+    assert result.certificates_safe
+
+
+# ---------------------------------------------------------------------------
+# plan / injection value semantics
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_validation():
+    FaultSpec("core.round", "nan").validate()
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultSpec("core.nowhere", "nan").validate()
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec("core.round", "meteor").validate()
+    with pytest.raises(ValueError, match="at least one hit"):
+        FaultSpec("core.round", "nan", hits=()).validate()
+    with pytest.raises(ValueError, match="negative hit"):
+        FaultSpec("core.round", "nan", hits=(-1,)).validate()
+    with pytest.raises(ValueError, match="stall_s"):
+        FaultSpec("core.round", "stall").validate()
+
+
+def test_fault_plan_is_a_value():
+    plan = FaultPlan((FaultSpec("core.round", "nan", hits=(2,)),
+                      FaultSpec("ckpt.payload", "truncate")), seed=7)
+    assert plan.for_site("core.round") == (
+        FaultSpec("core.round", "nan", hits=(2,)),)
+    assert plan.for_site("serve.worker") == ()
+    assert "seed=7" in repr(plan) and "core.round" in repr(plan)
+    with pytest.raises(ValueError):
+        FaultPlan((FaultSpec("bad.site", "nan"),))
+
+
+def test_fire_counts_hits_and_logs():
+    plan = FaultPlan((FaultSpec("core.round", "nan", hits=(1,)),))
+    assert fire("core.round") == ()          # no plan active: free no-op
+    assert active_plan() is None
+    with inject(plan) as log:
+        assert active_plan() is plan
+        assert fire("core.round") == ()       # hit 0: not scheduled
+        assert fire("core.epochs") == ()      # other site: own counter
+        matched = fire("core.round")          # hit 1: fires
+        assert matched[0].kind == "nan"
+        assert log.count() == 1
+        assert log.count("core.round") == 1
+        assert log.events[0].hit == 1
+    assert active_plan() is None
+
+
+def test_inject_is_exclusive():
+    plan = FaultPlan((FaultSpec("core.round", "nan"),))
+    with inject(plan):
+        with pytest.raises(RuntimeError, match="already active"):
+            with inject(plan):
+                pass
+    with inject(plan) as log:                 # reusable after exit
+        assert isinstance(log, FaultLog)
+
+
+def test_corrupt_file_truncate_and_deterministic_bitflip(tmp_path):
+    path = tmp_path / "payload.bin"
+    blob = bytes(range(256)) * 4
+    path.write_bytes(blob)
+    assert corrupt_file(str(path), (FaultSpec("ckpt.payload",
+                                              "truncate"),))
+    assert path.read_bytes() == blob[:len(blob) // 2]
+
+    def flip(seed):
+        path.write_bytes(blob)
+        with inject(FaultPlan((FaultSpec("ckpt.payload", "bitflip"),),
+                              seed=seed)):
+            corrupt_file(str(path),
+                         (FaultSpec("ckpt.payload", "bitflip"),))
+        return path.read_bytes()
+
+    a, b = flip(3), flip(3)
+    assert a == b and a != blob               # deterministic per seed
+    assert sum(x != y for x, y in zip(a, blob)) == 1
+
+
+def test_solve_budget_semantics():
+    with pytest.raises(ValueError):
+        SolveBudget()
+    t = [0.0]
+    b = SolveBudget(deadline_s=1.0, clock=lambda: t[0])
+    assert b.exceeded() is None
+    t[0] = 1.5
+    assert b.exceeded() == "deadline"
+    e = SolveBudget(max_epochs=10)
+    e.note_epochs(4)
+    assert e.exceeded() is None
+    e.note_epochs(6)
+    assert e.exceeded() == "epoch_budget"
+
+
+# ---------------------------------------------------------------------------
+# the NaN-round guard (satellite: rounds 1, k, final confirmation)
+# ---------------------------------------------------------------------------
+
+def _final_round_hit():
+    prob = _problem()
+    probe = SGLSession(prob, CFG)
+    probe.solve_path(_grid(prob))
+    # full rounds map 1:1 onto core.round hits, and the final
+    # confirmation round (the convergence gate) is always full.
+    return probe.full_rounds - 1
+
+
+@pytest.mark.parametrize("which", ["round_1", "round_k", "final"])
+def test_nan_round_guard_refuses_rewinds_and_certifies(which):
+    prob, base = _baseline()
+    hit = {"round_1": 1, "round_k": 3, "final": _final_round_hit()}[which]
+    plan = FaultPlan((FaultSpec("core.round", "nan", hits=(hit,),
+                                field="theta"),))
+    sess = SGLSession(prob, CFG)
+    with inject(plan) as log:
+        res = sess.solve_path(_grid(prob))
+    assert log.count() == 1                   # the fault really fired
+    assert sess.nonfinite_rounds >= 1         # ...and was refused
+    # mask adoption refused: reported masks match the fault-free run
+    np.testing.assert_array_equal(np.asarray(res.group_active),
+                                  np.asarray(base.group_active))
+    # beta rewound/re-run: bit-identical recovery (round-local corruption
+    # with a healthy beta re-runs deterministically)
+    np.testing.assert_array_equal(np.asarray(res.betas),
+                                  np.asarray(base.betas))
+    np.testing.assert_array_equal(np.asarray(res.gaps),
+                                  np.asarray(base.gaps))
+    _assert_certifies(res)
+
+
+def test_beta_corruption_rewinds_to_finite_iterate():
+    prob, base = _baseline()
+    plan = FaultPlan((FaultSpec("core.epochs", "nan", hits=(1,)),))
+    sess = SGLSession(prob, CFG)
+    with inject(plan) as log:
+        res = sess.solve_path(_grid(prob))
+    assert log.count() >= 1
+    gaps = np.asarray(res.gaps)
+    assert np.all(np.isfinite(gaps)) and np.all(gaps <= CFG.tol * (1 + 1e-12))
+    # certified recovery (not bit-identical: the rewind restarts epochs)
+    assert np.allclose(np.asarray(res.betas), np.asarray(base.betas),
+                       atol=1e-4)
+    _assert_certifies(res)
+
+
+def test_nan_storm_raises_typed_numerics_error():
+    prob, _ = _baseline()
+    sess = SGLSession(prob, CFG)
+    lam = float(_grid(prob)[1])
+    plan = FaultPlan((FaultSpec("core.round", "nan", hits=(0, 1, 2),
+                                field="theta"),))
+    with inject(plan) as log:
+        with pytest.raises(NumericsError, match="consecutive non-finite"):
+            sess.solve(lam)
+    assert log.count() == 3
+
+
+def test_screen_kernel_failure_demotes_to_xla():
+    prob = _problem()
+    cfg = CFG._replace(screen_backend="pallas")
+    base = SGLSession(prob, cfg).solve_path(_grid(prob))
+    sess = SGLSession(prob, cfg)
+    d0 = kops.kernel_demotion_count()
+    plan = FaultPlan((FaultSpec("kernels.screen", "raise", hits=(0,)),))
+    with inject(plan):
+        res = sess.solve_path(_grid(prob))
+    assert sess.kernel_demotions == 1
+    assert kops.kernel_demotion_count() == d0 + 1
+    assert sess.backend == "xla"              # demotion sticks
+    # betas/masks bit-identical (kernel parity); reported gaps agree to
+    # fp round-off (different reduction order)
+    np.testing.assert_array_equal(np.asarray(res.betas),
+                                  np.asarray(base.betas))
+    np.testing.assert_allclose(np.asarray(res.gaps),
+                               np.asarray(base.gaps),
+                               rtol=1e-6, atol=1e-12)
+    _assert_certifies(res)
+
+
+def test_deadline_budget_degrades_with_honest_prefix():
+    prob, _ = _baseline()
+    sess = SGLSession(prob, CFG)
+    sess.budget = SolveBudget(deadline_s=0.2)
+    plan = FaultPlan((FaultSpec("core.round", "stall",
+                                hits=tuple(range(2, 100)),
+                                stall_s=0.05),))
+    with inject(plan):
+        res = sess.solve_path(_grid(prob))
+    assert res.degraded == "deadline"
+    T = len(np.asarray(res.lambdas))
+    assert 0 < T < 4                          # truncated, never padded
+    assert len(np.asarray(res.gaps)) == T
+    assert np.all(np.isfinite(np.asarray(res.gaps)))
+    _assert_certifies(res)
+
+
+def test_serve_epoch_budget_resolves_future_with_degraded():
+    from repro.serve import PathRequest, ServeConfig, SGLServer
+
+    prob = _problem(seed=3)
+    grid = _grid(prob)
+    server = SGLServer(ServeConfig(default_solver=CFG,
+                                   epoch_budget=10)).start()
+    try:
+        fut = server.submit(PathRequest("t0", prob, grid))
+        with pytest.raises(Degraded) as ei:
+            fut.result(600)
+    finally:
+        server.stop()
+    e = ei.value
+    assert e.reason == "epoch_budget"
+    assert np.isfinite(e.gap)                 # the honest gap at truncation
+    assert 0 < len(np.asarray(e.result.lambdas)) < len(grid)
+    assert e.result.degraded == "epoch_budget"
+    assert server.counters["degraded"] == 1
+    # degraded results must never be stored as servable certificates
+    assert server.store.stats()["exact_entries"] == 0
+
+
+# ---------------------------------------------------------------------------
+# RequestQueue.drain: exact window, no polling (fake clock)
+# ---------------------------------------------------------------------------
+
+def _pending(name="t0"):
+    prob = _problem(seed=9)
+    from repro.serve import PathRequest
+    req = PathRequest(name, prob, _grid(prob))
+    return Pending(req, Future(), req.digest(CFG), 0.0)
+
+
+def test_drain_window_is_exact_under_fake_clock():
+    clk = [0.0]
+    waits = []
+
+    def wait(timeout):
+        waits.append(timeout)
+        clk[0] += timeout                     # nothing arrives: full wait
+        return False
+
+    q = RequestQueue(clock=lambda: clk[0], wait=wait)
+    p0 = _pending()
+    with q._cond:
+        q._items.append(p0)
+    out = q.drain(max_batch=8, window_s=0.003)
+    assert out == [p0]
+    # exactly ONE condition wait for exactly the window — the old
+    # implementation slept fixed 0.05s ticks regardless of window_s
+    assert waits == [0.003]
+    assert clk[0] == 0.003
+
+
+def test_drain_collects_mid_window_arrival_and_closes_on_deadline():
+    clk = [0.0]
+    waits = []
+    q = RequestQueue(clock=lambda: clk[0], wait=None)
+    p0, p1 = _pending("t0"), _pending("t1")
+
+    def wait(timeout):
+        waits.append(timeout)
+        if len(waits) == 1:                   # a submit lands mid-window
+            clk[0] += 0.01
+            q._items.append(p1)
+            return True
+        clk[0] += timeout                     # then the window drains out
+        return False
+
+    q._wait = wait
+    with q._cond:
+        q._items.append(p0)
+    out = q.drain(max_batch=8, window_s=0.02)
+    assert out == [p0, p1]
+    # the second wait asks only for the REMAINING window, so the total
+    # elapsed time is exactly window_s — never window + poll-tick
+    assert waits == [0.02, pytest.approx(0.01)]
+    assert clk[0] == pytest.approx(0.02)
+
+
+def test_drain_max_batch_short_circuits_without_waiting():
+    clk = [0.0]
+    q = RequestQueue(clock=lambda: clk[0],
+                     wait=lambda timeout: pytest.fail("waited"))
+    ps = [_pending(f"t{i}") for i in range(3)]
+    with q._cond:
+        q._items.extend(ps)
+    out = q.drain(max_batch=3, window_s=10.0)
+    assert out == ps
+    assert clk[0] == 0.0
+
+
+# ---------------------------------------------------------------------------
+# SIGTERM hook: idempotent, chaining, no re-entrant checkpoint write
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def sigterm_guard():
+    old = signal.getsignal(signal.SIGTERM)
+    try:
+        yield
+    finally:
+        signal.signal(signal.SIGTERM, old)
+
+
+def test_sigterm_hook_idempotent_and_chains(tmp_path, sigterm_guard):
+    chained = []
+    signal.signal(signal.SIGTERM, lambda s, f: chained.append(s))
+    mgr = ckpt.CheckpointManager(str(tmp_path), every=1, keep=3)
+    tree = {"beta": np.arange(4.0)}
+    mgr.install_sigterm_hook(lambda: (1, tree))
+    handler = signal.getsignal(signal.SIGTERM)
+    # idempotent: re-installing swaps the provider, not the handler
+    mgr.install_sigterm_hook(lambda: (2, tree))
+    assert signal.getsignal(signal.SIGTERM) is handler
+    with pytest.raises(SystemExit) as ei:
+        handler(signal.SIGTERM, None)
+    assert ei.value.code == 143
+    # the save used the LATEST provider and the old handler was chained
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    assert chained == [signal.SIGTERM]
+
+
+def test_second_sigterm_during_drain_skips_checkpoint_write(
+        tmp_path, sigterm_guard):
+    mgr = ckpt.CheckpointManager(str(tmp_path), every=1, keep=3)
+    saves = []
+    in_save = threading.Event()
+    release = threading.Event()
+
+    def provider():
+        saves.append(1)
+        in_save.set()
+        assert release.wait(10)
+        return 1, {"beta": np.arange(4.0)}
+
+    mgr.install_sigterm_hook(provider)
+    handler = signal.getsignal(signal.SIGTERM)
+    exits = []
+
+    def first_sigterm():
+        try:
+            handler(signal.SIGTERM, None)
+        except SystemExit as e:
+            exits.append(e.code)
+
+    t = threading.Thread(target=first_sigterm)
+    t.start()
+    assert in_save.wait(10)                   # drain save is in progress
+    # second SIGTERM lands NOW: must skip the save, not re-enter it
+    with pytest.raises(SystemExit):
+        handler(signal.SIGTERM, None)
+    assert saves == [1]                       # still only the first save
+    release.set()
+    t.join(10)
+    assert exits == [143]
+    assert saves == [1]
+    assert ckpt.latest_step(str(tmp_path)) == 1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint integrity + store poison (unit level; chaos runs end-to-end)
+# ---------------------------------------------------------------------------
+
+def test_ckpt_quarantine_falls_back_to_intact_step(tmp_path):
+    tree = {"beta": np.arange(12.0).reshape(3, 4)}
+    ckpt.save(str(tmp_path), 1, tree)
+    q0 = ckpt.quarantine_count()
+    plan = FaultPlan((FaultSpec("ckpt.payload", "truncate", hits=(0,)),))
+    with inject(plan) as log:
+        ckpt.save(str(tmp_path), 2, tree)
+    assert log.count() == 1
+    step, manifest = ckpt.latest(str(tmp_path))
+    assert step == 1 and manifest["step"] == 1
+    assert ckpt.quarantine_count() == q0 + 1
+    assert os.path.isdir(tmp_path / "quarantined.step_000000000002")
+    restored = ckpt.restore(str(tmp_path), tree, step=1)
+    np.testing.assert_array_equal(restored["beta"], tree["beta"])
+
+
+def test_restore_of_corrupt_step_raises_typed(tmp_path):
+    tree = {"beta": np.arange(6.0)}
+    plan = FaultPlan((FaultSpec("ckpt.payload", "bitflip", hits=(0,)),))
+    with inject(plan):
+        ckpt.save(str(tmp_path), 5, tree)
+    with pytest.raises(ckpt.CheckpointCorrupt, match="digest mismatch"):
+        ckpt.restore(str(tmp_path), tree, step=5)
+
+
+def test_store_poison_is_dropped_not_served():
+    from repro.serve import CertificateStore
+    prob, base = _baseline()
+    store = CertificateStore(capacity=4)
+    plan = FaultPlan((FaultSpec("store.record", "poison", hits=(0,)),))
+    with inject(plan) as log:
+        store.put("req0", prob, CFG, base)
+    assert log.count() == 1
+    assert store.exact("req0") is None        # digest mismatch: dropped
+    assert store.poison_drops == 1
+    assert store.exact_hits == 0
+    # the poisoned entry is gone; a re-put serves normally again
+    store.put("req0", prob, CFG, base)
+    assert store.exact("req0") is not None
