@@ -156,7 +156,64 @@ def smoke(n=64, p=512, n_groups=64, T=10, delta=2.0, tau=0.3,
          res_b.batched_lambdas)
     emit("path_smoke", "pallas_batched", "fused_epoch_launches",
          res_b.n_fused_epoch_launches)
+
+    obs_payload = _obs_overhead_check(problem, T=T, delta=delta, tol=tol,
+                                      max_epochs=max_epochs)
     print("SMOKE PASS")
+    return obs_payload
+
+
+def _obs_overhead_check(problem, *, T, delta, tol, max_epochs,
+                        reps=3, budget=0.03) -> dict:
+    """The obs zero-cost contract, measured on the smoke path: tracing
+    enabled (sample_every=1) must leave the betas bit-identical and the
+    wall-clock within ``budget`` of the untraced run.
+
+    min-of-``reps`` on both sides damps scheduler noise — spans cost
+    microseconds against a multi-second jitted solve, so any apparent
+    overhead above noise is a real regression in the span fast path.
+    """
+    import numpy as np
+
+    from repro.obs import trace as obs_trace
+
+    def run_once():
+        session = SGLSession(problem, SolverConfig(
+            tol=tol, max_epochs=max_epochs, full_round_every=10 ** 9))
+        t0 = time.perf_counter()
+        res = session.solve_path(T=T, delta=delta)
+        return time.perf_counter() - t0, np.asarray(res.betas)
+
+    run_once()          # jit warm (XLA caches are process-global)
+    t_off, betas_off = zip(*(run_once() for _ in range(reps)))
+    obs_trace.configure(enabled=True, sample_every=1)
+    obs_trace.TRACER.reset()
+    t_on, betas_on = zip(*(run_once() for _ in range(reps)))
+    counts = dict(obs_trace.TRACER.counts())
+    stages = obs_trace.TRACER.stage_summary()
+    obs_trace.configure(enabled=False)
+
+    np.testing.assert_array_equal(
+        betas_on[-1], betas_off[-1],
+        err_msg="enabling tracing changed the path betas")
+    assert counts.get("path", 0) == reps and counts.get("round", 0) > 0, (
+        f"span sites silent under tracing: {counts}")
+    overhead = min(t_on) / min(t_off) - 1.0
+    emit("path_smoke", "obs", "overhead_frac", overhead)
+    emit("path_smoke", "obs", "spans_counted", sum(counts.values()))
+    assert overhead <= budget, (
+        f"obs-enabled path overhead {overhead:.1%} exceeds {budget:.0%}")
+    return {
+        "shape": {"n": int(problem.n), "G": int(problem.G),
+                  "ng": int(problem.ng), "T": T, "delta": delta,
+                  "tol": tol},
+        "base_s": float(min(t_off)),
+        "obs_s": float(min(t_on)),
+        "overhead_frac": float(overhead),
+        "bit_identical": True,
+        "span_counts": counts,
+        "stages": stages,
+    }
 
 
 def main(n=256, n_lon=16, n_lat=8, T=20, delta=2.5, tau=0.4,
@@ -287,10 +344,22 @@ if __name__ == "__main__":
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="dump emitted rows as machine-readable JSON "
                          "(the BENCH_pr4.json perf-trajectory record)")
+    ap.add_argument("--obs-json", metavar="PATH", default=None,
+                    help="with --smoke: merge the obs overhead check and "
+                         "the measured per-kernel timing harness into a "
+                         "repro.obs.bench/v1 file (BENCH_pr10.json)")
     args = ap.parse_args()
     header()
     if args.smoke:
-        smoke()
+        obs_payload = smoke()
+        if args.obs_json:
+            from repro.obs.export import merge_bench
+            from repro.obs.timing import measure_kernels
+
+            merge_bench(args.obs_json, "path", obs_payload)
+            merge_bench(args.obs_json, "kernels",
+                        {"scale": "smoke",
+                         "kernels": measure_kernels(scale="smoke")})
     elif args.full:
         main(n=814, n_lon=144, n_lat=73, T=100)
         pallas_case()

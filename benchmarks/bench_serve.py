@@ -43,6 +43,8 @@ from repro.core import sgl
 from repro.core.session import SGLSession, SolverConfig, lambda_grid
 from repro.data.synthetic import make_synthetic
 from repro.faults import FaultPlan, FaultSpec, inject
+from repro.obs import trace as obs_trace
+from repro.obs.export import merge_bench, percentile
 from repro.serve import PathRequest, ServeConfig, SGLServer
 
 
@@ -118,12 +120,12 @@ def _play(server: SGLServer, waves) -> tuple[list, float]:
 
 
 def _emit_latencies(case: str, responses, total_s: float) -> None:
-    lat = np.array([t for _resp, t in responses])
+    lat = [t for _resp, t in responses]
     emit("serve", case, "requests", len(lat))
     emit("serve", case, "total_seconds", total_s)
     emit("serve", case, "requests_per_sec", len(lat) / total_s)
-    emit("serve", case, "latency_p50_s", float(np.percentile(lat, 50)))
-    emit("serve", case, "latency_p99_s", float(np.percentile(lat, 99)))
+    emit("serve", case, "latency_p50_s", percentile(lat, 50))
+    emit("serve", case, "latency_p99_s", percentile(lat, 99))
 
 
 def _unsafe_cert_reuse(resp, problem, grid, base_cfg: SolverConfig) -> int:
@@ -155,7 +157,7 @@ def _baseline_cfg(solver: SolverConfig) -> ServeConfig:
 
 
 def run(n=64, p=512, groups=64, T=10, tau=0.3, tol=1e-7,
-        max_epochs=20_000) -> None:
+        max_epochs=20_000, obs_json=None) -> None:
     solver = SolverConfig(tol=tol, max_epochs=max_epochs,
                           full_round_every=10 ** 9,
                           solver_backend="pallas")
@@ -169,10 +171,22 @@ def run(n=64, p=512, groups=64, T=10, tau=0.3, tol=1e-7,
         warm_srv.stop()
 
     # ---- serve mode: coalescing + session cache + certificate store ----
+    # Traced: the obs span taxonomy yields the per-stage latency
+    # breakdown (request/coalesce/store/cache/warm_eval/path/...) the
+    # BENCH artifact records next to the end-to-end percentiles.
+    obs_trace.configure(enabled=True, sample_every=1)
+    obs_trace.TRACER.reset()
     server = SGLServer(_serve_cfg(solver)).start()
     responses, total_serve = _play(server, [wave1, wave2])
     server.stop()
+    stages = obs_trace.TRACER.stage_summary()
+    obs_trace.configure(enabled=False)
+    queue_wait = server.metrics.histogram("serve.queue_wait_s").summary()
     _emit_latencies("serve", responses, total_serve)
+    for stage, s in sorted(stages.items()):
+        emit("serve_stages", stage, "count", s["n"])
+        emit("serve_stages", stage, "p50_s", s["p50"] or 0.0)
+        emit("serve_stages", stage, "p99_s", s["p99"] or 0.0)
     stats = server.stats()
     by_tenant = {r.tenant: r for r, _t in responses}
 
@@ -232,8 +246,10 @@ def run(n=64, p=512, groups=64, T=10, tau=0.3, tol=1e-7,
 
     rps_serve = len(responses) / total_serve
     rps_base = len(responses_b) / total_base
-    p50_serve = float(np.percentile([t for _r, t in responses], 50))
-    p50_base = float(np.percentile([t for _r, t in responses_b], 50))
+    lat_serve = [t for _r, t in responses]
+    lat_base = [t for _r, t in responses_b]
+    p50_serve = percentile(lat_serve, 50)
+    p50_base = percentile(lat_base, 50)
     emit("serve", "speedup", "requests_per_sec_ratio",
          rps_serve / rps_base)
     emit("serve", "speedup", "latency_p50_ratio", p50_base / p50_serve)
@@ -243,6 +259,26 @@ def run(n=64, p=512, groups=64, T=10, tau=0.3, tol=1e-7,
     assert p50_serve < p50_base, (
         f"serving did not beat the baseline on p50 latency "
         f"({p50_serve:.3f}s vs {p50_base:.3f}s)")
+    if obs_json:
+        merge_bench(obs_json, "serve", {
+            "workload": {"tenants": len(wave1) + len(wave2), "n": n,
+                         "p": p, "groups": groups, "T": T},
+            "latency_s": {"p50": p50_serve,
+                          "p99": percentile(lat_serve, 99),
+                          "n": len(lat_serve),
+                          "total": float(total_serve)},
+            "baseline_latency_s": {"p50": p50_base,
+                                   "p99": percentile(lat_base, 99),
+                                   "n": len(lat_base),
+                                   "total": float(total_base)},
+            "requests_per_sec": rps_serve,
+            "baseline_requests_per_sec": rps_base,
+            "speedup_rps": rps_serve / rps_base,
+            "stages": stages,
+            "queue_wait_s": queue_wait,
+            "counters": {k: int(v) for k, v in server.counters.items()},
+            "cache": stats["cache"],
+        })
     print("SERVE BENCH PASS")
 
 
@@ -251,12 +287,12 @@ def run(n=64, p=512, groups=64, T=10, tau=0.3, tol=1e-7,
 # ---------------------------------------------------------------------------
 
 def _lat_stats(responses, total_s: float) -> dict:
-    lat = np.array([t for _r, t in responses])
+    lat = [t for _r, t in responses]
     return {
         "requests": int(len(lat)),
         "total_seconds": float(total_s),
-        "latency_p50_s": float(np.percentile(lat, 50)),
-        "latency_p99_s": float(np.percentile(lat, 99)),
+        "latency_p50_s": percentile(lat, 50),
+        "latency_p99_s": percentile(lat, 99),
     }
 
 
@@ -378,6 +414,11 @@ def main() -> None:
                              "BENCH_pr7.json perf-trajectory record; "
                              "with --faults, merged into BENCH_pr9-style "
                              "fault reports)")
+    parser.add_argument("--obs-json", metavar="PATH", default=None,
+                        help="merge the serve section (end-to-end "
+                             "percentiles + per-stage span breakdown + "
+                             "queue-wait histogram) into a "
+                             "repro.obs.bench/v1 file (BENCH_pr10.json)")
     args = parser.parse_args()
     header()
     if args.faults:
@@ -390,9 +431,9 @@ def main() -> None:
     # predictor satisfied on these shapes, so the coalesced solves
     # exercise the batched-lambda machinery (same recipe as bench_path).
     if args.smoke:
-        run(n=64, p=512, groups=64, T=10)
+        run(n=64, p=512, groups=64, T=10, obs_json=args.obs_json)
     else:
-        run(n=64, p=512, groups=64, T=14)
+        run(n=64, p=512, groups=64, T=14, obs_json=args.obs_json)
     if args.json:
         write_json(args.json, extra={"bench": "serve",
                                      "smoke": bool(args.smoke)})

@@ -17,6 +17,8 @@ from typing import Callable
 
 import jax
 
+from repro.obs.export import env_meta
+
 # The convex-optimization core targets the paper's 1e-8 duality-gap
 # tolerance, which needs f64 (same switch the tests flip in conftest.py).
 jax.config.update("jax_enable_x64", True)
@@ -40,14 +42,18 @@ def write_json(path: str, extra: dict | None = None) -> None:
     — flat rows rather than nesting so a diff tool can join on
     (benchmark, case, metric) without knowing any benchmark's shape.
     """
+    # Environment metadata comes from the one shared exporter
+    # (repro.obs.export.env_meta); the historical key names and the OS
+    # platform string are layered on top so existing diff tooling keeps
+    # joining on the same fields.
+    meta = env_meta()
+    meta.update({
+        "jax_version": jax.__version__,
+        "platform": platform.platform(),
+        **(extra or {}),
+    })
     payload = {
-        "meta": {
-            "jax_version": jax.__version__,
-            "backend": jax.default_backend(),
-            "platform": platform.platform(),
-            "x64": bool(jax.config.read("jax_enable_x64")),
-            **(extra or {}),
-        },
+        "meta": meta,
         "rows": [
             {"benchmark": b, "case": c, "metric": m, "value": v}
             for b, c, m, v in _ROWS

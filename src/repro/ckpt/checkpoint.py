@@ -37,13 +37,16 @@ import jax
 from repro.faults.errors import CheckpointCorrupt
 from repro.faults.inject import corrupt_file as _corrupt_file
 from repro.faults.inject import fire as _fire_fault
+from repro.obs import metrics as _obs_metrics
 
-_QUARANTINED = 0
+_M_QUARANTINED = _obs_metrics.REGISTRY.counter(
+    "ckpt.quarantined",
+    help="Corrupt checkpoint step dirs renamed aside (digest mismatch)")
 
 
 def quarantine_count() -> int:
     """Checkpoints quarantined (renamed aside) this process."""
-    return _QUARANTINED
+    return _M_QUARANTINED.value
 
 
 def _payload_digest(path: str) -> str:
@@ -133,7 +136,6 @@ def _verify_step(directory: str, step: int) -> bool:
 
 def _quarantine(directory: str, step: int) -> None:
     """Rename a corrupt step dir aside so scans never see it again."""
-    global _QUARANTINED
     src = os.path.join(directory, f"step_{step:012d}")
     dst = os.path.join(directory, f"quarantined.step_{step:012d}")
     if os.path.exists(dst):
@@ -142,7 +144,7 @@ def _quarantine(directory: str, step: int) -> None:
         os.replace(src, dst)
     except FileNotFoundError:
         return
-    _QUARANTINED += 1
+    _M_QUARANTINED.inc()
 
 
 def latest(directory: str) -> Optional[tuple]:

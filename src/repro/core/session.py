@@ -135,7 +135,15 @@ from ..faults.errors import KernelLaunchError, NumericsError
 from ..faults.inject import fire as _fire_fault
 from ..kernels import ops as kops
 from ..losses import Loss, resolve_loss
+from ..obs import trace as obs_trace
 from ..rules import ScreeningRule, resolve_rule
+
+
+def _launch_span(backend: str):
+    """A ``kernel_launch`` span for Pallas dispatches; the XLA reference
+    path gets the no-op singleton so span counts tally fused launches."""
+    return (obs_trace.span("kernel_launch") if backend == "pallas"
+            else obs_trace.NOOP)
 
 __all__ = [
     "SolverConfig",
@@ -587,31 +595,34 @@ class SGLSession:
         # every pre-loss call site); non-lsq rounds screen from the
         # generalized residual rho = -grad F(X beta).
         loss_arg = None if self.loss.name == "lsq" else self.loss
-        try:
-            for s in _fire_fault("kernels.screen"):
-                if s.kind == "raise":
-                    raise KernelLaunchError(
-                        "injected screening-kernel launch failure"
+        with obs_trace.span("round") as _sp:
+            _sp.set("compact", False)
+            try:
+                for s in _fire_fault("kernels.screen"):
+                    if s.kind == "raise":
+                        raise KernelLaunchError(
+                            "injected screening-kernel launch failure"
+                        )
+                with _launch_span(self.backend):
+                    res, resid, terms = _screen_round(
+                        problem, beta, lam_j, lam_max_j, rule, self.backend,
+                        self.xt_pre, loss=loss_arg,
                     )
-            res, resid, terms = _screen_round(
-                problem, beta, lam_j, lam_max_j, rule, self.backend,
-                self.xt_pre, loss=loss_arg,
-            )
-        except Exception:
-            if self.backend != "pallas":
-                raise
-            # Failed Pallas launch: demote the session to the XLA
-            # reference path and retry ONCE.  Bit-parity between the
-            # backends keeps the retried round's outputs identical; the
-            # demotion is counted so a degraded node stays visible in the
-            # fused-launch audit.
-            self.backend = "xla"
-            self.kernel_demotions += 1
-            kops.note_kernel_demotion()
-            res, resid, terms = _screen_round(
-                problem, beta, lam_j, lam_max_j, rule, "xla", None,
-                loss=loss_arg,
-            )
+            except Exception:
+                if self.backend != "pallas":
+                    raise
+                # Failed Pallas launch: demote the session to the XLA
+                # reference path and retry ONCE.  Bit-parity between the
+                # backends keeps the retried round's outputs identical; the
+                # demotion is counted so a degraded node stays visible in the
+                # fused-launch audit.
+                self.backend = "xla"
+                self.kernel_demotions += 1
+                kops.note_kernel_demotion()
+                res, resid, terms = _screen_round(
+                    problem, beta, lam_j, lam_max_j, rule, "xla", None,
+                    loss=loss_arg,
+                )
         for s in specs:
             if s.kind in ("nan", "inf"):
                 bad = float("nan") if s.kind == "nan" else float("inf")
@@ -661,14 +672,17 @@ class SGLSession:
             xt_rows = caches.gather_xt_rows(problem, group_active,
                                             self.xt_pre)
         dtype = problem.X.dtype
-        gap, theta, g_keep, f_keep, valid = _screen_round_compact(
-            problem, Xt, take, gmask,
-            jnp.asarray(beta, dtype),
-            jnp.asarray(feat_active),
-            jnp.asarray(group_active),
-            caches.ref_terms, caches.resid_ref, lam_j,
-            self.backend, xt_rows,
-        )
+        with obs_trace.span("round") as _sp:
+            _sp.set("compact", True)
+            with _launch_span(self.backend):
+                gap, theta, g_keep, f_keep, valid = _screen_round_compact(
+                    problem, Xt, take, gmask,
+                    jnp.asarray(beta, dtype),
+                    jnp.asarray(feat_active),
+                    jnp.asarray(group_active),
+                    caches.ref_terms, caches.resid_ref, lam_j,
+                    self.backend, xt_rows,
+                )
         # Attempt cost is spent either way (honest FLOP accounting).
         self.round_flops += 4.0 * problem.n * Xt.shape[0] * problem.ng
         if not bool(valid):
@@ -1026,31 +1040,33 @@ class SGLSession:
                 def _epochs_compact(backend, rows):
                     if backend == "pallas":
                         _fire_epoch_launch_fault()
-                    if lsq:
-                        return _inner_rounds(
+                    with _launch_span(backend):
+                        if lsq:
+                            return _inner_rounds(
+                                Xt, Lg, w, problem.y, beta,
+                                jnp.asarray(feat_active),
+                                take, gmask, problem.tau, lam_j,
+                                jnp.asarray(tol, dtype), check, max_blocks,
+                                backend, rows
+                            )
+                        return _inner_rounds_loss(
                             Xt, Lg, w, problem.y, beta,
                             jnp.asarray(feat_active),
                             take, gmask, problem.tau, lam_j,
-                            jnp.asarray(tol, dtype), check, max_blocks,
-                            backend, rows
+                            jnp.asarray(tol, dtype), self.loss, check,
+                            max_blocks, backend, rows
                         )
-                    return _inner_rounds_loss(
-                        Xt, Lg, w, problem.y, beta,
-                        jnp.asarray(feat_active),
-                        take, gmask, problem.tau, lam_j,
-                        jnp.asarray(tol, dtype), self.loss, check,
-                        max_blocks, backend, rows
-                    )
 
-                try:
-                    beta, k_done, _ = _epochs_compact(
-                        self.solver_backend, xt_rows
-                    )
-                except Exception:
-                    if self.solver_backend != "pallas":
-                        raise
-                    self._demote_solver_backend()
-                    beta, k_done, _ = _epochs_compact("xla", None)
+                with obs_trace.span("epoch_block"):
+                    try:
+                        beta, k_done, _ = _epochs_compact(
+                            self.solver_backend, xt_rows
+                        )
+                    except Exception:
+                        if self.solver_backend != "pallas":
+                            raise
+                        self._demote_solver_backend()
+                        beta, k_done, _ = _epochs_compact("xla", None)
                 epochs_done += check * int(k_done)
                 if self.solver_backend == "pallas" and (
                         lsq or self.loss.name == "logistic"):
@@ -1070,53 +1086,64 @@ class SGLSession:
                             "gnk,gk->n", Xt_full, beta
                         )
                     if self.solver_backend == "pallas":
-                        try:
-                            _fire_epoch_launch_fault()
-                            beta_b, resid_b = kops.bcd_epochs_fused(
-                                Xt_full, Lg, problem.w, fmask[None],
-                                beta[None], resid_nc[None], problem.tau,
-                                jnp.reshape(lam_j, (1,)), f_ce
-                            )
-                            beta, resid_nc = beta_b[0], resid_b[0]
-                            self.fused_epoch_launches += 1
-                        except Exception:
-                            self._demote_solver_backend()
+                        with obs_trace.span("epoch_block"):
+                            try:
+                                _fire_epoch_launch_fault()
+                                with _launch_span("pallas"):
+                                    beta_b, resid_b = kops.bcd_epochs_fused(
+                                        Xt_full, Lg, problem.w, fmask[None],
+                                        beta[None], resid_nc[None],
+                                        problem.tau,
+                                        jnp.reshape(lam_j, (1,)), f_ce
+                                    )
+                                beta, resid_nc = beta_b[0], resid_b[0]
+                                self.fused_epoch_launches += 1
+                            except Exception:
+                                self._demote_solver_backend()
+                                beta, resid_nc = bcd_epochs(
+                                    Xt_full, Lg, problem.w, fmask, beta,
+                                    resid_nc, problem.tau, lam_j, f_ce
+                                )
+                    else:
+                        with obs_trace.span("epoch_block"):
                             beta, resid_nc = bcd_epochs(
                                 Xt_full, Lg, problem.w, fmask, beta,
                                 resid_nc, problem.tau, lam_j, f_ce
                             )
-                    else:
-                        beta, resid_nc = bcd_epochs(
-                            Xt_full, Lg, problem.w, fmask, beta, resid_nc,
-                            problem.tau, lam_j, f_ce
-                        )
                 else:
                     if z_nc is None:
                         z_nc = jnp.einsum("gnk,gk->n", Xt_full, beta)
                     if (self.solver_backend == "pallas"
                             and self.loss.name == "logistic"):
-                        try:
-                            _fire_epoch_launch_fault()
-                            beta_b, z_b = kops.bcd_epochs_logistic_fused(
-                                Xt_full, Lg, problem.w, fmask[None],
-                                beta[None], z_nc[None], problem.y,
-                                problem.tau, jnp.reshape(lam_j, (1,)), f_ce
-                            )
-                            beta, z_nc = beta_b[0], z_b[0]
-                            self.fused_epoch_launches += 1
-                        except Exception:
-                            self._demote_solver_backend()
+                        with obs_trace.span("epoch_block"):
+                            try:
+                                _fire_epoch_launch_fault()
+                                with _launch_span("pallas"):
+                                    beta_b, z_b = (
+                                        kops.bcd_epochs_logistic_fused(
+                                            Xt_full, Lg, problem.w,
+                                            fmask[None], beta[None],
+                                            z_nc[None], problem.y,
+                                            problem.tau,
+                                            jnp.reshape(lam_j, (1,)), f_ce
+                                        )
+                                    )
+                                beta, z_nc = beta_b[0], z_b[0]
+                                self.fused_epoch_launches += 1
+                            except Exception:
+                                self._demote_solver_backend()
+                                beta, z_nc = bcd_epochs_loss(
+                                    Xt_full, Lg, problem.w, fmask, beta,
+                                    z_nc, problem.tau, lam_j, problem.y,
+                                    self.loss, f_ce
+                                )
+                    else:
+                        with obs_trace.span("epoch_block"):
                             beta, z_nc = bcd_epochs_loss(
                                 Xt_full, Lg, problem.w, fmask, beta, z_nc,
                                 problem.tau, lam_j, problem.y, self.loss,
                                 f_ce
                             )
-                    else:
-                        beta, z_nc = bcd_epochs_loss(
-                            Xt_full, Lg, problem.w, fmask, beta, z_nc,
-                            problem.tau, lam_j, problem.y, self.loss,
-                            f_ce
-                        )
                 epochs_done += f_ce
 
             if self.budget is not None:
@@ -1294,10 +1321,11 @@ class SGLSession:
                     break
             try:
                 _fire_epoch_launch_fault()
-                bsub, resid = kops.bcd_epochs_fused(
-                    Xt, Lg_eff, w, fm_b, bsub, resid, problem.tau, lam_b,
-                    block
-                )
+                with obs_trace.span("epoch_block"), _launch_span("pallas"):
+                    bsub, resid = kops.bcd_epochs_fused(
+                        Xt, Lg_eff, w, fm_b, bsub, resid, problem.tau,
+                        lam_b, block
+                    )
             except Exception as e:
                 # The batched-lambda driver has no reference twin (the
                 # lax.scan path is per-lambda); a failed fused launch
@@ -1456,6 +1484,17 @@ class SGLSession:
                 keep_results=keep_results, batch_lambdas=batch_lambdas,
                 beta0=beta0,
             )
+        with obs_trace.span("path") as _sp:
+            _sp.set("T", T)
+            return self._solve_path_impl(
+                lambdas, T=T, delta=delta, sequential=sequential,
+                keep_results=keep_results, batch_lambdas=batch_lambdas,
+                beta0=beta0, prev_epochs=prev_epochs,
+            )
+
+    def _solve_path_impl(self, lambdas, *, T, delta, sequential,
+                         keep_results, batch_lambdas, beta0,
+                         prev_epochs) -> PathResult:
         cfg = self.config
         problem = self.problem
         rule = self.rule
@@ -1648,9 +1687,11 @@ class SGLSession:
                     else:
                         break
                 if len(certs) > 1:
-                    run = self._solve_batch_bcd(
-                        lambdas[t:t + len(certs)], beta, certs, caches
-                    )
+                    with obs_trace.span("lambda") as _lsp:
+                        _lsp.set("t", t).set("batched", len(certs))
+                        run = self._solve_batch_bcd(
+                            lambdas[t:t + len(certs)], beta, certs, caches
+                        )
                     for j, res in enumerate(run):
                         record(t + j, res, certs[j],
                                n_groups - int(seq_scr[t + j]))
@@ -1686,14 +1727,16 @@ class SGLSession:
                 check_t = cfg.check_every
 
             lam_caches = caches if caches is not None else SolveCaches()
-            res = self.solve(
-                float(lam_),
-                beta0=beta,
-                first_round=first_round,
-                lam_max=lam_max,
-                check_every=check_t,
-                caches=lam_caches,
-            )
+            with obs_trace.span("lambda") as _lsp:
+                _lsp.set("t", t)
+                res = self.solve(
+                    float(lam_),
+                    beta0=beta,
+                    first_round=first_round,
+                    lam_max=lam_max,
+                    check_every=check_t,
+                    caches=lam_caches,
+                )
             beta = res.beta
             if caches is None:
                 n_gathers_total += lam_caches.n_gathers

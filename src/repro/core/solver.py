@@ -94,7 +94,13 @@ from .sgl import SGLProblem
 from ..kernels import _util as kernel_util
 from ..kernels import ops as kops
 from ..losses import Loss, resolve_loss
+from ..obs import metrics as obs_metrics
 from ..rules import RuleState, ScreeningRule, resolve_rule
+
+_M_GATHERS = obs_metrics.REGISTRY.counter(
+    "solver.gathers",
+    help="Compacted gather-buffer rebuilds (certified active set shrank) "
+         "across all SolveCaches instances in the process")
 
 __all__ = [
     "SolveResult",
@@ -207,6 +213,7 @@ class SolveCaches:
             self.gather_val = _gather_static(problem, group_active)
             self.gather_key = key
             self.n_gathers += 1
+            _M_GATHERS.inc()
         return self.gather_val
 
     def gather_xt_rows(self, problem: SGLProblem, group_active: np.ndarray,

@@ -23,8 +23,14 @@ from typing import Dict, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
+from ..obs import metrics as _obs_metrics
 from .errors import WorkerCrash
 from .plan import FaultPlan, FaultSpec
+
+_M_FIRED = _obs_metrics.REGISTRY.counter(
+    "faults.fired",
+    help="Injected fault specs that actually fired at a site "
+         "(process-wide tally across all inject() activations)")
 
 __all__ = ["inject", "fire", "active_plan", "FaultLog", "FiredEvent",
            "corrupt_file", "maybe_kill"]
@@ -106,6 +112,7 @@ def fire(site: str) -> Tuple[FaultSpec, ...]:
             a.log.events.extend(
                 FiredEvent(site, idx, s.kind, s.field) for s in matched
             )
+        _M_FIRED.inc(len(matched))
     for s in matched:
         if s.kind == "stall":
             time.sleep(s.stall_s)

@@ -49,6 +49,11 @@ class ArraySpec(NamedTuple):
         return int(np.prod(self.block)) * np.dtype(self.dtype).itemsize
 
     @property
+    def array_bytes(self) -> int:
+        """Full (unblocked) array footprint in bytes."""
+        return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
+
+    @property
     def nblocks(self) -> Tuple[int, ...]:
         return tuple(-(-s // b) for s, b in zip(self.shape, self.block))
 
@@ -76,6 +81,16 @@ class LaunchSpec(NamedTuple):
     def vmem_bytes(self) -> int:
         """VMEM-resident footprint of one grid step (all operand blocks)."""
         return sum(a.block_bytes for a in self.inputs + self.outputs)
+
+    @property
+    def io_bytes(self) -> int:
+        """Unique-bytes HBM traffic model: every operand read or written
+        once at full size.  A deliberate lower bound — carried outputs stay
+        VMEM-resident and streamed inputs may be re-read per epoch axis —
+        used by the obs timing harness as the ``bytes`` term of
+        :func:`repro.launch.roofline.achieved_vs_peak` when a kernel has no
+        hand-written traffic formula."""
+        return sum(a.array_bytes for a in self.inputs + self.outputs)
 
 
 def block_specs(arrays) -> list:

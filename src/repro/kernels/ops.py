@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from ..analysis.registry import register_kernel_audit
+from ..obs import metrics as obs_metrics
 from .bcd_epoch import (
     bcd_epoch_launch_spec,
     bcd_epoch_logistic_launch_spec,
@@ -155,53 +156,67 @@ def prepare_transposed(X: jax.Array) -> jax.Array:
 # per-round copies are back.  Every fallback path that builds the transpose
 # must go through :func:`transposed_design` (or bump the counter itself) so
 # the audit cannot under-report.
-_TRANSPOSE_TRACES = 0
+#
+# Since PR 10 the three audit counters are typed repro.obs Counters on the
+# global metrics registry; everything below (count accessors, note_* hooks,
+# audit_scope) is the stable back-compat surface over them.
+_M_TRANSPOSE = obs_metrics.REGISTRY.counter(
+    "kernels.transpose_traces",
+    help="On-the-fly (p, n) transposed design copies (should stay 0 on "
+         "session-driven paths; see kernels.ops.transposed_design)")
 
 # Companion audit counter: jit retraces observed by the analysis harness
 # (repro.analysis.jaxpr_lints.retrace_harness) — a registered entry point
 # compiled TWICE for dtype-identical inputs (weak-type literal splits, an
 # unhashable static argument, shape-dependent python branching...).  Like
 # the transpose counter it only ever moves when the hazard is real.
-_RETRACE_EVENTS = 0
+_M_RETRACE = obs_metrics.REGISTRY.counter(
+    "kernels.retraces",
+    help="Observed jit retraces for dtype-identical inputs (retrace "
+         "harness + SessionCache.watch_retraces)")
 
 # Kernel demotions: a Pallas launch failed and the caller fell back to the
 # XLA/lax.scan reference path for that dispatch.  Bit-parity between the
 # backends keeps results identical, but a demotion trades the fused
 # kernel's throughput for the reference path's — the fused-launch audit
 # surfaces the count so a degraded serving node is visible, not silent.
-_KERNEL_DEMOTIONS = 0
+_M_DEMOTION = obs_metrics.REGISTRY.counter(
+    "kernels.demotions",
+    help="Pallas launches demoted to the XLA/lax.scan reference path "
+         "after a launch failure (bit-identical, slower)")
+
+_AUDIT_METRICS = ("kernels.transpose_traces", "kernels.retraces",
+                  "kernels.demotions")
 
 
 def transpose_trace_count() -> int:
-    return _TRANSPOSE_TRACES
+    return _M_TRANSPOSE.value
 
 
 def retrace_count() -> int:
-    return _RETRACE_EVENTS
+    return _M_RETRACE.value
 
 
 def note_retrace(n: int = 1) -> None:
     """Record ``n`` observed jit retraces (analysis harness hook)."""
-    global _RETRACE_EVENTS
-    _RETRACE_EVENTS += int(n)
+    _M_RETRACE.inc(int(n))
 
 
 def kernel_demotion_count() -> int:
-    return _KERNEL_DEMOTIONS
+    return _M_DEMOTION.value
 
 
 def note_kernel_demotion(n: int = 1) -> None:
     """Record ``n`` pallas→reference fallbacks after failed launches."""
-    global _KERNEL_DEMOTIONS
-    _KERNEL_DEMOTIONS += int(n)
+    _M_DEMOTION.inc(int(n))
 
 
 class AuditCounters:
     """Live view of the audit counters inside an :func:`audit_scope`.
 
-    While the scope is open the properties read the module globals (which
-    the scope zeroed on entry); on exit the final values are frozen onto
-    the instance so assertions after the ``with`` block keep working.
+    While the scope is open the properties read the registry counters
+    (which the scope zeroed on entry); on exit the final values are frozen
+    onto the instance so assertions after the ``with`` block keep working.
     """
 
     __slots__ = ("_frozen", "_transpose", "_retrace", "_demotions")
@@ -214,20 +229,20 @@ class AuditCounters:
 
     @property
     def transpose_traces(self) -> int:
-        return self._transpose if self._frozen else _TRANSPOSE_TRACES
+        return self._transpose if self._frozen else _M_TRANSPOSE.value
 
     @property
     def retraces(self) -> int:
-        return self._retrace if self._frozen else _RETRACE_EVENTS
+        return self._retrace if self._frozen else _M_RETRACE.value
 
     @property
     def kernel_demotions(self) -> int:
-        return self._demotions if self._frozen else _KERNEL_DEMOTIONS
+        return self._demotions if self._frozen else _M_DEMOTION.value
 
     def _freeze(self) -> None:
-        self._transpose = _TRANSPOSE_TRACES
-        self._retrace = _RETRACE_EVENTS
-        self._demotions = _KERNEL_DEMOTIONS
+        self._transpose = _M_TRANSPOSE.value
+        self._retrace = _M_RETRACE.value
+        self._demotions = _M_DEMOTION.value
         self._frozen = True
 
 
@@ -235,9 +250,10 @@ class AuditCounters:
 def audit_scope():
     """Exception-safe, test-isolated window onto the audit counters.
 
-    Zeroes both global counters on entry and restores the surrounding
-    values on exit (try/finally — an assertion failure inside the scope
-    cannot leak state into the next test), yielding an
+    A thin veneer over ``obs.metrics.REGISTRY.scope`` (which generalized
+    this idiom in PR 10): zeroes the audit counters on entry and restores
+    the surrounding values on exit (try/finally — an assertion failure
+    inside the scope cannot leak state into the next test), yielding an
     :class:`AuditCounters` whose ``transpose_traces`` / ``retraces`` read
     the in-scope deltas::
 
@@ -249,15 +265,12 @@ def audit_scope():
     propagated to the outer scope: a scope is a measurement boundary, and
     an enclosing baseline must not see another test's traffic.
     """
-    global _TRANSPOSE_TRACES, _RETRACE_EVENTS, _KERNEL_DEMOTIONS
-    prev = (_TRANSPOSE_TRACES, _RETRACE_EVENTS, _KERNEL_DEMOTIONS)
-    _TRANSPOSE_TRACES, _RETRACE_EVENTS, _KERNEL_DEMOTIONS = 0, 0, 0
     counters = AuditCounters()
-    try:
-        yield counters
-    finally:
-        counters._freeze()
-        _TRANSPOSE_TRACES, _RETRACE_EVENTS, _KERNEL_DEMOTIONS = prev
+    with obs_metrics.REGISTRY.scope(_AUDIT_METRICS):
+        try:
+            yield counters
+        finally:
+            counters._freeze()
 
 
 def transposed_design(X: jax.Array) -> jax.Array:
@@ -269,8 +282,7 @@ def transposed_design(X: jax.Array) -> jax.Array:
     build this reshape inline and bypass the audit, leaving a
     session-wiring regression on that path invisible.
     """
-    global _TRANSPOSE_TRACES
-    _TRANSPOSE_TRACES += 1
+    _M_TRANSPOSE.inc()
     n, G, ng = X.shape
     return X.reshape(n, G * ng).T
 

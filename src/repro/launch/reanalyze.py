@@ -79,10 +79,38 @@ def reanalyze_sweep(json_path: str, md_path: str | None = None) -> str:
     return md_path
 
 
+def reanalyze_obs(json_path: str, md_path: str | None = None) -> str:
+    """Re-render the observability bench markdown from a saved
+    ``repro.obs.bench/v1`` JSON (``BENCH_pr10.json``) — kernel timings,
+    path overhead contract, serve per-stage breakdown — without re-running
+    a single measurement.  Renderer:
+    :func:`repro.launch.report.render_obs_markdown`."""
+    from ..obs.export import BENCH_SCHEMA
+    from .report import render_obs_markdown
+
+    with open(json_path) as f:
+        payload = json.load(f)
+    if payload.get("schema") != BENCH_SCHEMA:
+        raise SystemExit(
+            f"{json_path} is not a {BENCH_SCHEMA} payload (schema: "
+            f"{payload.get('schema')!r}) - see repro.obs.export"
+        )
+    if md_path is None:
+        base, _ = os.path.splitext(json_path)
+        md_path = base + ".md"
+    with open(md_path, "w") as f:
+        f.write(render_obs_markdown(payload))
+        f.write("\n")
+    print(f"re-rendered {json_path} -> {md_path}")
+    return md_path
+
+
 def main():
-    usage = "usage: reanalyze --sweep <sweep.json> [--md <out.md>]"
+    usage = ("usage: reanalyze [--sweep|--obs] <bench.json> "
+             "[--md <out.md>]")
     args = sys.argv[1:]
-    if args and args[0] == "--sweep":
+    if args and args[0] in ("--sweep", "--obs"):
+        mode = args[0]
         md = None
         rest = args[1:]
         if "--md" in rest:
@@ -93,7 +121,10 @@ def main():
             rest = rest[:i] + rest[i + 2:]
         if len(rest) != 1 or rest[0].startswith("--"):
             raise SystemExit(usage)
-        reanalyze_sweep(rest[0], md)
+        if mode == "--sweep":
+            reanalyze_sweep(rest[0], md)
+        else:
+            reanalyze_obs(rest[0], md)
         return
     out_dir = args[0] if args else "artifacts/dryrun2"
     n = 0

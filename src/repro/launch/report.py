@@ -318,6 +318,127 @@ def render_analysis_markdown(payload: dict) -> str:
     return "\n".join(out)
 
 
+def _fmt_s(x) -> str:
+    if x is None:
+        return "—"
+    x = float(x)
+    if x >= 1.0:
+        return f"{x:.3f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}µs"
+
+
+def _stage_table(stages: dict, out: list) -> None:
+    out.append("| stage | n | p50 | p99 | mean |")
+    out.append("|---|---|---|---|---|")
+    for name in sorted(stages):
+        s = stages[name]
+        out.append(f"| `{name}` | {s.get('n', 0)} | "
+                   f"{_fmt_s(s.get('p50'))} | {_fmt_s(s.get('p99'))} | "
+                   f"{_fmt_s(s.get('mean'))} |")
+    out.append("")
+
+
+def render_obs_markdown(payload: dict) -> str:
+    """Markdown report for a ``repro.obs.bench/v1`` payload.
+
+    One section per recorded bench section (kernel timings, path smoke,
+    serve load), re-renderable from the saved JSON via
+    ``reanalyze --obs`` — the same raw-next-to-derived pattern as the
+    sweep and analysis reports.
+    """
+    meta = payload.get("meta", {})
+    sections = payload.get("sections", {})
+    out = ["# Observability bench (repro.obs.bench/v1)", ""]
+    if meta:
+        out.append("; ".join(f"{k}={meta[k]}" for k in sorted(meta)))
+        out.append("")
+
+    kern = sections.get("kernels")
+    if kern:
+        rows = kern.get("kernels", {})
+        out.append(f"## Kernels — measured wall-clock "
+                   f"({kern.get('scale', '?')} scale)")
+        out.append("")
+        out.append("| kernel | measured | min | model GFLOP | "
+                   "achieved vs peak | vs model | bottleneck |")
+        out.append("|---|---|---|---|---|---|---|")
+        for name in sorted(rows):
+            r = rows[name]
+            a = r.get("achieved", {})
+            interp = " (interp)" if r.get("interpret") else ""
+            out.append(
+                f"| `{name}`{interp} | {_fmt_s(r.get('measured_s'))} | "
+                f"{_fmt_s(r.get('min_s'))} | "
+                f"{r.get('model_flops', 0) / 1e9:.4f} | "
+                f"{a.get('frac_peak_compute', 0):.2e} | "
+                f"{a.get('achieved_vs_model', 0):.2e} | "
+                f"{a.get('model_bottleneck', '—')} |")
+        out.append("")
+        if any(r.get("interpret") for r in rows.values()):
+            out.append("Interpret-mode rows measure the Pallas emulation "
+                       "on CPU — the achieved-vs-peak column is only "
+                       "meaningful on a real TPU backend.")
+            out.append("")
+
+    path = sections.get("path")
+    if path:
+        out.append("## Path smoke — tracing overhead contract")
+        out.append("")
+        sh = path.get("shape", {})
+        out.append(f"- shape: {sh}")
+        out.append(f"- untraced: {_fmt_s(path.get('base_s'))}; "
+                   f"traced: {_fmt_s(path.get('obs_s'))}; overhead "
+                   f"{path.get('overhead_frac', 0):+.2%} "
+                   f"(bit-identical: {path.get('bit_identical')})")
+        out.append(f"- span counts: {path.get('span_counts', {})}")
+        out.append("")
+        if path.get("stages"):
+            _stage_table(path["stages"], out)
+
+    serve = sections.get("serve")
+    if serve:
+        out.append("## Serve load — end-to-end + per-stage breakdown")
+        out.append("")
+        wl = serve.get("workload", {})
+        lat = serve.get("latency_s", {})
+        base = serve.get("baseline_latency_s", {})
+        out.append(f"- workload: {wl.get('tenants', '?')} tenants, "
+                   f"n={wl.get('n')}, p={wl.get('p')}, "
+                   f"groups={wl.get('groups')}, T={wl.get('T')}")
+        out.append(f"- serve: p50 {_fmt_s(lat.get('p50'))}, "
+                   f"p99 {_fmt_s(lat.get('p99'))}, "
+                   f"{serve.get('requests_per_sec', 0):.2f} req/s")
+        out.append(f"- baseline: p50 {_fmt_s(base.get('p50'))}, "
+                   f"p99 {_fmt_s(base.get('p99'))}, "
+                   f"{serve.get('baseline_requests_per_sec', 0):.2f} "
+                   f"req/s (speedup {serve.get('speedup_rps', 0):.2f}x)")
+        qw = serve.get("queue_wait_s", {})
+        if qw:
+            out.append(f"- queue wait: p50 {_fmt_s(qw.get('p50'))}, "
+                       f"p99 {_fmt_s(qw.get('p99'))} over "
+                       f"{qw.get('count', 0)} requests")
+        out.append("")
+        if serve.get("stages"):
+            _stage_table(serve["stages"], out)
+        if serve.get("counters"):
+            nz = {k: v for k, v in sorted(serve["counters"].items()) if v}
+            out.append(f"- counters (nonzero): {nz}")
+            out.append("")
+
+    for name in sorted(sections):
+        if name in ("kernels", "path", "serve"):
+            continue
+        out.append(f"## `{name}`")
+        out.append("")
+        out.append("```json")
+        out.append(json.dumps(sections[name], indent=2, sort_keys=True))
+        out.append("```")
+        out.append("")
+    return "\n".join(out)
+
+
 def main():
     out_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
     cells = load(out_dir)

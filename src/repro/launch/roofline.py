@@ -526,6 +526,39 @@ class Roofline:
         }
 
 
+def achieved_vs_peak(flops: float, bytes_accessed: float, measured_s: float,
+                     chips: int = 1, collective_bytes: float = 0.0) -> dict:
+    """Measured-wall-clock term next to the dry-run model.
+
+    Everything above in this module predicts time from HLO costs; this
+    function goes the other way: given a *measured* kernel wall-clock from
+    the :mod:`repro.obs.timing` harness (jit-warm + ``block_until_ready``)
+    and the kernel's model flops / HBM bytes, report the achieved rates as
+    fractions of the hardware-model peaks and of the roofline bound
+    itself.  ``achieved_vs_model`` is ``t_bound / measured`` — 1.0 means
+    the kernel runs exactly at its modeled roofline, smaller means the
+    launch is leaving modeled headroom on the table (interpret-mode CPU
+    runs will be far below 1; the point is that BENCH now carries a
+    measured column at all, per the ROADMAP compiled-kernel item).
+    """
+    model = Roofline(flops=flops, bytes_accessed=bytes_accessed,
+                     collective_bytes=collective_bytes, chips=chips)
+    t_bound = max(model.t_compute, model.t_memory, model.t_collective)
+    if measured_s <= 0:
+        raise ValueError(f"measured_s must be positive, got {measured_s}")
+    return {
+        "measured_s": measured_s,
+        "achieved_flops_per_s": flops / measured_s,
+        "achieved_bytes_per_s": bytes_accessed / measured_s,
+        "frac_peak_compute": (flops / measured_s) / (chips * PEAK_FLOPS),
+        "frac_peak_memory": (bytes_accessed / measured_s) / (chips * HBM_BW),
+        "model_t_compute_s": model.t_compute,
+        "model_t_memory_s": model.t_memory,
+        "model_bottleneck": model.bottleneck,
+        "achieved_vs_model": (t_bound / measured_s) if t_bound > 0 else None,
+    }
+
+
 def count_params(param_structs) -> int:
     import jax
     import numpy as np

@@ -1,0 +1,7 @@
+"""``python -m repro.obs --check`` — the observability self-audit gate."""
+import sys
+
+from .check import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,89 @@
+"""The one percentile implementation and the unified BENCH JSON schema.
+
+Before this module, percentile math lived in three places
+(``bench_serve``'s hand-rolled ``np.percentile`` calls, ad-hoc stats in
+tests) and every benchmark re-built its own env-metadata dict.  Now:
+
+* :func:`percentile` — single linear-interpolation implementation
+  (``numpy.percentile`` default method, pure python so the obs leaf stays
+  import-cheap).  ``Histogram.summary``, ``Tracer.percentiles`` and the
+  benchmarks all route through it.
+* :func:`env_meta` — the one place that records jax version / backend /
+  platform / x64 (``benchmarks/common.write_json`` delegates here).
+* :func:`merge_bench` — the unified BENCH schema ``repro.obs.bench/v1``:
+  ``{"schema", "meta", "sections": {name: payload}}``, merged
+  order-independently so ``bench_path --obs-json`` and ``bench_serve
+  --obs-json`` can both land in one ``BENCH_pr10.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Iterable, Optional
+
+BENCH_SCHEMA = "repro.obs.bench/v1"
+
+
+def percentile(values: Iterable[float], q: float) -> Optional[float]:
+    """Linear-interpolated percentile (numpy's default method).
+
+    Returns ``None`` on an empty input rather than raising — stage
+    summaries routinely aggregate span sites that never fired.
+    """
+    xs = sorted(float(v) for v in values)
+    if not xs:
+        return None
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile q={q} out of [0, 100]")
+    if len(xs) == 1:
+        return xs[0]
+    rank = (q / 100.0) * (len(xs) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = rank - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+def env_meta(extra: Optional[dict] = None) -> dict:
+    """Environment metadata stamped into every BENCH payload."""
+    import jax  # local: keep repro.obs importable without touching jax
+
+    meta = {
+        "jax": jax.__version__,
+        "backend": jax.default_backend(),
+        "platform": jax.devices()[0].platform,
+        "device_count": jax.device_count(),
+        "x64": bool(jax.config.read("jax_enable_x64")),
+    }
+    if extra:
+        meta.update(extra)
+    return meta
+
+
+def merge_bench(path: str, section: str, payload: dict,
+                meta_extra: Optional[dict] = None) -> dict:
+    """Merge one section into a ``repro.obs.bench/v1`` file on disk.
+
+    Sections are independent (kernel timings, path smoke, serve load…);
+    merging keyed by name makes the final artifact order-independent, the
+    same property ``bench_serve``'s old ``_merge_json`` had.
+    """
+    doc: dict = {"schema": BENCH_SCHEMA, "meta": {}, "sections": {}}
+    if os.path.exists(path):
+        try:
+            with open(path) as fh:
+                prev = json.load(fh)
+            if isinstance(prev, dict) and prev.get("schema") == BENCH_SCHEMA:
+                doc = prev
+                doc.setdefault("meta", {})
+                doc.setdefault("sections", {})
+        except (json.JSONDecodeError, OSError):
+            pass  # start the file over rather than fail the bench
+    doc["meta"].update(env_meta(meta_extra))
+    doc["sections"][section] = payload
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(doc, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+    os.replace(tmp, path)
+    return doc

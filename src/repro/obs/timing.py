@@ -1,0 +1,228 @@
+"""Measured kernel timing for every registered ``LaunchSpec`` kernel.
+
+The dry-run roofline (:mod:`repro.launch.roofline`) predicts time from HLO
+costs without ever running anything; this harness produces the matching
+*measured* term.  Discipline, per the accelerator timing guide:
+
+1. jit-warm: call each dispatch wrapper ``warmup`` times and
+   ``jax.block_until_ready`` the result, so compile/trace time never
+   pollutes a sample;
+2. time ``repeat`` calls individually, each fenced by
+   ``block_until_ready`` (JAX dispatch is asynchronous — un-fenced
+   wall-clock measures the host, not the kernel);
+3. report the median (robust) and the min (best-case) and feed the median
+   to :func:`repro.launch.roofline.achieved_vs_peak`.
+
+Each timed case mirrors one ``register_kernel_audit`` entry from
+:mod:`repro.kernels.ops` — same kernel family, same dispatch wrapper the
+solver uses.  ``scale="smoke"`` shrinks the geometry so interpret-mode CPU
+(where Pallas executes the grid in Python) stays fast enough for CI;
+``scale="paper"`` uses the registered audit shapes and is the setting that
+matters on a real accelerator.  On CPU the numbers are an interpret-mode
+dispatch story, not a speed story — ``interpret=True`` is stamped into
+every row so BENCH readers can tell.
+
+Flops/bytes are hand-written model formulas per kernel (documented inline);
+``LaunchSpec.io_bytes`` (unique-bytes lower bound) is the fallback.
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..kernels import ops as kops
+from ..kernels._util import on_tpu
+from ..launch.roofline import achieved_vs_peak
+from . import metrics as obs_metrics
+
+_M_MEASURED = obs_metrics.REGISTRY.histogram(
+    "kernels.measured_wall_s",
+    help="Median measured kernel wall-clock per timing-harness case "
+         "(jit-warm + block_until_ready)")
+
+
+class TimingCase(NamedTuple):
+    """One timed kernel: thunk builder + flops/bytes model.
+
+    ``build(scale)`` returns ``(fn, args, flops, bytes)`` — ``fn(*args)``
+    is exactly the dispatch wrapper the solver calls.
+    """
+
+    audit_name: str
+    build: Callable[[str], Tuple[Callable, tuple, float, float]]
+
+
+def _rng():
+    return np.random.default_rng(0)
+
+
+def _f64(a):
+    return jax.numpy.asarray(np.asarray(a, dtype=np.float64))
+
+
+def _corr_shape(scale: str) -> Tuple[int, int]:
+    return (512, 256) if scale == "smoke" else (4096, 1024)
+
+
+def _build_corr(scale: str):
+    p, n = _corr_shape(scale)
+    r = _rng()
+    Xt = _f64(r.standard_normal((p, n)))
+    theta = _f64(r.standard_normal(n))
+    # matvec: 2 flops per (p, n) cell; traffic: design + vector + result
+    flops = 2.0 * p * n
+    bts = 8.0 * (p * n + n + p)
+    return kops.screening_corr, (Xt, theta), flops, bts
+
+
+def _build_scores(scale: str):
+    p, n = _corr_shape(scale)
+    r = _rng()
+    Xt = _f64(r.standard_normal((p, n)))
+    theta = _f64(r.standard_normal(n))
+    fn = lambda Xt, th: kops.screening_scores(Xt, th, 0.3)  # noqa: E731
+    # corr matvec + fused soft-threshold square (~4 flops/row)
+    flops = 2.0 * p * n + 4.0 * p
+    bts = 8.0 * (p * n + n + 2 * p)
+    return fn, (Xt, theta), flops, bts
+
+
+def _build_dual_norm(scale: str):
+    G = 512 if scale == "smoke" else 4096
+    ng, n_iter = 8, 64
+    r = _rng()
+    x = _f64(r.standard_normal((G, ng)))
+    alpha = _f64(np.full(G, 0.7))
+    R = _f64(np.full(G, 0.3))
+    fn = lambda x, a, R: kops.dual_norm_groups(x, a, R, n_iter=n_iter)  # noqa: E731
+    # bisection: ~4 flops per feature per iteration (shrink, square, sum)
+    flops = 4.0 * G * ng * n_iter
+    bts = 8.0 * (G * ng + 3 * G)
+    return fn, (x, alpha, R), flops, bts
+
+
+def _build_prox(scale: str):
+    G = 512 if scale == "smoke" else 4096
+    ng = 8
+    r = _rng()
+    beta = _f64(r.standard_normal((G, ng)))
+    step = _f64(np.full(G, 0.05))
+    w = _f64(np.ones(G))
+    fn = lambda b, s, w: kops.sgl_prox(b, s, w, 0.3, 1.0)  # noqa: E731
+    # two-level prox: ~6 flops per feature (shrink + norm + group scale)
+    flops = 6.0 * G * ng
+    bts = 8.0 * (2 * G * ng + 2 * G)
+    return fn, (beta, step, w), flops, bts
+
+
+def _bcd_geom(scale: str, bucket: bool):
+    if scale == "smoke":
+        return (2 if bucket else 1), 16, 128, (16 if bucket else 8), 2
+    return ((4, 256, 1024, 16, 3) if bucket else (1, 64, 2048, 8, 2))
+
+
+def _bcd_inputs(B, Gb, n, ng):
+    r = _rng()
+    Xt = _f64(r.standard_normal((Gb, n, ng)))
+    Lg = _f64(np.sum(np.asarray(Xt) ** 2, axis=(1, 2)) / ng + 1.0)
+    w = _f64(np.ones(Gb))
+    fmask = _f64(np.ones((B, Gb, ng)))
+    beta = _f64(0.01 * r.standard_normal((B, Gb, ng)))
+    lam_b = _f64(np.full(B, 0.1))
+    return Xt, Lg, w, fmask, beta, lam_b
+
+
+def _build_bcd(scale: str, bucket: bool):
+    B, Gb, n, ng, E = _bcd_geom(scale, bucket)
+    Xt, Lg, w, fmask, beta, lam_b = _bcd_inputs(B, Gb, n, ng)
+    resid = _f64(_rng().standard_normal((B, n)))
+    fn = lambda *a: kops.bcd_epochs_fused(*a, n_epochs=E, block_g=8)  # noqa: E731
+    args = (Xt, Lg, w, fmask, beta, resid, 0.3, lam_b)
+    # per epoch, group: corr (2·n·ng) + residual rank-1 update (2·n·ng)
+    flops = 4.0 * E * B * Gb * n * ng
+    # design streamed once per epoch; state read+written once
+    bts = 8.0 * (E * Gb * n * ng + 2 * (B * Gb * ng + B * n))
+    return fn, args, flops, bts
+
+
+def _build_bcd_logistic(scale: str):
+    B, Gb, n, ng, E = _bcd_geom(scale, bucket=True)
+    Xt, Lg, w, fmask, beta, lam_b = _bcd_inputs(B, Gb, n, ng)
+    r = _rng()
+    z = _f64(0.1 * r.standard_normal((B, n)))
+    y = _f64((r.standard_normal(n) > 0).astype(np.float64))
+    fn = lambda *a: kops.bcd_epochs_logistic_fused(  # noqa: E731
+        *a, n_epochs=E, block_g=8)
+    args = (Xt, Lg, w, fmask, beta, z, y, 0.3, lam_b)
+    # lsq-epoch work + sigmoid/gradient on the carry (~8 flops per sample)
+    flops = 4.0 * E * B * Gb * n * ng + 8.0 * E * B * Gb * n
+    bts = 8.0 * (E * Gb * n * ng + 2 * (B * Gb * ng + B * n) + n)
+    return fn, args, flops, bts
+
+
+#: One timed case per registered kernel-audit family (names match
+#: repro.kernels.ops register_kernel_audit entries).
+CASES: Tuple[TimingCase, ...] = (
+    TimingCase("bcd_epoch/bucket", lambda s: _build_bcd(s, bucket=True)),
+    TimingCase("bcd_epoch/paper-ng8", lambda s: _build_bcd(s, bucket=False)),
+    TimingCase("bcd_epoch_logistic/bucket", _build_bcd_logistic),
+    TimingCase("screening_scores/default", _build_scores),
+    TimingCase("screening_corr/default", _build_corr),
+    TimingCase("dual_norm/paper-ng8", _build_dual_norm),
+    TimingCase("sgl_prox/paper-ng8", _build_prox),
+)
+
+
+def measure_one(fn: Callable, args: tuple, warmup: int = 2,
+                repeat: int = 5,
+                clock: Callable[[], float] = time.perf_counter) -> dict:
+    """Warm + fenced timing of one callable; median/min over ``repeat``."""
+    for _ in range(max(1, warmup)):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(max(1, repeat)):
+        t0 = clock()
+        jax.block_until_ready(fn(*args))
+        samples.append(clock() - t0)
+    return {"median_s": statistics.median(samples), "min_s": min(samples),
+            "samples": samples}
+
+
+def measure_kernels(scale: str = "smoke", warmup: int = 2, repeat: int = 5,
+                    names: Optional[Tuple[str, ...]] = None) -> Dict[str, dict]:
+    """Run the harness over every (or the named) registered kernel case.
+
+    Returns per-kernel rows ready for the BENCH ``kernels`` section:
+    measured wall-clock, model flops/bytes, the audited LaunchSpec's VMEM
+    footprint, and the ``achieved_vs_peak`` roofline column.
+    """
+    from ..analysis.registry import kernel_audits
+
+    audits = kernel_audits()
+    out: Dict[str, dict] = {}
+    for case in CASES:
+        if names is not None and case.audit_name not in names:
+            continue
+        fn, args, flops, bts = case.build(scale)
+        t = measure_one(fn, args, warmup=warmup, repeat=repeat)
+        _M_MEASURED.observe(t["median_s"])
+        row = {
+            "scale": scale,
+            "interpret": not on_tpu(),
+            "measured_s": t["median_s"],
+            "min_s": t["min_s"],
+            "model_flops": flops,
+            "model_bytes": bts,
+            "achieved": achieved_vs_peak(flops, bts, t["median_s"]),
+        }
+        builder = audits.get(case.audit_name)
+        if builder is not None:
+            spec = builder()
+            row["vmem_bytes"] = spec.vmem_bytes
+            row["audit_io_bytes"] = spec.io_bytes
+        out[case.audit_name] = row
+    return out

@@ -32,9 +32,34 @@ from ..core.sgl import SGLProblem
 from ..core.solver import resolve_screen_backend, resolve_solver_backend
 from ..kernels import ops as kops
 from ..losses import resolve_loss
+from ..obs import metrics as obs_metrics
 from .types import array_digest, problem_digest
 
 __all__ = ["SessionCache"]
+
+_CACHE_COUNTERS = {
+    "hits": "Session-cache hits (jit-warm session reused)",
+    "misses": "Session-cache misses (fresh session built)",
+    "evictions": "Sessions evicted by the LRU capacity bound",
+    "design_hits": "Transposed-design sub-cache hits across tenants",
+    "retraces": "Jit-cache growth observed by watch_retraces on a hit",
+    "loss_rejects": "Cache hits refused for a mismatched loss (collision)",
+}
+for _k, _h in _CACHE_COUNTERS.items():
+    obs_metrics.declare("serve.cache_" + _k, "counter", _h)
+
+
+def _counter_attr(key: str):
+    """Int-attribute shim over a registry counter (``self.hits += 1`` and
+    plain reads keep working while the number lives on the registry)."""
+
+    def _get(self) -> int:
+        return self._m[key].value
+
+    def _set(self, v: int) -> None:
+        self._m[key]._set(int(v))
+
+    return property(_get, _set, doc=_CACHE_COUNTERS[key])
 
 
 def _traceable_cache_sizes() -> int:
@@ -66,12 +91,18 @@ class SessionCache:
         self.design_capacity = int(design_capacity)
         self._sessions: OrderedDict[tuple, SGLSession] = OrderedDict()
         self._designs: OrderedDict[str, object] = OrderedDict()
-        self.hits = 0
-        self.misses = 0
-        self.evictions = 0
-        self.design_hits = 0
-        self.retraces = 0
-        self.loss_rejects = 0
+        # Per-cache registry under the shared declared names; the historic
+        # int attributes (hits/misses/...) are properties over it.
+        self.metrics = obs_metrics.MetricsRegistry()
+        self._m = {k: self.metrics.counter("serve.cache_" + k)
+                   for k in _CACHE_COUNTERS}
+
+    hits = _counter_attr("hits")
+    misses = _counter_attr("misses")
+    evictions = _counter_attr("evictions")
+    design_hits = _counter_attr("design_hits")
+    retraces = _counter_attr("retraces")
+    loss_rejects = _counter_attr("loss_rejects")
 
     # -- lookups -----------------------------------------------------------
 

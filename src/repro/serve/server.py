@@ -51,12 +51,38 @@ from ..core.solver import SolveCaches
 from ..faults.budget import SolveBudget
 from ..faults.errors import Degraded, ServeError, WorkerCrash
 from ..faults.inject import maybe_kill
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from .cache import SessionCache
 from .queue import CoalescedGroup, Pending, RequestQueue, coalesce
 from .store import CertificateStore, warm_eval
 from .types import PathRequest, PathResponse, array_digest, problem_digest
 
 __all__ = ["ServeConfig", "SGLServer", "Preempted"]
+
+# Serve counters, declared once with help text (repro.obs --check OB001
+# audits this table).  SGLServer.counters is a CounterMap shim over these
+# in a per-server registry, keeping the legacy dict surface intact.
+_SERVE_COUNTERS = {
+    "requests": "Tenant requests submitted",
+    "responses": "Futures resolved with a PathResponse",
+    "path_solves": "Actual path solves run (store hits excluded)",
+    "coalesced_requests": "Requests served by a shared coalesced solve",
+    "store_served": "Requests short-circuited by an exact store repeat",
+    "warm_started": "Requests whose solve adopted a measured warm hint",
+    "resumed": "Paths resumed from a checkpoint cursor",
+    "preempted": "Requests failed with Preempted during a drain",
+    "worker_restarts": "Supervisor restarts of a crashed worker loop",
+    "retries": "Serve-side retries of a failed group",
+    "degraded": "Requests resolved with a typed Degraded",
+    "failed": "Requests failed terminally after retry exhaustion",
+    "breaker_rejections": "Requests fast-failed by an open circuit breaker",
+}
+for _k, _h in _SERVE_COUNTERS.items():
+    obs_metrics.declare("serve." + _k, "counter", _h)
+obs_metrics.declare(
+    "serve.queue_wait_s", "histogram",
+    "Per-member wait between submit and the worker picking the group up")
 
 
 class Preempted(RuntimeError):
@@ -135,21 +161,13 @@ class SGLServer:
         self._breaker: dict = {}
         self._sigterm_installed = False
         self._sigterm_prev = None
-        self.counters = {
-            "requests": 0,
-            "responses": 0,
-            "path_solves": 0,
-            "coalesced_requests": 0,
-            "store_served": 0,
-            "warm_started": 0,
-            "resumed": 0,
-            "preempted": 0,
-            "worker_restarts": 0,
-            "retries": 0,
-            "degraded": 0,
-            "failed": 0,
-            "breaker_rejections": 0,
-        }
+        # Per-server metrics registry under the shared declared names:
+        # several servers in one process (bench baselines) keep separate
+        # numbers.  `counters` is the historical dict surface, now a shim.
+        self.metrics = obs_metrics.MetricsRegistry()
+        self.counters = obs_metrics.CounterMap(
+            self.metrics, "serve.", _SERVE_COUNTERS)
+        self._m_queue_wait = self.metrics.histogram("serve.queue_wait_s")
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -252,18 +270,20 @@ class SGLServer:
             if self._drain.is_set():
                 self._fail(pending, cursor=0)
                 continue
-            if cfg.coalesce:
-                groups = coalesce(pending, cfg.default_solver,
-                                  merge_grids=cfg.merge_grids)
-            else:
-                groups = [
-                    CoalescedGroup(
-                        members=[p], lambdas=p.request.grid(),
-                        member_index=[np.arange(len(p.request.grid()))],
-                        merged=False,
-                    )
-                    for p in pending
-                ]
+            with obs_trace.span("serve.coalesce") as sp:
+                if cfg.coalesce:
+                    groups = coalesce(pending, cfg.default_solver,
+                                      merge_grids=cfg.merge_grids)
+                else:
+                    groups = [
+                        CoalescedGroup(
+                            members=[p], lambdas=p.request.grid(),
+                            member_index=[np.arange(len(p.request.grid()))],
+                            merged=False,
+                        )
+                        for p in pending
+                    ]
+                sp.set("pending", len(pending)).set("groups", len(groups))
             self._inflight.extend([g, 0] for g in groups)
 
     def _serve_entry(self, entry: list) -> bool:
@@ -359,6 +379,11 @@ class SGLServer:
     # -- serving one coalesced group ----------------------------------------
 
     def _serve_group(self, group: CoalescedGroup) -> None:
+        with obs_trace.span("serve.request") as sp:
+            sp.set("members", len(group.members))
+            self._serve_group_impl(group)
+
+    def _serve_group_impl(self, group: CoalescedGroup) -> None:
         cfg = self.config
         t_start = time.perf_counter()
         lead = group.members[0]
@@ -370,14 +395,16 @@ class SGLServer:
         # request (problem + grid + config values) is the solve's output
         # verbatim — served from memory, zero solver work.
         if cfg.serve_from_store and not group.merged:
-            stored = self.store.exact(digest)
+            with obs_trace.span("serve.store"):
+                stored = self.store.exact(digest)
             if stored is not None:
                 self.counters["store_served"] += len(group.members)
                 self._respond(group, stored, served_from="store",
                               store_hit=True, t_start=t_start)
                 return
 
-        session, hit = self.cache.get(req.problem, scfg)
+        with obs_trace.span("serve.cache"):
+            session, hit = self.cache.get(req.problem, scfg)
         # Per-request solver caches: a cached session must produce the
         # exact trajectory a fresh one would (coalesced-vs-solo parity),
         # so cross-request gather/reference state never leaks in.
@@ -398,10 +425,12 @@ class SGLServer:
                 # data fidelity actually being solved.
                 wloss = (None if session.loss.name == "lsq"
                          else session.loss)
-                gap_h = float(warm_eval(req.problem, beta_h, lam0,
-                                        loss=wloss))
-                gap_c = float(warm_eval(
-                    req.problem, jnp.zeros_like(beta_h), lam0, loss=wloss))
+                with obs_trace.span("serve.warm_eval"):
+                    gap_h = float(warm_eval(req.problem, beta_h, lam0,
+                                            loss=wloss))
+                    gap_c = float(warm_eval(
+                        req.problem, jnp.zeros_like(beta_h), lam0,
+                        loss=wloss))
                 # Admission is measured: adopt the hint only when its gap
                 # on the NEW problem beats the cold start's.  The hint is
                 # a primal point only — solve_path re-screens it with a
@@ -473,10 +502,12 @@ class SGLServer:
                 # records but never the exact-repeat map — a later
                 # identical solo request must get the verbatim guarantee
                 # the store promises, not a tolerance-level stand-in.
-                self.store.put(p.digest, p.request.problem, scfg,
-                               member_res, exact=not group.merged)
+                with obs_trace.span("serve.store"):
+                    self.store.put(p.digest, p.request.problem, scfg,
+                                   member_res, exact=not group.merged)
             if p.future.done():     # resolved by an earlier attempt/drain
                 continue
+            self._m_queue_wait.observe(t_start - p.t_submit)
             self.counters["responses"] += 1
             p.future.set_result(PathResponse(
                 tenant=p.request.tenant,
